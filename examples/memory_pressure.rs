@@ -1,0 +1,43 @@
+//! Memory-pressure study (paper §2.4 + §4.3.2): progressively halve the
+//! KV-cache capacity and watch FCFS collapse while TCM-Serve keeps
+//! motorcycles responsive.
+//!
+//! Run: `cargo run --release --example memory_pressure`
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{make_trace, run_sim_with_trace};
+use tcm_serve::report;
+use tcm_serve::request::Class;
+
+fn main() {
+    let mut cfg = ServeConfig::default();
+    cfg.num_requests = 300;
+    cfg.seed = 1234;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+
+    for policy in ["fcfs", "tcm"] {
+        report::header(&format!("{policy} under shrinking KV cache (MH, llava-7b)"));
+        for frac in [1.0, 0.5, 0.25, 0.125] {
+            let mut c = cfg.clone();
+            c.policy = policy.into();
+            c.memory_frac = frac;
+            let r = run_sim_with_trace(&c, trace.clone());
+            let o = r.report.overall();
+            let m = r.report.by_class(Class::Motorcycle);
+            println!(
+                "mem {:>5.1}%  overall: viol={:>5.1}% sev={:>6.2}s  | motorcycles: \
+                 ttft={:>6.3}s viol={:>5.1}%  | preemptions={} dropped={}",
+                frac * 100.0,
+                o.slo_violation_rate * 100.0,
+                o.violation_severity,
+                m.avg_ttft,
+                m.slo_violation_rate * 100.0,
+                r.stats.preemptions,
+                r.stats.dropped
+            );
+        }
+    }
+    println!("\nExpected shape (Fig 4 vs Fig 14): FCFS violations surge toward 90% as");
+    println!("memory shrinks; TCM keeps motorcycle TTFT < 1 s even at 25% capacity.");
+}

@@ -1,0 +1,43 @@
+//! Quickstart: serve a heavy multimodal mix (MH) on the LLaVA-7B cost
+//! model with TCM-Serve, and compare against the vLLM FCFS baseline on the
+//! *same* arrival trace.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{make_trace, run_sim_with_trace};
+use tcm_serve::report;
+
+fn main() {
+    let mut cfg = ServeConfig::default(); // llava-7b, MH, 2 req/s, SLO 5x
+    cfg.num_requests = 400;
+    cfg.seed = 42;
+
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    println!(
+        "workload: {} requests, mix {}, {:.1} req/s, model {}",
+        trace.len(),
+        cfg.mix,
+        cfg.rate,
+        cfg.model
+    );
+
+    for policy in ["fcfs", "tcm"] {
+        let mut c = cfg.clone();
+        c.policy = policy.into();
+        let r = run_sim_with_trace(&c, trace.clone());
+        report::header(&format!(
+            "{policy} — norm latency / TTFT / SLO by class (M=motorcycle C=car T=truck)"
+        ));
+        report::mcto_rows(policy, &r.report);
+        println!(
+            "iterations={} preemptions={} makespan={:.1}s engine-busy={:.1}s",
+            r.stats.iterations, r.stats.preemptions, r.makespan, r.stats.busy_time_s
+        );
+    }
+
+    println!("\nExpected shape (paper Fig 3/10): under FCFS, lightweight text requests");
+    println!("(motorcycles) wait tens of seconds behind video prefills; TCM-Serve");
+    println!("drops their TTFT to ~0.1-0.2 s while trucks still finish.");
+}

@@ -1,0 +1,48 @@
+//! Trace persistence + A/B policy comparison: generate a workload trace,
+//! save it, reload it, and replay the identical arrival sequence through
+//! every scheduling policy.
+//!
+//! This is how external traces (e.g. ServeGen-style production
+//! characterizations, converted to the trace line format) plug into the
+//! system: `cargo run --release --example traffic_replay -- my.trace`
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{make_trace, run_sim_with_trace};
+use tcm_serve::report;
+use tcm_serve::workload::{load_trace, save_trace};
+
+fn main() {
+    let mut cfg = ServeConfig::default();
+    cfg.num_requests = 300;
+    cfg.seed = 77;
+
+    let trace = match std::env::args().nth(1) {
+        Some(path) => {
+            let trace = load_trace(std::path::Path::new(&path)).expect("load trace");
+            println!("replaying external trace {path} ({} requests)", trace.len());
+            trace
+        }
+        None => {
+            let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+            let trace = make_trace(&cfg, &profile);
+            let path = std::env::temp_dir().join("tcm_demo.trace");
+            save_trace(&path, &trace).expect("save trace");
+            let reloaded = load_trace(&path).expect("reload");
+            assert_eq!(trace.len(), reloaded.len());
+            println!(
+                "generated + persisted {} requests to {} (round-trip verified)",
+                trace.len(),
+                path.display()
+            );
+            reloaded
+        }
+    };
+
+    report::header("identical trace through every policy (MH, llava-7b)");
+    for policy in ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"] {
+        let mut c = cfg.clone();
+        c.policy = policy.into();
+        let r = run_sim_with_trace(&c, trace.clone());
+        report::summary_row(policy, &r.report.overall());
+    }
+}

@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: tiled online-softmax (flash-attention-style) attention.
+
+This is the prefill hot spot of the MLLM: for multimodal requests the prompt
+holds 10^2–10^5 vision tokens, so prefill attention is O(L^2) and dominates
+GPU time (paper §2.2, Fig 6). The CUDA formulation tiles Q across
+threadblocks and streams K/V through shared memory; the TPU/Pallas rethink
+(DESIGN.md §2) is:
+
+  * grid = (heads, q_tiles, kv_tiles) with the KV dimension innermost, so a
+    Q tile's online-softmax state stays resident in VMEM scratch while KV
+    tiles stream HBM→VMEM via the BlockSpec index maps (the role
+    shared-memory double buffering plays on GPUs — Pallas' pipeline emitter
+    overlaps the next tile's copy with the current tile's compute);
+  * tile shapes are multiples of the MXU systolic array (128) where the
+    problem size allows, so both q·kᵀ and p·v land on the MXU;
+  * accumulators (m, l, acc) live in VMEM scratch at f32 regardless of
+    input dtype — the standard numerically-stable online-softmax recurrence.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for this repo's runtime.
+Real-TPU efficiency is *estimated* from tile shapes in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite stand-in for -inf inside the kernel (avoids NaNs)
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch,
+                      acc_scratch, *, kv_offset, scale, causal, block_q,
+                      block_k):
+    """One (head, q_tile, kv_tile) grid step of online-softmax attention.
+
+    Refs arrive pre-tiled by the BlockSpecs: q_ref [1, block_q, d],
+    k_ref/v_ref [1, block_k, d], o_ref [1, block_q, d]. Scratch persists
+    across the innermost (kv) grid dimension.
+    """
+    kv_idx = pl.program_id(2)
+
+    # Reset the running softmax state at the first KV tile of each Q tile.
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)  # [bk, d]
+
+    # MXU-shaped contraction: [bq, d] x [d, bk] -> [bq, bk].
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        # Absolute positions: q rows are the *trailing* chunk of the key
+        # sequence (chunked prefill); kv_offset = seq_k - seq_q.
+        q_idx = pl.program_id(1)
+        q_pos = q_idx * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + kv_offset
+        k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scratch[...]          # [bq, 1]
+    l_prev = l_scratch[...]          # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new)           # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # rescale factor for the old state
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+    # [bq, bk] x [bk, d] -> [bq, d], second MXU contraction.
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scratch[...] = acc_scratch[...] * alpha + pv
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    # Finalize on the last KV tile.
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_scratch[...] /
+                    jnp.maximum(l_scratch[...], 1e-30)).astype(o_ref.dtype)
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (tiles must divide evenly)."""
+    b = max(1, min(n, preferred))
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """Tiled attention via pallas_call. Shapes: q [h, sq, d], k/v [h, sk, d].
+
+    Matches kernels.ref.attention_ref to f32 tolerance. Block sizes default
+    to the MXU-friendly 128 and are shrunk to the nearest divisor for small
+    problem sizes.
+    """
+    heads, seq_q, head_dim = q.shape
+    seq_k = k.shape[1]
+    bq = pick_block(seq_q, block_q)
+    bk = pick_block(seq_k, block_k)
+    scale = 1.0 / (head_dim ** 0.5)
+    kv_offset = seq_k - seq_q
+
+    grid = (heads, seq_q // bq, seq_k // bk)
+    kernel = functools.partial(
+        _attention_kernel, kv_offset=kv_offset, scale=scale, causal=causal,
+        block_q=bq, block_k=bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, head_dim), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, head_dim), lambda h, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, bk, head_dim), lambda h, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, head_dim), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq_q, head_dim), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),         # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),         # running denom l
+            pltpu.VMEM((bq, head_dim), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int) -> int:
+    """Estimated per-step VMEM residency of the kernel (DESIGN.md §Perf).
+
+    Counts double-buffered input tiles (Pallas pipelines the next HBM→VMEM
+    copy during compute), the output tile, and the f32 scratch accumulators.
+    """
+    f32 = 4
+    tiles_in = 2 * (block_q * head_dim + 2 * block_k * head_dim) * f32
+    tile_out = block_q * head_dim * f32
+    scratch = (block_q * 1 * 2 + block_q * head_dim) * f32
+    logits = block_q * block_k * f32  # s/p intermediate
+    return tiles_in + tile_out + scratch + logits

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package must match its oracle here to float32 tolerance.
+The oracles are intentionally naive: materialize the full attention matrix,
+use stable softmax, no tiling — they define *what* the kernels compute,
+while the kernels define *how* (VMEM tiling, online softmax, MXU-shaped
+matmuls).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Naive scaled-dot-product attention.
+
+    Args:
+      q: [heads, seq_q, head_dim]
+      k: [heads, seq_k, head_dim]
+      v: [heads, seq_k, head_dim]
+      causal: apply a causal mask (seq_q aligned to the *end* of seq_k, the
+        convention used for chunked prefill where q is the trailing chunk of
+        the full key sequence).
+      scale: softmax temperature; defaults to 1/sqrt(head_dim).
+
+    Returns:
+      [heads, seq_q, head_dim] float32
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    head_dim = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        seq_q, seq_k = q.shape[1], k.shape[1]
+        # Row i of the chunk corresponds to absolute position seq_k - seq_q + i.
+        offset = seq_k - seq_q
+        qi = jnp.arange(seq_q)[:, None] + offset
+        kj = jnp.arange(seq_k)[None, :]
+        mask = kj <= qi
+        logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # Guard fully-masked rows (can only happen with empty chunks).
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v) / jnp.maximum(denom, 1e-30)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last dim. x: [..., d], w: [d]."""
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def patch_embed_ref(pixels, w, b):
+    """Vision patch embedding: flatten non-overlapping patches + linear proj.
+
+    pixels: [n_patches, patch_dim]  (preprocessing already flattened patches)
+    w: [patch_dim, embed_dim], b: [embed_dim]
+    """
+    return pixels.astype(jnp.float32) @ w + b

@@ -1,0 +1,258 @@
+"""L2: the TinyMLLM — a small but real multimodal LLM in JAX.
+
+Architecture mirrors the paper's Table-1 template (vision encoder → LLM
+backend) at toy scale so the whole stack executes on the CPU PJRT plugin:
+
+  vision encoder : patch-embed → 2 pre-norm transformer blocks (bidirectional
+                   attention via the L1 Pallas kernel) → projection into the
+                   LLM embedding space (the "multimodal projector").
+  LLM backend    : token embedding + learned positions → 2 pre-norm causal
+                   transformer blocks (prefill attention = L1 Pallas kernel,
+                   decode attention = masked jnp matvec over the KV cache) →
+                   RMSNorm → tied-ish LM head.
+
+Weights are generated deterministically from MODEL_SEED and passed to every
+entry point as an explicit pytree: aot.py dumps them once to
+artifacts/weights.bin in pytree-flatten order (sorted dict keys) and records
+each leaf's name/shape/offset in the manifest, so the Rust runtime loads
+them once and prepends them to every execute() call.
+
+Shape contract with the Rust runtime (static buckets, see aot.py):
+  embed   : ids i32[L]                                  -> f32[L, D]
+  encoder : pixels f32[P, PATCH_DIM]                    -> f32[P, D]
+  prefill : embeds f32[L, D], length i32[]              ->
+              (logits f32[VOCAB], kv f32[LAYERS, 2, HEADS, MAX_SEQ, HEAD_DIM])
+  decode  : ids i32[B], kv f32[B, LAYERS, 2, HEADS, MAX_SEQ, HEAD_DIM],
+            lengths i32[B]                              ->
+              (logits f32[B, VOCAB], kv (updated, same shape))
+
+Padding semantics: prompts are padded *at the end* to the enclosing L
+bucket. Causal masking means real rows never attend pad rows, and the KV
+rows past `length` are ignored by decode's explicit `k_pos < length` mask,
+so padding never affects the numbers (tests assert this).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import flash_attention
+from .kernels.ref import rmsnorm_ref
+
+# ---------------------------------------------------------------------------
+# Model hyperparameters (one place; aot.py and the Rust manifest read these).
+# ---------------------------------------------------------------------------
+MODEL_SEED = 20260710
+VOCAB = 512
+D_MODEL = 128
+N_LAYERS = 2
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+FFN_DIM = 256
+MAX_SEQ = 640          # prefill bucket max (512) + decode budget (128)
+PATCH_DIM = 48         # 4x4 RGB patches
+VIS_LAYERS = 2
+VIS_D = 128
+
+PREFILL_BUCKETS = (32, 64, 128, 256, 512)
+DECODE_BUCKETS = (1, 2, 4, 8)
+ENCODER_BUCKETS = (16, 64, 256)
+
+
+def _init(rng: np.random.Generator, *shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@functools.lru_cache(maxsize=1)
+def init_params():
+    """Deterministic toy weights. Cached: tracing repeatedly is common."""
+    rng = np.random.default_rng(MODEL_SEED)
+    p = {}
+    p["tok_embed"] = _init(rng, VOCAB, D_MODEL, scale=0.02)
+    p["pos_embed"] = _init(rng, MAX_SEQ, D_MODEL, scale=0.02)
+    for i in range(N_LAYERS):
+        L = {}
+        L["ln1"] = jnp.ones((D_MODEL,), jnp.float32)
+        L["wq"] = _init(rng, D_MODEL, D_MODEL)
+        L["wk"] = _init(rng, D_MODEL, D_MODEL)
+        L["wv"] = _init(rng, D_MODEL, D_MODEL)
+        L["wo"] = _init(rng, D_MODEL, D_MODEL)
+        L["ln2"] = jnp.ones((D_MODEL,), jnp.float32)
+        L["w_up"] = _init(rng, D_MODEL, FFN_DIM)
+        L["w_down"] = _init(rng, FFN_DIM, D_MODEL)
+        p[f"layer_{i}"] = L
+    p["ln_f"] = jnp.ones((D_MODEL,), jnp.float32)
+    p["lm_head"] = _init(rng, D_MODEL, VOCAB)
+    # Vision tower.
+    p["patch_proj_w"] = _init(rng, PATCH_DIM, VIS_D)
+    p["patch_proj_b"] = jnp.zeros((VIS_D,), jnp.float32)
+    p["vis_pos"] = _init(rng, 1024, VIS_D, scale=0.02)
+    for i in range(VIS_LAYERS):
+        L = {}
+        L["ln1"] = jnp.ones((VIS_D,), jnp.float32)
+        L["wq"] = _init(rng, VIS_D, VIS_D)
+        L["wk"] = _init(rng, VIS_D, VIS_D)
+        L["wv"] = _init(rng, VIS_D, VIS_D)
+        L["wo"] = _init(rng, VIS_D, VIS_D)
+        L["ln2"] = jnp.ones((VIS_D,), jnp.float32)
+        L["w_up"] = _init(rng, VIS_D, FFN_DIM)
+        L["w_down"] = _init(rng, FFN_DIM, VIS_D)
+        p[f"vis_layer_{i}"] = L
+    p["vis_ln_f"] = jnp.ones((VIS_D,), jnp.float32)
+    p["mm_proj"] = _init(rng, VIS_D, D_MODEL)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+def _split_heads(x):  # [L, D] -> [H, L, hd]
+    L = x.shape[0]
+    return x.reshape(L, N_HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+
+def _merge_heads(x):  # [H, L, hd] -> [L, D]
+    return x.transpose(1, 0, 2).reshape(x.shape[1], D_MODEL)
+
+
+def _block(L, x, *, causal):
+    """Pre-norm transformer block; attention runs on the L1 Pallas kernel.
+
+    Returns (x_out, k, v) with k/v shaped [H, L, hd] for KV caching.
+    """
+    h = rmsnorm_ref(x, L["ln1"])
+    q = _split_heads(h @ L["wq"])
+    k = _split_heads(h @ L["wk"])
+    v = _split_heads(h @ L["wv"])
+    attn = flash_attention(q, k, v, causal=causal)
+    x = x + _merge_heads(attn) @ L["wo"]
+    h = rmsnorm_ref(x, L["ln2"])
+    x = x + jax.nn.gelu(h @ L["w_up"]) @ L["w_down"]
+    return x, k, v
+
+
+def _decode_block(L, x, k_cache, v_cache, pos, lengths):
+    """Single-token block for a batch: x [B, D], caches [B, H, M, hd].
+
+    pos = lengths (the new token's position). Attention is a masked matvec
+    over the cache: k_pos <= pos AND k_pos < length+1 (i.e. the cache rows
+    written so far plus the new token's own row, which we fold in directly).
+    """
+    B = x.shape[0]
+    h = rmsnorm_ref(x, L["ln1"])
+    q = (h @ L["wq"]).reshape(B, N_HEADS, HEAD_DIM)
+    k_new = (h @ L["wk"]).reshape(B, N_HEADS, HEAD_DIM)
+    v_new = (h @ L["wv"]).reshape(B, N_HEADS, HEAD_DIM)
+
+    # Write the new row into the cache at position `pos` per batch element.
+    onehot = (jnp.arange(MAX_SEQ)[None, :] == pos[:, None]).astype(jnp.float32)
+    k_cache = k_cache * (1.0 - onehot[:, None, :, None]) + \
+        k_new[:, :, None, :] * onehot[:, None, :, None]
+    v_cache = v_cache * (1.0 - onehot[:, None, :, None]) + \
+        v_new[:, :, None, :] * onehot[:, None, :, None]
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(HEAD_DIM))
+    logits = jnp.einsum("bhd,bhmd->bhm", q, k_cache) * scale
+    valid = jnp.arange(MAX_SEQ)[None, :] <= pos[:, None]      # [B, M]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    attn = jnp.einsum("bhm,bhmd->bhd", p, v_cache).reshape(B, D_MODEL)
+
+    x = x + attn @ L["wo"]
+    h = rmsnorm_ref(x, L["ln2"])
+    x = x + jax.nn.gelu(h @ L["w_up"]) @ L["w_down"]
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (one AOT artifact per bucket each)
+# ---------------------------------------------------------------------------
+def embed_fn(p, ids):
+    """Token ids -> embeddings (positions added in prefill, not here)."""
+    return (jnp.take(p["tok_embed"], ids, axis=0),)
+
+
+def encoder_fn(p, pixels):
+    """Vision tower: flattened patches -> LLM-space embeddings [P, D]."""
+    n = pixels.shape[0]
+    x = pixels @ p["patch_proj_w"] + p["patch_proj_b"]
+    x = x + p["vis_pos"][:n]
+    for i in range(VIS_LAYERS):
+        x, _, _ = _block(p[f"vis_layer_{i}"], x, causal=False)
+    x = rmsnorm_ref(x, p["vis_ln_f"])
+    return (x @ p["mm_proj"],)
+
+
+def prefill_fn(p, embeds, length):
+    """Full-prompt prefill over a padded [L, D] embedding buffer.
+
+    Returns last-real-token logits and the KV cache padded to MAX_SEQ
+    (rows >= L are zero; rows in [length, L) are garbage-but-ignored, see
+    module docstring).
+    """
+    L = embeds.shape[0]
+    x = embeds + p["pos_embed"][:L]
+    ks, vs = [], []
+    for i in range(N_LAYERS):
+        x, k, v = _block(p[f"layer_{i}"], x, causal=True)
+        ks.append(k)
+        vs.append(v)
+    x = rmsnorm_ref(x, p["ln_f"])
+    logits = jnp.take(x, length - 1, axis=0) @ p["lm_head"]
+    kv = jnp.stack([jnp.stack([k, v]) for k, v in zip(ks, vs)])  # [Ly,2,H,L,hd]
+    kv = jnp.pad(kv, ((0, 0), (0, 0), (0, 0), (0, MAX_SEQ - L), (0, 0)))
+    return (logits, kv)
+
+
+def decode_fn(p, ids, kv, lengths):
+    """One decode step for a padded batch.
+
+    ids i32[B]; kv f32[B, Ly, 2, H, M, hd]; lengths i32[B] = tokens cached
+    so far (the new token lands at position lengths[b]). Inactive batch
+    slots (lengths == 0 works: they attend only their own row) are padding.
+    """
+    B = ids.shape[0]
+    x = jnp.take(p["tok_embed"], ids, axis=0)
+    x = x + jnp.take(p["pos_embed"], jnp.minimum(lengths, MAX_SEQ - 1), axis=0)
+    new_kv = []
+    for i in range(N_LAYERS):
+        k_cache = kv[:, i, 0]
+        v_cache = kv[:, i, 1]
+        x, k_cache, v_cache = _decode_block(
+            p[f"layer_{i}"], x, k_cache, v_cache,
+            jnp.minimum(lengths, MAX_SEQ - 1), lengths)
+        new_kv.append(jnp.stack([k_cache, v_cache], axis=1))  # [B,2,H,M,hd]
+    x = rmsnorm_ref(x, p["ln_f"])
+    logits = x @ p["lm_head"]
+    kv_out = jnp.stack(new_kv, axis=1)  # [B, Ly, 2, H, M, hd]
+    return (logits, kv_out)
+
+
+# ---------------------------------------------------------------------------
+# Pure-python reference driver (used by tests to cross-check prefill+decode)
+# ---------------------------------------------------------------------------
+def reference_generate(prompt_embeds, n_new_tokens):
+    """Greedy generation without KV caching: re-run full attention each step.
+
+    Ground truth for the prefill->decode KV-cache path.
+    """
+    p = init_params()
+    embeds = prompt_embeds
+    out_tokens = []
+    for _ in range(n_new_tokens):
+        L = embeds.shape[0]
+        x = embeds + p["pos_embed"][:L]
+        for i in range(N_LAYERS):
+            x, _, _ = _block(p[f"layer_{i}"], x, causal=True)
+        x = rmsnorm_ref(x, p["ln_f"])
+        logits = x[-1] @ p["lm_head"]
+        tok = int(jnp.argmax(logits))
+        out_tokens.append(tok)
+        embeds = jnp.concatenate(
+            [embeds, p["tok_embed"][tok][None, :]], axis=0)
+    return out_tokens

@@ -1,0 +1,90 @@
+"""AOT path: manifest/weights/HLO-text contract the Rust runtime parses.
+
+These tests exercise compile.aot without re-lowering every bucket (slow-ish
+in CI): they lower the smallest bucket of each entry point and validate the
+interchange invariants (entry parameter order = weights then inputs, HLO
+text parses structurally, weights.bin layout matches the manifest).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_flat_params_order_is_sorted():
+    names = [n for n, _ in aot.flat_params()]
+    assert names == sorted(names)
+    assert len(names) == len(set(names))
+
+
+def test_flat_params_covers_everything():
+    total = sum(a.size for _, a in aot.flat_params())
+    leaves = jax.tree_util.tree_leaves(M.init_params())
+    assert total == sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def test_artifact_specs_cover_all_buckets():
+    names = {n for n, _, _ in aot.artifact_specs()}
+    for L in M.PREFILL_BUCKETS:
+        assert f"prefill_{L}" in names and f"embed_{L}" in names
+    for B in M.DECODE_BUCKETS:
+        assert f"decode_{B}" in names
+    for Pn in M.ENCODER_BUCKETS:
+        assert f"encoder_{Pn}" in names
+
+
+@pytest.mark.parametrize("name", ["embed_32", "prefill_32", "encoder_16",
+                                  "decode_1"])
+def test_hlo_text_entry_signature(name):
+    spec = {n: (f, a) for n, f, a in aot.artifact_specs()}[name]
+    fn, example_args = spec
+    params = M.init_params()
+    lowered = jax.jit(fn, keep_unused=True).lower(params, *example_args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text
+    # entry params = weight leaves + example inputs, in that order
+    entry = text[text.index("ENTRY"):]
+    n_params = entry.count(" parameter(")
+    assert n_params == len(aot.flat_params()) + len(example_args)
+    # weights come first: parameter(0) must have the first leaf's shape
+    first_shape = aot.flat_params()[0][1].shape
+    dims = ",".join(map(str, first_shape))
+    assert f"f32[{dims}]" in entry.split("parameter(0)")[0].rsplit("=", 1)[1]
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    manifest = []
+    n = aot.dump_weights(str(tmp_path), manifest)
+    raw = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    assert raw.size == n
+    # manifest offsets slice back to the exact leaves
+    entries = [l.split() for l in manifest if l.startswith("weight ")]
+    flat = dict(aot.flat_params())
+    for _, name, shape_s, off_s, size_s in entries:
+        off, size = int(off_s), int(size_s)
+        arr = flat[name]
+        np.testing.assert_array_equal(raw[off:off + size],
+                                      arr.ravel().astype("<f4"))
+
+
+def test_built_artifacts_if_present():
+    """When `make artifacts` has run, validate the on-disk output."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    lines = open(manifest).read().splitlines()
+    arts = [l.split() for l in lines if l.startswith("artifact ")]
+    assert len(arts) >= 2 * len(M.PREFILL_BUCKETS) + len(M.DECODE_BUCKETS) \
+        + len(M.ENCODER_BUCKETS)
+    for _, name, fname, _digest in arts:
+        path = os.path.join(art, fname)
+        assert os.path.exists(path), name
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), name

@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas flash-attention kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: hypothesis sweeps
+shapes/dtypes/causality and asserts allclose against kernels.ref.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import (flash_attention, pick_block,
+                                       vmem_footprint_bytes)
+from compile.kernels.ref import attention_ref
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=40,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernel")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _check(h, sq, sk, d, causal, dtype=jnp.float32, seed=0, **blocks):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (h, sq, d), dtype)
+    k = _rand(rng, (h, sk, d), dtype)
+    v = _rand(rng, (h, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, **blocks)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------------------
+# Deterministic cases: exact tile boundaries, chunked-prefill offsets,
+# single-row queries (decode-like), MXU-sized tiles.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("h,sq,sk,d,causal", [
+    (1, 1, 1, 8, True),        # degenerate single element
+    (1, 1, 64, 32, True),      # decode-shaped: one query over a long cache
+    (2, 16, 16, 8, True),      # single tile
+    (4, 128, 128, 64, True),   # exact MXU tile
+    (2, 256, 256, 32, True),   # multiple tiles both dims
+    (1, 8, 32, 16, True),      # chunked prefill: q is trailing chunk
+    (1, 32, 96, 16, True),     # chunk offset not tile-aligned
+    (2, 7, 21, 8, False),      # ragged, bidirectional (vision encoder)
+    (3, 48, 48, 48, False),    # PATCH_DIM-sized head, encoder shape
+])
+def test_matches_ref(h, sq, sk, d, causal):
+    _check(h, sq, sk, d, causal)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32), (128, 128), (64, 16)])
+def test_block_shape_invariance(bq, bk):
+    """Output must be identical regardless of tiling (pure optimization)."""
+    _check(2, 128, 128, 32, True, block_q=bq, block_k=bk)
+
+
+def test_bfloat16_inputs():
+    _check(2, 32, 32, 16, True, dtype=jnp.bfloat16)
+
+
+def test_large_logit_stability():
+    """Online softmax must not overflow for large logits."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 32, 16)).astype(np.float32) * 30)
+    k = jnp.asarray(rng.standard_normal((1, 32, 16)).astype(np.float32) * 30)
+    v = jnp.asarray(rng.standard_normal((1, 32, 16)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True)
+    assert np.all(np.isfinite(np.asarray(out)))
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Hypothesis sweep: arbitrary shapes within CPU-feasible bounds.
+# ----------------------------------------------------------------------
+@hypothesis.given(
+    h=st.integers(1, 4),
+    sq=st.integers(1, 96),
+    extra_k=st.integers(0, 64),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_shapes(h, sq, extra_k, d, causal, seed):
+    sk = sq + extra_k  # seq_k >= seq_q: the chunked-prefill contract
+    _check(h, sq, sk, d, causal, seed=seed)
+
+
+@hypothesis.given(n=st.integers(1, 4096), pref=st.sampled_from([8, 64, 128]))
+def test_pick_block_divides(n, pref):
+    b = pick_block(n, pref)
+    assert 1 <= b <= min(n, pref)
+    assert n % b == 0
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §Perf: default tiles must fit comfortably in 16 MB VMEM."""
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 1024 * 1024
+    # and leave room for double buffering at the largest head_dim we use
+    assert vmem_footprint_bytes(128, 128, 256) < 16 * 1024 * 1024

@@ -1,0 +1,173 @@
+"""L2 correctness: TinyMLLM prefill/decode/encoder semantics.
+
+The key contracts the Rust runtime relies on:
+  * prefill(padded prompt) == prefill(exact prompt) for the real rows
+    (padding invariance);
+  * the prefill->decode KV-cache path reproduces no-cache greedy generation
+    token-for-token;
+  * batched decode with padded slots matches single-request decode;
+  * encoder output is deterministic and shaped [P, D].
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+P = M.init_params()
+
+
+def _embed(ids):
+    return jnp.take(P["tok_embed"], jnp.asarray(ids, dtype=jnp.int32), axis=0)
+
+
+def _pad(emb, L):
+    return jnp.pad(emb, ((0, L - emb.shape[0]), (0, 0)))
+
+
+def _kv_len(kv, length):
+    """The rows of kv that are semantically meaningful."""
+    return np.asarray(kv)[:, :, :, :length, :]
+
+
+class TestPrefill:
+    def test_padding_invariance(self):
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, M.VOCAB, size=20)
+        emb = _embed(ids)
+        lg32, kv32 = M.prefill_fn(P, _pad(emb, 32), jnp.int32(20))
+        lg64, kv64 = M.prefill_fn(P, _pad(emb, 64), jnp.int32(20))
+        np.testing.assert_allclose(np.asarray(lg32), np.asarray(lg64),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(_kv_len(kv32, 20), _kv_len(kv64, 20),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_kv_shape_padded_to_max_seq(self):
+        emb = _embed([1, 2, 3])
+        _, kv = M.prefill_fn(P, _pad(emb, 32), jnp.int32(3))
+        assert kv.shape == (M.N_LAYERS, 2, M.N_HEADS, M.MAX_SEQ, M.HEAD_DIM)
+        # rows >= bucket L are zero (jnp.pad)
+        assert np.all(np.asarray(kv)[:, :, :, 32:, :] == 0.0)
+
+    def test_logits_at_true_length(self):
+        """Changing pad content must not change the logits."""
+        rng = np.random.default_rng(1)
+        ids = rng.integers(0, M.VOCAB, size=10)
+        emb = _pad(_embed(ids), 32)
+        noisy = emb.at[10:].set(
+            jnp.asarray(rng.standard_normal((22, M.D_MODEL)), jnp.float32))
+        lg_a, _ = M.prefill_fn(P, emb, jnp.int32(10))
+        lg_b, _ = M.prefill_fn(P, noisy, jnp.int32(10))
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDecode:
+    def _prefill(self, ids, bucket=32):
+        emb = _embed(ids)
+        logits, kv = M.prefill_fn(P, _pad(emb, bucket), jnp.int32(len(ids)))
+        return logits, kv
+
+    def test_matches_nocache_reference(self):
+        rng = np.random.default_rng(2)
+        ids = rng.integers(0, M.VOCAB, size=9)
+        ref = M.reference_generate(_embed(ids), 5)
+        logits, kv = self._prefill(ids)
+        toks = [int(jnp.argmax(logits))]
+        kvb = kv[None]
+        lengths = jnp.array([len(ids)], jnp.int32)
+        for _ in range(4):
+            lg, kvb = M.decode_fn(
+                P, jnp.array([toks[-1]], jnp.int32), kvb, lengths)
+            toks.append(int(jnp.argmax(lg[0])))
+            lengths = lengths + 1
+        assert toks == ref
+
+    def test_batch_padding_slots_inert(self):
+        """A padded batch slot must not perturb real slots."""
+        rng = np.random.default_rng(3)
+        ids = rng.integers(0, M.VOCAB, size=7)
+        _, kv = self._prefill(ids)
+        tok = jnp.array([5], jnp.int32)
+        lg1, _ = M.decode_fn(P, tok, kv[None],
+                             jnp.array([7], jnp.int32))
+        # same request in a 4-slot batch with garbage in the pad slots
+        kv4 = jnp.stack([kv,
+                         jnp.ones_like(kv) * 9.0,
+                         jnp.zeros_like(kv),
+                         jnp.ones_like(kv) * -3.0])
+        lg4, _ = M.decode_fn(P, jnp.array([5, 1, 2, 3], jnp.int32), kv4,
+                             jnp.array([7, 0, 0, 0], jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg1[0]), np.asarray(lg4[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_two_concurrent_requests(self):
+        """Batched decode == each request decoded alone."""
+        rng = np.random.default_rng(4)
+        ids_a = rng.integers(0, M.VOCAB, size=6)
+        ids_b = rng.integers(0, M.VOCAB, size=11)
+        lg_a, kv_a = self._prefill(ids_a)
+        lg_b, kv_b = self._prefill(ids_b)
+        t_a, t_b = int(jnp.argmax(lg_a)), int(jnp.argmax(lg_b))
+
+        solo_a, _ = M.decode_fn(P, jnp.array([t_a], jnp.int32), kv_a[None],
+                                jnp.array([6], jnp.int32))
+        solo_b, _ = M.decode_fn(P, jnp.array([t_b], jnp.int32), kv_b[None],
+                                jnp.array([11], jnp.int32))
+        both, _ = M.decode_fn(P, jnp.array([t_a, t_b], jnp.int32),
+                              jnp.stack([kv_a, kv_b]),
+                              jnp.array([6, 11], jnp.int32))
+        np.testing.assert_allclose(np.asarray(both[0]), np.asarray(solo_a[0]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(both[1]), np.asarray(solo_b[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_decode_updates_cache_in_place(self):
+        rng = np.random.default_rng(5)
+        ids = rng.integers(0, M.VOCAB, size=4)
+        _, kv = self._prefill(ids)
+        _, kv2 = M.decode_fn(P, jnp.array([7], jnp.int32), kv[None],
+                             jnp.array([4], jnp.int32))
+        kv2 = np.asarray(kv2[0])
+        kv = np.asarray(kv)
+        # rows < 4 unchanged, row 4 written, rows > 4 unchanged
+        np.testing.assert_allclose(kv2[:, :, :, :4], kv[:, :, :, :4],
+                                   rtol=1e-6, atol=1e-6)
+        assert np.any(kv2[:, :, :, 4] != kv[:, :, :, 4])
+        np.testing.assert_allclose(kv2[:, :, :, 5:], kv[:, :, :, 5:],
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestEncoder:
+    @pytest.mark.parametrize("n_patches", list(M.ENCODER_BUCKETS))
+    def test_shapes(self, n_patches):
+        rng = np.random.default_rng(6)
+        px = jnp.asarray(rng.standard_normal((n_patches, M.PATCH_DIM)),
+                         jnp.float32)
+        out = M.encoder_fn(P, px)[0]
+        assert out.shape == (n_patches, M.D_MODEL)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(7)
+        px = jnp.asarray(rng.standard_normal((16, M.PATCH_DIM)), jnp.float32)
+        a = np.asarray(M.encoder_fn(P, px)[0])
+        b = np.asarray(M.encoder_fn(P, px)[0])
+        np.testing.assert_array_equal(a, b)
+
+    def test_patch_permutation_changes_output(self):
+        """Positions are real: permuting patches must change embeddings."""
+        rng = np.random.default_rng(8)
+        px = jnp.asarray(rng.standard_normal((16, M.PATCH_DIM)), jnp.float32)
+        a = np.asarray(M.encoder_fn(P, px)[0])
+        b = np.asarray(M.encoder_fn(P, px[::-1])[0])
+        assert not np.allclose(a, b[::-1])
+
+
+class TestEmbed:
+    def test_embed_rows(self):
+        ids = jnp.array([0, 5, M.VOCAB - 1], jnp.int32)
+        out = M.embed_fn(P, ids)[0]
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(P["tok_embed"])[np.asarray(ids)])

@@ -1,0 +1,32 @@
+//! Fig 12 — Scalability under increasing load: overall normalized
+//! latency, average TTFT and P90 TTFT as the request rate grows.
+//!
+//! Paper shape: vLLM degrades sharply; EDF holds longer but its tail
+//! (P90) approaches vLLM at high load; TCM sustains the lowest latency
+//! and sharply reduces tail latency at peak rates.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::run_sim;
+
+fn main() {
+    println!("Fig 12 — load sweep (MH, llava-7b)");
+    println!(
+        "{:>6} {:>16} {:>12} {:>12} {:>12}",
+        "req/s", "policy", "norm(s/tok)", "ttft_avg(s)", "ttft_p90(s)"
+    );
+    for rate in [0.5, 1.0, 2.0, 3.0, 4.0, 6.0] {
+        for policy in ["fcfs", "edf", "tcm"] {
+            let mut cfg = ServeConfig::default();
+            cfg.policy = policy.into();
+            cfg.rate = rate;
+            cfg.num_requests = 500;
+            cfg.seed = 12;
+            let r = run_sim(&cfg);
+            let o = r.report.overall();
+            println!(
+                "{rate:>6.1} {policy:>16} {:>12.4} {:>12.3} {:>12.3}",
+                o.avg_norm_latency, o.avg_ttft, o.p90_ttft
+            );
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig 2 — Characterization of MLLM families: CDFs of (a) KV-cache
+//! footprint in tokens and (b) isolated TTFT, per modality, across four
+//! representative models.
+//!
+//! Paper shape to match: text tokens spread 10..10^4; image tokens a
+//! near-vertical line at 10^2..10^3; videos up to >10^5 (Qwen-7B); text
+//! TTFT ≈ 0.01 s < image < 1 s < video 1..10 s.
+
+use tcm_serve::coordinator::profiler::Profiler;
+use tcm_serve::report;
+use tcm_serve::request::Modality;
+
+fn main() {
+    let n = 1000; // paper: "a thousand requests from each dataset"
+    for model in ["llava-500m", "llava-7b", "qwen-7b", "pixtral-12b"] {
+        let profile = tcm_serve::model::by_name(model).unwrap();
+        let data = Profiler::new(&profile, 2026).run(n);
+
+        report::header(&format!("Fig 2a — {model}: KV footprint CDF (tokens)"));
+        for m in Modality::ALL {
+            let toks: Vec<f64> =
+                data.of_modality(m).iter().map(|s| s.kv_tokens as f64).collect();
+            report::cdf_deciles(&format!("{model}/{m}"), &toks);
+        }
+
+        report::header(&format!("Fig 2b — {model}: isolated TTFT CDF (seconds)"));
+        for m in Modality::ALL {
+            let ttfts: Vec<f64> = data.of_modality(m).iter().map(|s| s.ttft()).collect();
+            report::cdf_deciles(&format!("{model}/{m}"), &ttfts);
+        }
+    }
+}

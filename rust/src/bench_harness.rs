@@ -1,0 +1,104 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Provides the criterion-like subset the `rust/benches/` targets use:
+//! warmup, timed iterations, min/median/mean/max reporting, and throughput
+//! annotation. Figure-level benches mostly run *one* deterministic
+//! simulation and print table rows; the harness is used for the hot-path
+//! perf benches where distributional timing matters.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<5} min={:>12?} median={:>12?} mean={:>12?} max={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.max
+        );
+    }
+
+    /// ns per iteration (median).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and ~`target_ms` total.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+    bench_config(name, 10, 300, &mut f)
+}
+
+pub fn bench_config<R>(
+    name: &str,
+    min_iters: usize,
+    target_ms: u64,
+    f: &mut impl FnMut() -> R,
+) -> BenchResult {
+    // Warmup: one call, also estimates per-iter cost.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let warm = t0.elapsed();
+
+    let budget = Duration::from_millis(target_ms);
+    let est_iters = if warm.is_zero() {
+        min_iters.max(1000)
+    } else {
+        ((budget.as_secs_f64() / warm.as_secs_f64()).ceil() as usize).clamp(min_iters, 100_000)
+    };
+
+    let mut samples = Vec::with_capacity(est_iters);
+    let start = Instant::now();
+    for _ in 0..est_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+        if start.elapsed() > budget * 4 && samples.len() >= min_iters {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        min: samples[0],
+        median: samples[n / 2],
+        mean,
+        max: samples[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_ordered_stats() {
+        let r = bench_config("noop", 10, 5, &mut || 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.max);
+    }
+
+    #[test]
+    fn measures_real_work() {
+        let mut acc = 0u64;
+        let r = bench_config("sum", 5, 5, &mut || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.min.as_nanos() > 0);
+    }
+}

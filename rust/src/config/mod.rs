@@ -1,0 +1,340 @@
+//! Typed configuration for the serving system: defaults follow the paper's
+//! §4.1 experimental setup, overridable from a TOML file and/or CLI args.
+
+pub mod toml;
+
+use crate::request::Class;
+use crate::util::cli::Args;
+use toml::Doc;
+
+/// Priority Regulator constants (paper §3.6 / §4.1):
+/// `Priority_c = Static_c + (1 − e^{−k_c · wait^{p_c}})`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegulatorConfig {
+    /// StaticPriority per class [motorcycles, cars, trucks].
+    pub static_priority: [f64; 3],
+    /// Exponent p_c per class.
+    pub p: [f64; 3],
+    /// Rate k_c per class.
+    pub k: [f64; 3],
+    /// Disable to get the pure Static-Priority ablation (§3.4).
+    pub aging_enabled: bool,
+}
+
+impl Default for RegulatorConfig {
+    fn default() -> Self {
+        RegulatorConfig {
+            static_priority: [0.1, 0.05, 0.0],
+            p: [3.5, 2.5, 1.1],
+            k: [0.05, 0.003, 0.00075],
+            aging_enabled: true,
+        }
+    }
+}
+
+impl RegulatorConfig {
+    pub fn static_for(&self, c: Class) -> f64 {
+        self.static_priority[c as usize]
+    }
+
+    pub fn k_for(&self, c: Class) -> f64 {
+        self.k[c as usize]
+    }
+
+    pub fn p_for(&self, c: Class) -> f64 {
+        self.p[c as usize]
+    }
+}
+
+/// Continuous-batching scheduler knobs (vLLM-V1-style iteration loop).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// Prefill token budget per iteration (chunked prefill chunk size).
+    /// Default 512, the Sarathi-recommended chunk: it bounds the decode
+    /// stall a single iteration can impose while keeping per-iteration
+    /// launch overhead small.
+    pub token_budget: u32,
+    /// Maximum concurrently running sequences.
+    pub max_running: usize,
+    /// KV-cache page size in tokens (vLLM block size).
+    pub kv_block_tokens: u32,
+    /// CPU preprocess pool parallelism.
+    pub preprocess_workers: usize,
+    /// Require whole-prompt prefill in one chunk (the RealEngine's
+    /// static-bucket artifacts do not support chunk resumption; the
+    /// simulator supports both).
+    pub atomic_prefill: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            token_budget: 512,
+            max_running: 256,
+            kv_block_tokens: 16,
+            preprocess_workers: 8,
+            atomic_prefill: false,
+        }
+    }
+}
+
+/// Top-level experiment/server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model profile name (Table 1) or "tiny-mllm" for the real engine.
+    pub model: String,
+    /// Workload mix: T0 | ML | MH.
+    pub mix: String,
+    /// Poisson arrival rate (requests/second). Paper default: 2.
+    pub rate: f64,
+    /// Number of requests per experiment.
+    pub num_requests: usize,
+    pub seed: u64,
+    /// Scheduling policy: fcfs | edf | naive-class | static-priority |
+    /// naive-aging | tcm.
+    pub policy: String,
+    /// SLO = slo_scale × isolated end-to-end latency (paper: 5×).
+    pub slo_scale: f64,
+    /// Fraction of the profile's KV capacity available (memory pressure).
+    pub memory_frac: f64,
+    pub scheduler: SchedulerConfig,
+    pub regulator: RegulatorConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "llava-7b".into(),
+            mix: "MH".into(),
+            rate: 2.0,
+            num_requests: 1000,
+            seed: 42,
+            policy: "tcm".into(),
+            slo_scale: 5.0,
+            memory_frac: 1.0,
+            scheduler: SchedulerConfig::default(),
+            regulator: RegulatorConfig::default(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ServeConfig {
+    /// Apply a parsed TOML document on top of the current values.
+    pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
+        let known_prefixes = [
+            "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
+            "memory_frac", "scheduler.", "regulator.",
+        ];
+        for key in doc.values.keys() {
+            let known = known_prefixes.iter().any(|p| {
+                if let Some(prefix) = p.strip_suffix('.') {
+                    key == prefix || key.starts_with(p)
+                } else {
+                    key == p
+                }
+            });
+            if !known {
+                return Err(ConfigError(format!("unknown config key '{key}'")));
+            }
+        }
+        if let Some(v) = doc.get_str("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("mix") {
+            self.mix = v.to_string();
+        }
+        if let Some(v) = doc.get_f64("rate") {
+            self.rate = v;
+        }
+        if let Some(v) = doc.get_i64("num_requests") {
+            self.num_requests = v as usize;
+        }
+        if let Some(v) = doc.get_i64("seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("policy") {
+            self.policy = v.to_string();
+        }
+        if let Some(v) = doc.get_f64("slo_scale") {
+            self.slo_scale = v;
+        }
+        if let Some(v) = doc.get_f64("memory_frac") {
+            self.memory_frac = v;
+        }
+        if let Some(v) = doc.get_i64("scheduler.token_budget") {
+            self.scheduler.token_budget = v as u32;
+        }
+        if let Some(v) = doc.get_i64("scheduler.max_running") {
+            self.scheduler.max_running = v as usize;
+        }
+        if let Some(v) = doc.get_i64("scheduler.kv_block_tokens") {
+            self.scheduler.kv_block_tokens = v as u32;
+        }
+        if let Some(v) = doc.get_i64("scheduler.preprocess_workers") {
+            self.scheduler.preprocess_workers = v as usize;
+        }
+        if let Some(v) = doc.get_bool("scheduler.atomic_prefill") {
+            self.scheduler.atomic_prefill = v;
+        }
+        if let Some(v) = doc.get_bool("regulator.aging_enabled") {
+            self.regulator.aging_enabled = v;
+        }
+        for (field, key) in [("static_priority", "regulator.static_priority"),
+                             ("p", "regulator.p"), ("k", "regulator.k")] {
+            if let Some(val) = doc.get(key) {
+                let arr = val
+                    .as_array()
+                    .ok_or_else(|| ConfigError(format!("{key} must be an array")))?;
+                if arr.len() != 3 {
+                    return Err(ConfigError(format!("{key} must have 3 entries (M, C, T)")));
+                }
+                let mut out = [0.0; 3];
+                for (i, v) in arr.iter().enumerate() {
+                    out[i] = v
+                        .as_f64()
+                        .ok_or_else(|| ConfigError(format!("{key}[{i}] must be numeric")))?;
+                }
+                match field {
+                    "static_priority" => self.regulator.static_priority = out,
+                    "p" => self.regulator.p = out,
+                    _ => self.regulator.k = out,
+                }
+            }
+        }
+        self.validate()
+    }
+
+    /// Apply CLI option overrides (highest precedence).
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), ConfigError> {
+        let e = |s: crate::util::cli::CliError| ConfigError(s.0);
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = args.get("mix") {
+            self.mix = v.to_string();
+        }
+        if let Some(v) = args.get("policy") {
+            self.policy = v.to_string();
+        }
+        self.rate = args.get_f64("rate", self.rate).map_err(e)?;
+        self.num_requests = args.get_usize("requests", self.num_requests).map_err(e)?;
+        self.seed = args.get_u64("seed", self.seed).map_err(e)?;
+        self.slo_scale = args.get_f64("slo-scale", self.slo_scale).map_err(e)?;
+        self.memory_frac = args.get_f64("memory-frac", self.memory_frac).map_err(e)?;
+        self.scheduler.token_budget =
+            args.get_usize("token-budget", self.scheduler.token_budget as usize).map_err(e)?
+                as u32;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if crate::model::by_name(&self.model).is_none() {
+            return Err(ConfigError(format!(
+                "unknown model '{}' (expected one of {:?} or tiny-mllm)",
+                self.model,
+                crate::model::names()
+            )));
+        }
+        if crate::workload::Mix::by_name(&self.mix).is_none() {
+            return Err(ConfigError(format!("unknown mix '{}' (T0|ML|MH)", self.mix)));
+        }
+        const POLICIES: [&str; 6] =
+            ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
+        if !POLICIES.contains(&self.policy.as_str()) {
+            return Err(ConfigError(format!(
+                "unknown policy '{}' (expected one of {POLICIES:?})",
+                self.policy
+            )));
+        }
+        if self.rate <= 0.0 {
+            return Err(ConfigError("rate must be > 0".into()));
+        }
+        if !(0.0 < self.memory_frac && self.memory_frac <= 1.0) {
+            return Err(ConfigError("memory_frac must be in (0, 1]".into()));
+        }
+        if self.scheduler.token_budget == 0 || self.scheduler.kv_block_tokens == 0 {
+            return Err(ConfigError("scheduler token sizes must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = ServeConfig::default();
+        assert_eq!(c.model, "llava-7b");
+        assert_eq!(c.mix, "MH");
+        assert_eq!(c.rate, 2.0);
+        assert_eq!(c.slo_scale, 5.0);
+        assert_eq!(c.regulator.static_priority, [0.1, 0.05, 0.0]);
+        assert_eq!(c.regulator.p, [3.5, 2.5, 1.1]);
+        assert_eq!(c.regulator.k, [0.05, 0.003, 0.00075]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = ServeConfig::default();
+        let doc = Doc::parse(
+            r#"
+model = "qwen-7b"
+rate = 4.0
+[scheduler]
+token_budget = 1024
+[regulator]
+k = [0.1, 0.01, 0.001]
+aging_enabled = false
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.model, "qwen-7b");
+        assert_eq!(c.rate, 4.0);
+        assert_eq!(c.scheduler.token_budget, 1024);
+        assert_eq!(c.regulator.k, [0.1, 0.01, 0.001]);
+        assert!(!c.regulator.aging_enabled);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let mut c = ServeConfig::default();
+        let doc = Doc::parse("modell = \"typo\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("model = \"gpt-99\"").unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("rate = -1.0").unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        assert!(c
+            .apply_doc(&Doc::parse("[regulator]\nk = [0.1, 0.2]").unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn regulator_class_accessors() {
+        use crate::request::Class;
+        let r = RegulatorConfig::default();
+        assert_eq!(r.static_for(Class::Motorcycle), 0.1);
+        assert_eq!(r.k_for(Class::Truck), 0.00075);
+        assert_eq!(r.p_for(Class::Car), 2.5);
+    }
+}

@@ -1,0 +1,266 @@
+//! A TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / float / integer / bool / homogeneous array values, `#`
+//! comments, and blank lines. This covers every config file the project
+//! ships; anything fancier is a parse error rather than silent
+//! misinterpretation.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path key → value (section headers are joined
+/// with '.', e.g. `[scheduler] budget=1` → "scheduler.budget").
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').ok_or(TomlError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(TomlError { line: lineno, msg: "empty section name".into() });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(TomlError {
+                line: lineno,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(TomlError { line: lineno, msg: "empty key".into() });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim(), lineno)?;
+            if doc.values.insert(full_key.clone(), value).is_some() {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: format!("duplicate key '{full_key}'"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Doc, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Doc::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    let err = |msg: String| TomlError { line: lineno, msg };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if body.contains('"') {
+            return Err(err("embedded quote in string".into()));
+        }
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+title = "tcm"   # inline comment
+[scheduler]
+budget = 2048
+aging = true
+rate = 2.5
+[scheduler.priority]
+static = [0.1, 0.05, 0.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("tcm"));
+        assert_eq!(doc.get_i64("scheduler.budget"), Some(2048));
+        assert_eq!(doc.get_bool("scheduler.aging"), Some(true));
+        assert_eq!(doc.get_f64("scheduler.rate"), Some(2.5));
+        let arr = doc.get("scheduler.priority.static").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_f64(), Some(0.1));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Doc::parse("just words").is_err());
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = @wat").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("x"), Some("a#b"));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = Doc::parse("a = 1\nb = @").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

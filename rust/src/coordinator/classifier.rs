@@ -1,0 +1,202 @@
+//! Request Classifier (paper §3.4): maps requests to trucks, cars and
+//! motorcycles.
+//!
+//! Two implementations, matching the paper's ablation:
+//! * [`NaiveClassifier`] — coarse modality labels (text→M, image→C,
+//!   video→T). Simple but wrong at the margins: long text prompts match
+//!   image demands, short videos resemble images, and it penalizes all
+//!   videos regardless of size (Fig 8).
+//! * [`SmartClassifier`] — k-means (k=3) over resource-aware features
+//!   from the Impact Estimator: (log prefill latency, log KV tokens).
+//!   Clusters are ordered by centroid magnitude so the lightest cluster
+//!   is always the motorcycle class, regardless of seed.
+
+use super::estimator::{Impact, ImpactEstimator};
+use super::profiler::ProfileData;
+use crate::request::{Class, Modality, Request};
+use crate::util::stats::KMeans;
+
+/// A classifier assigns a class given the request and its impact estimate.
+pub trait Classifier {
+    fn classify(&self, req: &Request, impact: &Impact) -> Class;
+    fn name(&self) -> &'static str;
+}
+
+/// Modality-label classifier (ablation baseline).
+#[derive(Debug, Default, Clone)]
+pub struct NaiveClassifier;
+
+impl Classifier for NaiveClassifier {
+    fn classify(&self, req: &Request, _impact: &Impact) -> Class {
+        match req.modality {
+            Modality::Text => Class::Motorcycle,
+            Modality::Image => Class::Car,
+            Modality::Video => Class::Truck,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+/// Resource-aware clustering classifier (the paper's smart classifier).
+#[derive(Debug, Clone)]
+pub struct SmartClassifier {
+    kmeans: KMeans,
+    /// cluster index -> class, ordered by centroid resource magnitude.
+    cluster_class: Vec<Class>,
+}
+
+fn features(impact: &Impact) -> Vec<f64> {
+    // log-space features: the paper's orders-of-magnitude spreads make
+    // linear-space k-means collapse everything but the largest videos.
+    vec![impact.prefill_s.max(1e-6).log10(), impact.kv_tokens.max(1.0).log10()]
+}
+
+impl SmartClassifier {
+    /// Train on profiling data through a trained estimator (so training
+    /// and runtime features come from the same pipeline).
+    pub fn train(data: &ProfileData, estimator: &ImpactEstimator, seed: u64) -> SmartClassifier {
+        let pts: Vec<Vec<f64>> = data
+            .samples
+            .iter()
+            .map(|s| {
+                // Rebuild the estimator's runtime features for the sample.
+                let req = Request {
+                    id: 0,
+                    arrival: 0.0,
+                    modality: s.modality,
+                    text_tokens: if s.modality == Modality::Text { s.prefill_tokens } else { 0 },
+                    mm_tokens: if s.modality == Modality::Text { 0 } else { s.prefill_tokens },
+                    video_duration_s: 0.0,
+                    output_tokens: 0,
+                };
+                features(&estimator.estimate(&req))
+            })
+            .collect();
+        let kmeans = KMeans::fit(&pts, 3, seed);
+        let norms = kmeans.centroid_norms();
+        // Order clusters by magnitude: smallest -> Motorcycle, ... but
+        // note log features can be negative; order by the *kv* coordinate
+        // + latency coordinate sum instead of the norm to keep monotone
+        // ordering in log space.
+        let scores: Vec<f64> = kmeans.centroids.iter().map(|c| c.iter().sum()).collect();
+        let mut order: Vec<usize> = (0..kmeans.centroids.len()).collect();
+        order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        let mut cluster_class = vec![Class::Truck; kmeans.centroids.len()];
+        for (rank, &cluster) in order.iter().enumerate() {
+            cluster_class[cluster] = Class::from_index(rank.min(2));
+        }
+        let _ = norms;
+        SmartClassifier { kmeans, cluster_class }
+    }
+
+    pub fn centroids(&self) -> &[Vec<f64>] {
+        &self.kmeans.centroids
+    }
+}
+
+impl Classifier for SmartClassifier {
+    fn classify(&self, _req: &Request, impact: &Impact) -> Class {
+        self.cluster_class[self.kmeans.assign(&features(impact))]
+    }
+
+    fn name(&self) -> &'static str {
+        "smart"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::estimator::ImpactEstimator;
+    use crate::coordinator::profiler::Profiler;
+    use crate::model::by_name;
+
+    fn pipeline() -> (ImpactEstimator, SmartClassifier) {
+        let data = Profiler::new(&by_name("llava-7b").unwrap(), 5).run(300);
+        let est = ImpactEstimator::train(&data);
+        let cls = SmartClassifier::train(&data, &est, 42);
+        (est, cls)
+    }
+
+    fn req(m: Modality, text: u32, mm: u32, dur: f64) -> Request {
+        Request {
+            id: 0,
+            arrival: 0.0,
+            modality: m,
+            text_tokens: text,
+            mm_tokens: mm,
+            video_duration_s: dur,
+            output_tokens: 100,
+        }
+    }
+
+    #[test]
+    fn naive_maps_by_modality() {
+        let c = NaiveClassifier;
+        let i = Impact { prefill_s: 1.0, kv_tokens: 10.0 };
+        assert_eq!(c.classify(&req(Modality::Text, 9000, 0, 0.0), &i), Class::Motorcycle);
+        assert_eq!(c.classify(&req(Modality::Image, 10, 729, 0.0), &i), Class::Car);
+        assert_eq!(c.classify(&req(Modality::Video, 10, 400, 2.0), &i), Class::Truck);
+    }
+
+    #[test]
+    fn smart_typical_requests_follow_modality() {
+        let (est, cls) = pipeline();
+        let p = by_name("llava-7b").unwrap();
+        let t = req(Modality::Text, 80, 0, 0.0);
+        let i = req(Modality::Image, 40, p.tokenizer.image_tokens as u32, 0.0);
+        let v = req(Modality::Video, 40, p.tokenizer.video_tokens(120.0), 120.0);
+        assert_eq!(cls.classify(&t, &est.estimate(&t)), Class::Motorcycle);
+        assert_eq!(cls.classify(&i, &est.estimate(&i)), Class::Car);
+        assert_eq!(cls.classify(&v, &est.estimate(&v)), Class::Truck);
+    }
+
+    #[test]
+    fn smart_long_text_is_not_motorcycle() {
+        // the naive classifier's blind spot: a 10^4-token text prompt has
+        // image-class resource demands
+        let (est, cls) = pipeline();
+        let long = req(Modality::Text, 10_000, 0, 0.0);
+        assert_ne!(cls.classify(&long, &est.estimate(&long)), Class::Motorcycle);
+    }
+
+    #[test]
+    fn smart_short_video_is_not_truck() {
+        // a 5-second LLaVA video = 5 frames x 196 tokens ≈ image weight
+        let (est, cls) = pipeline();
+        let p = by_name("llava-7b").unwrap();
+        let short = req(Modality::Video, 20, p.tokenizer.video_tokens(5.0), 5.0);
+        assert_ne!(cls.classify(&short, &est.estimate(&short)), Class::Truck);
+    }
+
+    #[test]
+    fn classes_monotone_in_resource_magnitude() {
+        let (_, cls) = pipeline();
+        // synthetic impacts spanning the spectrum must be non-decreasing
+        let impacts = [
+            Impact { prefill_s: 0.01, kv_tokens: 100.0 },
+            Impact { prefill_s: 0.3, kv_tokens: 900.0 },
+            Impact { prefill_s: 5.0, kv_tokens: 60_000.0 },
+        ];
+        let dummy = req(Modality::Text, 1, 0, 0.0);
+        let classes: Vec<Class> = impacts.iter().map(|i| cls.classify(&dummy, i)).collect();
+        assert_eq!(classes[0], Class::Motorcycle);
+        assert_eq!(classes[2], Class::Truck);
+        assert!(classes[0] <= classes[1] && classes[1] <= classes[2]);
+    }
+
+    #[test]
+    fn all_three_classes_reachable() {
+        let (est, cls) = pipeline();
+        let p = by_name("llava-7b").unwrap();
+        let mut seen = std::collections::HashSet::new();
+        let mut gen = crate::workload::WorkloadGen::new(&p, crate::workload::MIX_MH, 2.0, 3);
+        for r in gen.generate(2000) {
+            seen.insert(cls.classify(&r, &est.estimate(&r)));
+        }
+        assert_eq!(seen.len(), 3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Impact Estimator (paper §3.3): predicts each incoming request's
+//! *temporal* impact (prefill latency) and *spatial* impact (KV-cache
+//! footprint in tokens) before it is scheduled.
+//!
+//! Model- and modality-specific estimators, trained once at system
+//! initialization from Workload Profiler data:
+//! * text — ordinary linear regression of prefill time on prompt tokens
+//!   (prefill "scales predictably with prompt length");
+//! * image / video — quantile regression at the 90th percentile "to avoid
+//!   underestimation and protect SLO compliance".
+//!
+//! The KV projection adds the profile's median output length to the known
+//! prompt token count (TCM-Serve deliberately avoids output-length
+//! *prediction models*, §4.1).
+
+use super::profiler::ProfileData;
+use crate::request::{Modality, Request};
+use crate::util::stats::{LinearFit, QuantileFit};
+
+/// Impact estimate for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Impact {
+    /// Predicted prefill latency (seconds). Includes encode for
+    /// multimodal requests — both run on the GPU ahead of the first token.
+    pub prefill_s: f64,
+    /// Projected peak KV footprint (tokens).
+    pub kv_tokens: f64,
+}
+
+/// Trained estimator for one model.
+#[derive(Debug, Clone)]
+pub struct ImpactEstimator {
+    text_fit: LinearFit,
+    image_fit: QuantileFit,
+    video_fit: QuantileFit,
+    median_output: f64,
+}
+
+impl ImpactEstimator {
+    /// Fit from profiling data. Requires at least 2 samples per modality.
+    pub fn train(data: &ProfileData) -> ImpactEstimator {
+        let xy = |m: Modality| -> (Vec<f64>, Vec<f64>) {
+            let ss = data.of_modality(m);
+            (
+                ss.iter().map(|s| s.prefill_tokens as f64).collect(),
+                // GPU-side pre-first-token time: encode + prefill.
+                ss.iter().map(|s| s.encode_s + s.prefill_s).collect(),
+            )
+        };
+        let (tx, ty) = xy(Modality::Text);
+        let (ix, iy) = xy(Modality::Image);
+        let (vx, vy) = xy(Modality::Video);
+        ImpactEstimator {
+            text_fit: LinearFit::fit(&tx, &ty),
+            image_fit: QuantileFit::fit(&ix, &iy, 0.9),
+            video_fit: QuantileFit::fit(&vx, &vy, 0.9),
+            median_output: data.median_output_tokens(),
+        }
+    }
+
+    /// Predict the impact of a request from its metadata.
+    pub fn estimate(&self, req: &Request) -> Impact {
+        let tokens = req.prefill_tokens() as f64;
+        let prefill_s = match req.modality {
+            Modality::Text => self.text_fit.predict(tokens),
+            Modality::Image => self.image_fit.predict(tokens),
+            Modality::Video => self.video_fit.predict(tokens),
+        }
+        .max(1e-6);
+        Impact { prefill_s, kv_tokens: tokens + self.median_output }
+    }
+
+    /// Mean absolute prediction error per modality on a dataset (Fig 7).
+    pub fn mae(&self, data: &ProfileData, m: Modality) -> f64 {
+        let ss = data.of_modality(m);
+        if ss.is_empty() {
+            return 0.0;
+        }
+        ss.iter()
+            .map(|s| {
+                let pred = match m {
+                    Modality::Text => self.text_fit.predict(s.prefill_tokens as f64),
+                    Modality::Image => self.image_fit.predict(s.prefill_tokens as f64),
+                    Modality::Video => self.video_fit.predict(s.prefill_tokens as f64),
+                };
+                (pred - (s.encode_s + s.prefill_s)).abs()
+            })
+            .sum::<f64>()
+            / ss.len() as f64
+    }
+
+    pub fn median_output(&self) -> f64 {
+        self.median_output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::profiler::Profiler;
+    use crate::model::by_name;
+
+    fn trained() -> (ImpactEstimator, ProfileData) {
+        let prof = Profiler::new(&by_name("llava-7b").unwrap(), 3);
+        let data = prof.run(300);
+        (ImpactEstimator::train(&data), data)
+    }
+
+    fn req(m: Modality, text: u32, mm: u32, dur: f64) -> Request {
+        Request {
+            id: 0,
+            arrival: 0.0,
+            modality: m,
+            text_tokens: text,
+            mm_tokens: mm,
+            video_duration_s: dur,
+            output_tokens: 100,
+        }
+    }
+
+    #[test]
+    fn errors_small_relative_to_scale() {
+        // Fig 7: "prediction errors remain within a few milliseconds even
+        // for visual-heavy requests whose TTFT spans seconds"
+        let (est, data) = trained();
+        let p = by_name("llava-7b").unwrap();
+        assert!(est.mae(&data, Modality::Text) < 0.05);
+        assert!(est.mae(&data, Modality::Image) < 0.1);
+        let vid_scale = p.prefill_time(6272);
+        assert!(est.mae(&data, Modality::Video) < 0.35 * vid_scale.max(1.0));
+    }
+
+    #[test]
+    fn quantile_fits_overestimate_on_average() {
+        // P90 target: most actual latencies sit below the prediction.
+        let (est, data) = trained();
+        for m in [Modality::Image, Modality::Video] {
+            let ss = data.of_modality(m);
+            let below = ss
+                .iter()
+                .filter(|s| {
+                    est.estimate(&req(m, 0, s.prefill_tokens, 60.0)).prefill_s
+                        >= s.encode_s + s.prefill_s
+                })
+                .count();
+            let frac = below as f64 / ss.len() as f64;
+            assert!(frac > 0.75, "{m}: only {frac} below P90 line");
+        }
+    }
+
+    #[test]
+    fn video_estimate_dominates_image_dominates_text() {
+        let (est, _) = trained();
+        let p = by_name("llava-7b").unwrap();
+        let t = est.estimate(&req(Modality::Text, 100, 0, 0.0));
+        let i = est.estimate(&req(Modality::Image, 40, p.tokenizer.image_tokens as u32, 0.0));
+        let v = est.estimate(&req(
+            Modality::Video,
+            40,
+            p.tokenizer.video_tokens(120.0),
+            120.0,
+        ));
+        assert!(t.prefill_s < i.prefill_s);
+        assert!(i.prefill_s < v.prefill_s);
+        assert!(t.kv_tokens < i.kv_tokens);
+        assert!(i.kv_tokens < v.kv_tokens);
+    }
+
+    #[test]
+    fn kv_projection_adds_median_output() {
+        let (est, _) = trained();
+        let r = req(Modality::Text, 500, 0, 0.0);
+        let imp = est.estimate(&r);
+        assert!((imp.kv_tokens - 500.0 - est.median_output()).abs() < 1e-9);
+        assert!(est.median_output() > 0.0);
+    }
+
+    #[test]
+    fn estimates_are_positive() {
+        let (est, _) = trained();
+        let imp = est.estimate(&req(Modality::Text, 1, 0, 0.0));
+        assert!(imp.prefill_s > 0.0);
+    }
+}

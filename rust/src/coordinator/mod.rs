@@ -1,0 +1,21 @@
+//! The TCM-Serve coordinator: the paper's system contribution (§3).
+//!
+//! Components map one-to-one to Fig 5:
+//! * [`profiler`] — Workload Profiler (§3.2, offline)
+//! * [`estimator`] — Impact Estimator (§3.3)
+//! * [`classifier`] — Request Classifier (§3.4)
+//! * [`queues`] — Queue Manager (§3.5)
+//! * [`priority`] — Priority Regulator (§3.6)
+//! * [`scheduler`] — the continuous-batching core that ties them to an
+//!   execution engine (shared with all baseline policies)
+//! * [`state`] — per-request lifecycle bookkeeping
+
+pub mod classifier;
+pub mod estimator;
+pub mod priority;
+pub mod profiler;
+pub mod queues;
+pub mod scheduler;
+pub mod state;
+
+pub use scheduler::{SchedStats, Scheduler};

@@ -1,0 +1,189 @@
+//! Workload Profiler (paper §3.2): offline, per model–modality pair.
+//!
+//! Executes a representative workload one request at a time (no
+//! interference) and records preprocessing time, encoder time, prefill
+//! time and KV token counts. The resulting [`ProfileData`] trains the
+//! Impact Estimator (§3.3) and the Request Classifier (§3.4).
+//!
+//! In simulation the "measurement" comes from the model's cost profile
+//! plus multiplicative lognormal noise (SimEngine::with_noise), so the
+//! estimator genuinely has to fit through scatter, as in the paper's
+//! Fig 7.
+
+use crate::engine::sim_engine::SimEngine;
+use crate::engine::{EncodeItem, PrefillItem, StepPlan};
+use crate::model::ModelProfile;
+use crate::request::{Modality, Request};
+use crate::workload::{Mix, WorkloadGen};
+
+/// One isolated-request measurement.
+#[derive(Debug, Clone)]
+pub struct ProfileSample {
+    pub modality: Modality,
+    /// Prompt tokens entering prefill (text + vision).
+    pub prefill_tokens: u32,
+    pub preprocess_s: f64,
+    pub encode_s: f64,
+    pub prefill_s: f64,
+    /// Peak KV footprint in tokens (prompt + measured output).
+    pub kv_tokens: u32,
+}
+
+impl ProfileSample {
+    pub fn ttft(&self) -> f64 {
+        self.preprocess_s + self.encode_s + self.prefill_s
+    }
+}
+
+/// Per-model profiling dataset.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileData {
+    pub samples: Vec<ProfileSample>,
+}
+
+impl ProfileData {
+    pub fn of_modality(&self, m: Modality) -> Vec<&ProfileSample> {
+        self.samples.iter().filter(|s| s.modality == m).collect()
+    }
+
+    /// Median measured output length (the estimator's KV projection uses
+    /// it since TCM-Serve does not predict output lengths).
+    pub fn median_output_tokens(&self) -> f64 {
+        let outs: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|s| (s.kv_tokens - s.prefill_tokens) as f64)
+            .collect();
+        crate::util::stats::median(&outs)
+    }
+}
+
+/// Offline profiler: runs `n_per_modality` isolated requests per modality
+/// through a noisy SimEngine instance of the target model.
+pub struct Profiler {
+    pub profile: ModelProfile,
+    pub noise_sigma: f64,
+    pub seed: u64,
+}
+
+impl Profiler {
+    pub fn new(profile: &ModelProfile, seed: u64) -> Profiler {
+        Profiler { profile: profile.clone(), noise_sigma: 0.06, seed }
+    }
+
+    pub fn run(&self, n_per_modality: usize) -> ProfileData {
+        let mut engine = SimEngine::with_noise(&self.profile, self.noise_sigma, self.seed);
+        // Profiling uses the heavy mix's marginals so every modality's
+        // token range is covered (the generator is per-modality anyway).
+        let mut gen =
+            WorkloadGen::new(&self.profile, Mix { name: "prof", text: 1.0, image: 1.0, video: 1.0 },
+                             1.0, self.seed ^ 0xBEEF);
+        let mut data = ProfileData::default();
+        for modality in Modality::ALL {
+            for req in gen.generate_isolated(modality, n_per_modality) {
+                data.samples.push(self.measure(&mut engine, &req));
+            }
+        }
+        data
+    }
+
+    /// Measure one request in isolation (preprocess + encode + whole-prompt
+    /// prefill; output length measured by running decode to completion is
+    /// equivalent to reading the ground truth, so we read it directly).
+    fn measure(&self, engine: &mut SimEngine, req: &Request) -> ProfileSample {
+        let preprocess_s = self.profile.preprocess_time(req);
+        let plan = StepPlan {
+            encodes: if req.mm_tokens > 0 {
+                vec![EncodeItem {
+                    req_id: req.id,
+                    modality: req.modality,
+                    mm_tokens: req.mm_tokens,
+                    video_duration_s: req.video_duration_s,
+                }]
+            } else {
+                vec![]
+            },
+            prefills: vec![PrefillItem {
+                req_id: req.id,
+                ctx_before: 0,
+                chunk_tokens: req.prefill_tokens(),
+                last_chunk: true,
+                text_tokens: req.text_tokens,
+                mm_tokens: req.mm_tokens,
+                prefill_total: req.prefill_tokens(),
+            }],
+            decodes: vec![],
+        };
+        let (encode_s, prefill_s, _) = engine.plan_cost(&plan);
+        ProfileSample {
+            modality: req.modality,
+            prefill_tokens: req.prefill_tokens(),
+            preprocess_s,
+            encode_s,
+            prefill_s,
+            kv_tokens: req.peak_kv_tokens(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::util::stats;
+
+    fn data() -> ProfileData {
+        Profiler::new(&by_name("llava-7b").unwrap(), 1).run(200)
+    }
+
+    #[test]
+    fn covers_all_modalities() {
+        let d = data();
+        for m in Modality::ALL {
+            assert_eq!(d.of_modality(m).len(), 200);
+        }
+    }
+
+    #[test]
+    fn text_has_no_vision_stages() {
+        let d = data();
+        for s in d.of_modality(Modality::Text) {
+            assert_eq!(s.preprocess_s, 0.0);
+            assert_eq!(s.encode_s, 0.0);
+            assert!(s.prefill_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn video_ttft_dominates_image_dominates_text() {
+        let d = data();
+        let med = |m: Modality| {
+            stats::median(&d.of_modality(m).iter().map(|s| s.ttft()).collect::<Vec<_>>())
+        };
+        assert!(med(Modality::Text) < med(Modality::Image));
+        assert!(med(Modality::Image) < med(Modality::Video));
+    }
+
+    #[test]
+    fn noise_produces_scatter() {
+        let d = data();
+        // same token count should not always produce the same prefill time
+        let imgs = d.of_modality(Modality::Image);
+        let times: Vec<f64> = imgs.iter().map(|s| s.prefill_s).collect();
+        assert!(stats::std_dev(&times) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Profiler::new(&by_name("llava-7b").unwrap(), 9).run(50);
+        let b = Profiler::new(&by_name("llava-7b").unwrap(), 9).run(50);
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.prefill_s, y.prefill_s);
+        }
+    }
+
+    #[test]
+    fn median_output_positive() {
+        assert!(data().median_output_tokens() > 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Queue Manager (paper §3.5): three independent queues for trucks, cars
+//! and motorcycles, with queue-level load metrics.
+//!
+//! Classification is decoupled from scheduling: the Queue Manager only
+//! tracks membership and waiting statistics; the Priority Regulator
+//! decides cross-queue order each iteration (scores are monotone in
+//! waiting time within a class, so FCFS-within-queue is preserved by
+//! construction).
+
+use crate::request::Class;
+use std::collections::VecDeque;
+
+/// Running statistics for one class queue.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    /// Total requests ever enqueued.
+    pub enqueued: u64,
+    /// Total requests dequeued (admitted to the engine).
+    pub dequeued: u64,
+    /// Sum of waiting times at dequeue (avg = sum / dequeued).
+    pub total_wait: f64,
+    /// High-water mark of queue length.
+    pub peak_len: usize,
+}
+
+impl QueueStats {
+    pub fn avg_wait(&self) -> f64 {
+        if self.dequeued == 0 {
+            0.0
+        } else {
+            self.total_wait / self.dequeued as f64
+        }
+    }
+}
+
+/// Entry tracked per queued request.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    id: u64,
+    enqueue_time: f64,
+}
+
+/// Three class queues (M, C, T) with FCFS order within each.
+#[derive(Debug, Default)]
+pub struct QueueManager {
+    queues: [VecDeque<Entry>; 3],
+    stats: [QueueStats; 3],
+}
+
+impl QueueManager {
+    pub fn new() -> QueueManager {
+        QueueManager::default()
+    }
+
+    pub fn enqueue(&mut self, class: Class, id: u64, now: f64) {
+        let q = &mut self.queues[class as usize];
+        q.push_back(Entry { id, enqueue_time: now });
+        let s = &mut self.stats[class as usize];
+        s.enqueued += 1;
+        s.peak_len = s.peak_len.max(q.len());
+    }
+
+    /// Remove a specific request (admission is score-ordered, so dequeues
+    /// are not always from the front). Returns false if not present.
+    pub fn dequeue(&mut self, class: Class, id: u64, now: f64) -> bool {
+        let q = &mut self.queues[class as usize];
+        if let Some(pos) = q.iter().position(|e| e.id == id) {
+            let e = q.remove(pos).unwrap();
+            let s = &mut self.stats[class as usize];
+            s.dequeued += 1;
+            s.total_wait += (now - e.enqueue_time).max(0.0);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self, class: Class) -> usize {
+        self.queues[class as usize].len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Front (oldest) entry of a class queue.
+    pub fn front(&self, class: Class) -> Option<u64> {
+        self.queues[class as usize].front().map(|e| e.id)
+    }
+
+    /// Ids in FCFS order for one class.
+    pub fn ids(&self, class: Class) -> impl Iterator<Item = u64> + '_ {
+        self.queues[class as usize].iter().map(|e| e.id)
+    }
+
+    pub fn stats(&self, class: Class) -> &QueueStats {
+        &self.stats[class as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_within_class() {
+        let mut qm = QueueManager::new();
+        qm.enqueue(Class::Car, 1, 0.0);
+        qm.enqueue(Class::Car, 2, 1.0);
+        qm.enqueue(Class::Truck, 3, 0.5);
+        assert_eq!(qm.front(Class::Car), Some(1));
+        assert_eq!(qm.ids(Class::Car).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(qm.front(Class::Truck), Some(3));
+        assert_eq!(qm.front(Class::Motorcycle), None);
+    }
+
+    #[test]
+    fn dequeue_tracks_wait() {
+        let mut qm = QueueManager::new();
+        qm.enqueue(Class::Motorcycle, 1, 0.0);
+        qm.enqueue(Class::Motorcycle, 2, 0.0);
+        assert!(qm.dequeue(Class::Motorcycle, 2, 4.0)); // out of order OK
+        assert!(qm.dequeue(Class::Motorcycle, 1, 6.0));
+        assert!(!qm.dequeue(Class::Motorcycle, 1, 7.0));
+        let s = qm.stats(Class::Motorcycle);
+        assert_eq!(s.enqueued, 2);
+        assert_eq!(s.dequeued, 2);
+        assert!((s.avg_wait() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_length_tracked() {
+        let mut qm = QueueManager::new();
+        for i in 0..5 {
+            qm.enqueue(Class::Truck, i, 0.0);
+        }
+        for i in 0..5 {
+            qm.dequeue(Class::Truck, i, 1.0);
+        }
+        assert_eq!(qm.stats(Class::Truck).peak_len, 5);
+        assert!(qm.is_empty());
+    }
+}

@@ -1,0 +1,675 @@
+//! The continuous-batching scheduler: one vLLM-V1-style iteration loop
+//! shared by every policy (TCM-Serve and all baselines) and both engines
+//! (simulated and real).
+//!
+//! Each iteration (paper §3.1):
+//! 1. ingest arrivals → CPU preprocess pool → ready queue (classified by
+//!    the policy on readiness);
+//! 2. plan under a token budget: running decodes first, then ongoing
+//!    prefill chunks, then admissions in policy order (chunked prefill);
+//! 3. reserve KV blocks per item; on exhaustion preempt-by-recompute the
+//!    max-key (lowest-priority) running request — admission preemption is
+//!    policy-gated, decode-growth preemption always applies (vLLM
+//!    semantics);
+//! 4. execute the plan on the engine; advance time; emit tokens
+//!    (prefill-completing iterations emit the first token → TTFT).
+
+use crate::config::ServeConfig;
+use crate::coordinator::queues::QueueManager;
+use crate::coordinator::state::{Phase, ReqState};
+use crate::engine::kv_cache::KvCache;
+use crate::engine::{DecodeItem, EncodeItem, Engine, PrefillItem, StepPlan};
+use crate::metrics::Report;
+use crate::model::ModelProfile;
+use crate::policies::Policy;
+use crate::request::Request;
+use crate::sim::EventQueue;
+use std::collections::HashMap;
+
+/// How a KV reservation may obtain memory (see
+/// [`Scheduler::reserve_with_preemption`]).
+#[derive(Debug, Clone, Copy)]
+enum ReserveMode {
+    /// Running request growing/continuing: preempt lowest-priority others;
+    /// if alone and still too large, the request can never fit — drop.
+    Growth,
+    /// Admission for a policy that may preempt: victims must have strictly
+    /// worse keys than the candidate.
+    AdmitPreempting { cand_key: f64 },
+    /// Admission without preemption (vLLM FCFS): fail quietly.
+    AdmitPlain,
+}
+
+/// Aggregate counters for introspection and the perf benches.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub iterations: u64,
+    pub preemptions: u64,
+    pub dropped: u64,
+    /// Wall-clock seconds spent in planning (L3 overhead, §Perf).
+    pub planning_time_s: f64,
+    /// Virtual/wall seconds the engine was busy.
+    pub busy_time_s: f64,
+}
+
+/// The coordinator's scheduling core.
+pub struct Scheduler {
+    cfg: ServeConfig,
+    profile: ModelProfile,
+    policy: Box<dyn Policy>,
+    engine: Box<dyn Engine>,
+    kv: KvCache,
+
+    states: HashMap<u64, ReqState>,
+    waiting: Vec<u64>,
+    running: Vec<u64>,
+    queues: QueueManager,
+    preproc_free: Vec<f64>,
+    ready_events: EventQueue<u64>,
+    now: f64,
+
+    finished: Vec<u64>,
+    pub stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServeConfig, policy: Box<dyn Policy>, engine: Box<dyn Engine>) -> Scheduler {
+        let profile = crate::model::by_name(&cfg.model).expect("validated model name");
+        let capacity =
+            (profile.kv_capacity_tokens as f64 * cfg.memory_frac) as u64;
+        let kv = KvCache::new(capacity, cfg.scheduler.kv_block_tokens);
+        let preproc_free = vec![0.0; cfg.scheduler.preprocess_workers.max(1)];
+        Scheduler {
+            cfg,
+            profile,
+            policy,
+            engine,
+            kv,
+            states: HashMap::new(),
+            waiting: Vec::new(),
+            running: Vec::new(),
+            queues: QueueManager::new(),
+            preproc_free,
+            ready_events: EventQueue::new(),
+            now: 0.0,
+            finished: Vec::new(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
+    pub fn queue_manager(&self) -> &QueueManager {
+        &self.queues
+    }
+
+    pub fn engine(&self) -> &dyn Engine {
+        self.engine.as_ref()
+    }
+
+    pub fn engine_mut(&mut self) -> &mut dyn Engine {
+        self.engine.as_mut()
+    }
+
+    /// Run a full trace to completion and report outcomes.
+    pub fn run(&mut self, trace: Vec<Request>) -> Report {
+        let mut trace = trace;
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut idx = 0;
+
+        loop {
+            // 1. ingest arrivals due now
+            while idx < trace.len() && trace[idx].arrival <= self.now {
+                self.start_preprocess(trace[idx].clone());
+                idx += 1;
+            }
+            // 2. preprocess completions due now
+            while let Some((t, id)) = self.ready_events.pop_until(self.now) {
+                self.mark_ready(id, t);
+            }
+
+            let has_work = !self.waiting.is_empty() || !self.running.is_empty();
+            if !has_work {
+                match self.next_event_time(&trace, idx) {
+                    Some(t) => {
+                        self.now = self.now.max(t);
+                        continue;
+                    }
+                    None => break, // drained
+                }
+            }
+
+            // 3. plan
+            let t_plan = std::time::Instant::now();
+            let plan = self.build_plan();
+            self.stats.planning_time_s += t_plan.elapsed().as_secs_f64();
+
+            if plan.is_empty() {
+                // Everything schedulable is blocked; jump to the next
+                // external event, or drop the blocked tail if none exists.
+                match self.next_event_time(&trace, idx) {
+                    Some(t) => {
+                        self.now = self.now.max(t);
+                        continue;
+                    }
+                    None => {
+                        self.drop_blocked();
+                        if self.waiting.is_empty() && self.running.is_empty() {
+                            break;
+                        }
+                        continue;
+                    }
+                }
+            }
+
+            // 4. execute
+            let dt = self.engine.execute(&plan);
+            self.stats.busy_time_s += dt;
+            self.stats.iterations += 1;
+            self.now += dt;
+            self.apply_results(&plan);
+
+            // Troubleshooting aid: TCM_TRACE=2 dumps iterations 1000-1060.
+            if std::env::var_os("TCM_TRACE").map(|v| v == "2").unwrap_or(false)
+                && (1000..1060).contains(&self.stats.iterations)
+            {
+                let desc: Vec<String> = self
+                    .running
+                    .iter()
+                    .chain(self.waiting.iter())
+                    .map(|&id| {
+                        let s = &self.states[&id];
+                        format!(
+                            "r{id}[{:?} c={} d={} prompt={} key={:.10} vkey={:?} rdy={:.3} cls={:?}]",
+                            s.phase,
+                            s.cached_rows,
+                            s.decoded,
+                            s.req.prefill_tokens(),
+                            self.policy.order_key(s, self.now),
+                            self.policy.victim_key(s, self.now),
+                            s.ready_time,
+                            s.class,
+                        )
+                    })
+                    .collect();
+                eprintln!(
+                    "[it {}] plan: pf={:?} dec={:?} | {}",
+                    self.stats.iterations,
+                    plan.prefills
+                        .iter()
+                        .map(|p| (p.req_id, p.chunk_tokens))
+                        .collect::<Vec<_>>(),
+                    plan.decodes.iter().map(|d| d.req_id).collect::<Vec<_>>(),
+                    desc.join(" ")
+                );
+            }
+            // Troubleshooting aid: TCM_TRACE=1 dumps periodic state.
+            if self.stats.iterations % 100_000 == 0 && std::env::var_os("TCM_TRACE").is_some() {
+                eprintln!(
+                    "[tcm-trace] iter={} now={:.1} waiting={} running={} finished={} \
+                     dropped={} preempt={} kv_used={}/{} dt={dt:.6}",
+                    self.stats.iterations,
+                    self.now,
+                    self.waiting.len(),
+                    self.running.len(),
+                    self.finished.len(),
+                    self.stats.dropped,
+                    self.stats.preemptions,
+                    self.kv.used_blocks(),
+                    self.kv.total_blocks(),
+                );
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(self.finished.len());
+        for id in &self.finished {
+            outcomes.push(self.states[id].to_outcome());
+        }
+        Report::new(outcomes)
+    }
+
+    // -----------------------------------------------------------------
+    // arrival / readiness
+    // -----------------------------------------------------------------
+
+    fn start_preprocess(&mut self, req: Request) {
+        let slo = self.cfg.slo_scale * self.profile.isolated_e2e(&req);
+        let id = req.id;
+        let t_pre = self.profile.preprocess_time(&req);
+        self.states.insert(id, ReqState::new(req, slo));
+
+        // earliest-free CPU worker
+        let (w, _) = self
+            .preproc_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let arrival = self.states[&id].req.arrival;
+        let start = self.preproc_free[w].max(arrival);
+        let done = start + t_pre;
+        self.preproc_free[w] = done;
+        self.ready_events.schedule(done.max(self.now), id);
+    }
+
+    fn mark_ready(&mut self, id: u64, t: f64) {
+        let req = self.states[&id].req.clone();
+        let (class, impact) = self.policy.admit(&req);
+        let st = self.states.get_mut(&id).unwrap();
+        st.phase = Phase::Waiting;
+        st.ready_time = t;
+        st.first_enqueue = t;
+        st.class = class;
+        st.impact = impact;
+        self.waiting.push(id);
+        if let Some(c) = class {
+            self.queues.enqueue(c, id, t);
+        }
+    }
+
+    fn next_event_time(&self, trace: &[Request], idx: usize) -> Option<f64> {
+        let next_arrival = trace.get(idx).map(|r| r.arrival);
+        let next_ready = self.ready_events.peek_time();
+        match (next_arrival, next_ready) {
+            (Some(a), Some(r)) => Some(a.min(r)),
+            (Some(a), None) => Some(a),
+            (None, Some(r)) => Some(r),
+            (None, None) => None,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // planning
+    // -----------------------------------------------------------------
+
+    fn key(&self, id: u64) -> f64 {
+        self.policy.order_key(&self.states[&id], self.now)
+    }
+
+    fn vkey(&self, id: u64) -> (u8, f64) {
+        self.policy.victim_key(&self.states[&id], self.now)
+    }
+
+    fn build_plan(&mut self) -> StepPlan {
+        let mut plan = StepPlan::default();
+        let mut budget = self.cfg.scheduler.token_budget as u64;
+        // planned item index per request, for preemption surgery
+        let mut planned_decode: HashMap<u64, usize> = HashMap::new();
+        let mut planned_prefill: HashMap<u64, usize> = HashMap::new();
+
+        // Decorate-sort: compute each key once (policy key evaluation is
+        // a dyn call and, for TCM, an exp/log — O(n log n) comparator
+        // invocations tripled planning time before this, §Perf).
+        let mut order: Vec<(f64, u64)> =
+            self.running.iter().map(|&id| (self.key(id), id)).collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let order: Vec<u64> = order.into_iter().map(|(_, id)| id).collect();
+
+        // Phase 1: decodes
+        for id in order {
+            if self.states[&id].phase != Phase::Decoding {
+                continue;
+            }
+            if budget == 0 {
+                break;
+            }
+            let need = self.states[&id].kv_for_next_decode();
+            if !self.reserve_with_preemption(
+                id, need, ReserveMode::Growth, &mut plan, &mut budget,
+                &mut planned_decode, &mut planned_prefill,
+            ) {
+                continue; // self-preempted or dropped
+            }
+            let ctx = self.states[&id].cached_rows;
+            planned_decode.insert(id, plan.decodes.len());
+            plan.decodes.push(DecodeItem { req_id: id, ctx_tokens: ctx });
+            budget -= 1;
+        }
+
+        // Phase 2: prefill work — running continuations and waiting
+        // admissions compete in ONE policy-ordered pass (vLLM V1 priority
+        // scheduling is global: a waiting motorcycle outranks a running
+        // truck's next chunk).
+        let mut prefill_order: Vec<(f64, u64)> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| self.states[id].phase == Phase::Prefilling)
+            .chain(self.waiting.iter().copied())
+            .map(|id| (self.key(id), id))
+            .collect();
+        prefill_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let prefill_order: Vec<u64> = prefill_order.into_iter().map(|(_, id)| id).collect();
+
+        for id in prefill_order {
+            if budget == 0 {
+                break;
+            }
+            match self.states[&id].phase {
+                Phase::Prefilling => {
+                    let st = &self.states[&id];
+                    let chunk = (budget.min(st.prefill_remaining() as u64)) as u32;
+                    if chunk == 0 {
+                        continue;
+                    }
+                    let target = st.cached_rows + chunk;
+                    if !self.reserve_with_preemption(
+                        id, target, ReserveMode::Growth, &mut plan, &mut budget,
+                        &mut planned_decode, &mut planned_prefill,
+                    ) {
+                        continue;
+                    }
+                    let st = &self.states[&id];
+                    planned_prefill.insert(id, plan.prefills.len());
+                    plan.prefills.push(PrefillItem {
+                        req_id: id,
+                        ctx_before: st.cached_rows,
+                        chunk_tokens: chunk,
+                        last_chunk: st.cached_rows + chunk == st.prefill_target(),
+                        text_tokens: st.req.text_tokens,
+                        mm_tokens: st.req.mm_tokens,
+                        prefill_total: st.prefill_target(),
+                    });
+                    budget -= chunk as u64;
+                }
+                Phase::Waiting => {
+                    if self.running.len() >= self.cfg.scheduler.max_running {
+                        if self.policy.skip_blocked() {
+                            continue;
+                        } else {
+                            break;
+                        }
+                    }
+                    // Requests whose prompt can never fit are failed early.
+                    let prompt_need = self.states[&id].prefill_target() as u64 + 1;
+                    if prompt_need > self.kv.capacity_tokens() {
+                        self.drop_request(id);
+                        continue;
+                    }
+                    let st = &self.states[&id];
+                    let chunk = (budget.min(st.prefill_remaining() as u64)) as u32;
+                    if self.cfg.scheduler.atomic_prefill && chunk < st.prefill_remaining() {
+                        // whole-prompt-only engines: wait for a budget-
+                        // fresh iteration rather than splitting the prompt
+                        if self.policy.skip_blocked() {
+                            continue;
+                        } else {
+                            break;
+                        }
+                    }
+                    let mode = if self.policy.preempt_for_admission() {
+                        ReserveMode::AdmitPreempting { cand_key: self.key(id) }
+                    } else {
+                        ReserveMode::AdmitPlain
+                    };
+                    let ok = self.reserve_with_preemption(
+                        id, chunk, mode, &mut plan, &mut budget,
+                        &mut planned_decode, &mut planned_prefill,
+                    );
+                    if !ok {
+                        if self.policy.skip_blocked() {
+                            continue;
+                        } else {
+                            break;
+                        }
+                    }
+                    // admit
+                    self.waiting.retain(|&x| x != id);
+                    self.running.push(id);
+                    let now = self.now;
+                    let st = self.states.get_mut(&id).unwrap();
+                    st.phase = Phase::Prefilling;
+                    if let Some(t0) = st.preempted_at.take() {
+                        st.preempted_time += now - t0;
+                    }
+                    let class = st.class;
+                    let needs_encode = st.req.mm_tokens > 0 && !st.encoded;
+                    if needs_encode {
+                        st.encoded = true;
+                        plan.encodes.push(EncodeItem {
+                            req_id: id,
+                            modality: st.req.modality,
+                            mm_tokens: st.req.mm_tokens,
+                            video_duration_s: st.req.video_duration_s,
+                        });
+                    }
+                    let st = &self.states[&id];
+                    planned_prefill.insert(id, plan.prefills.len());
+                    plan.prefills.push(PrefillItem {
+                        req_id: id,
+                        ctx_before: st.cached_rows,
+                        chunk_tokens: chunk,
+                        last_chunk: st.cached_rows + chunk == st.prefill_target(),
+                        text_tokens: st.req.text_tokens,
+                        mm_tokens: st.req.mm_tokens,
+                        prefill_total: st.prefill_target(),
+                    });
+                    budget -= chunk as u64;
+                    if let Some(c) = class {
+                        self.queues.dequeue(c, id, self.now);
+                    }
+                }
+                _ => continue, // finished/preempted during this round
+            }
+        }
+
+        plan
+    }
+
+    /// Try to reserve `tokens` total KV rows for `id`, preempting max-key
+    /// (lowest-priority) running victims as the mode allows. Returns false
+    /// if the reservation ultimately failed (under `Growth` the requester
+    /// may have been self-preempted or dropped).
+    fn reserve_with_preemption(
+        &mut self,
+        id: u64,
+        tokens: u32,
+        mode: ReserveMode,
+        plan: &mut StepPlan,
+        budget: &mut u64,
+        planned_decode: &mut HashMap<u64, usize>,
+        planned_prefill: &mut HashMap<u64, usize>,
+    ) -> bool {
+        loop {
+            if self.kv.try_reserve(id, tokens) {
+                return true;
+            }
+            match mode {
+                ReserveMode::AdmitPlain => return false,
+                ReserveMode::AdmitPreempting { cand_key } => {
+                    // select by victim_key (class-aware policies evict
+                    // trucks first); gate on order_key so a candidate
+                    // never evicts someone more urgent than itself
+                    let victim = self
+                        .running
+                        .iter()
+                        .copied()
+                        .max_by(|&a, &b| self.vkey(a).partial_cmp(&self.vkey(b)).unwrap())
+                        .filter(|&v| self.key(v) > cand_key);
+                    match victim {
+                        Some(v) => {
+                            self.preempt(v, plan, budget, planned_decode, planned_prefill)
+                        }
+                        None => return false, // candidate stays queued
+                    }
+                }
+                ReserveMode::Growth => {
+                    // vLLM recompute semantics with a progress guarantee:
+                    // evict only strictly-worse-priority victims. If none
+                    // exists, the requester preempts ITSELF and waits for
+                    // the better-priority requests to finish — without the
+                    // strict gate, two half-prefilled requests whose
+                    // combined footprints exceed capacity evict each other
+                    // forever (live-lock). A requester alone in the cache
+                    // that still cannot fit can never fit: drop it.
+                    let my_key = self.vkey(id);
+                    let victim = self
+                        .running
+                        .iter()
+                        .copied()
+                        .filter(|&v| v != id)
+                        .max_by(|&a, &b| self.vkey(a).partial_cmp(&self.vkey(b)).unwrap())
+                        .filter(|&v| self.vkey(v) > my_key);
+                    match victim {
+                        Some(v) => {
+                            self.preempt(v, plan, budget, planned_decode, planned_prefill)
+                        }
+                        None => {
+                            let alone = self.running.iter().all(|&v| v == id);
+                            if alone {
+                                self.drop_request(id);
+                            } else if self.running.contains(&id) {
+                                self.preempt(id, plan, budget, planned_decode, planned_prefill);
+                            } else {
+                                // waiting requester (cannot happen today:
+                                // Growth is only used for running ids)
+                                return false;
+                            }
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Preempt-by-recompute: evict KV, undo planned items, requeue.
+    fn preempt(
+        &mut self,
+        id: u64,
+        plan: &mut StepPlan,
+        budget: &mut u64,
+        planned_decode: &mut HashMap<u64, usize>,
+        planned_prefill: &mut HashMap<u64, usize>,
+    ) {
+        // Undo planned work (plan surgery keeps indices valid by swapping
+        // with the last element and fixing its index entry).
+        if let Some(i) = planned_decode.remove(&id) {
+            plan.decodes.swap_remove(i);
+            if let Some(moved) = plan.decodes.get(i) {
+                planned_decode.insert(moved.req_id, i);
+            }
+            *budget += 1;
+        }
+        if let Some(i) = planned_prefill.remove(&id) {
+            let item = plan.prefills.swap_remove(i);
+            if let Some(moved) = plan.prefills.get(i) {
+                planned_prefill.insert(moved.req_id, i);
+            }
+            *budget += item.chunk_tokens as u64;
+        }
+        // Encodes are never undone: the encoder cache persists host-side.
+        self.kv.free(id);
+        self.engine.release(id);
+        self.running.retain(|&x| x != id);
+        let now = self.now;
+        let st = self.states.get_mut(&id).unwrap();
+        st.phase = Phase::Waiting;
+        st.cached_rows = 0;
+        st.encoded = false; // recompute drops the encoder cache too
+        st.preemptions += 1;
+        st.preempted_at = Some(now);
+        self.stats.preemptions += 1;
+        let class = st.class;
+        self.waiting.push(id);
+        if let Some(c) = class {
+            self.queues.enqueue(c, id, now);
+        }
+    }
+
+    /// Fail a request that can never be scheduled (prompt exceeds KV
+    /// capacity under the current memory budget).
+    fn drop_request(&mut self, id: u64) {
+        self.waiting.retain(|&x| x != id);
+        self.running.retain(|&x| x != id);
+        self.kv.free(id);
+        self.engine.release(id);
+        let st = self.states.get_mut(&id).unwrap();
+        if let Some(c) = st.class {
+            let now = self.now;
+            self.queues.dequeue(c, id, now);
+        }
+        st.phase = Phase::Finished;
+        self.stats.dropped += 1;
+    }
+
+    /// Drop every blocked waiting request (terminal starvation guard when
+    /// no future events exist).
+    fn drop_blocked(&mut self) {
+        for id in self.waiting.clone() {
+            self.drop_request(id);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // results
+    // -----------------------------------------------------------------
+
+    fn apply_results(&mut self, plan: &StepPlan) {
+        let now = self.now;
+        for item in &plan.prefills {
+            let st = self.states.get_mut(&item.req_id).unwrap();
+            st.cached_rows += item.chunk_tokens;
+            if item.last_chunk {
+                debug_assert_eq!(st.cached_rows, st.prefill_target());
+                st.phase = Phase::Decoding;
+                if st.first_token.is_none() {
+                    // the prefill-completing iteration computes the first
+                    // token's logits: TTFT is measured here
+                    st.first_token = Some(now);
+                    st.decoded = 1;
+                }
+                if st.decoded >= st.req.output_tokens {
+                    self.finish(item.req_id);
+                }
+            }
+        }
+        for item in &plan.decodes {
+            let st = self.states.get_mut(&item.req_id).unwrap();
+            st.decoded += 1;
+            st.cached_rows += 1; // the input token's KV row was written
+            if st.decoded >= st.req.output_tokens {
+                self.finish(item.req_id);
+            }
+        }
+    }
+
+    fn finish(&mut self, id: u64) {
+        let now = self.now;
+        let st = self.states.get_mut(&id).unwrap();
+        st.phase = Phase::Finished;
+        st.finish = Some(now);
+        self.kv.free(id);
+        self.engine.release(id);
+        self.running.retain(|&x| x != id);
+        self.finished.push(id);
+    }
+
+    /// Consistency invariants (exercised by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        for id in &self.waiting {
+            let p = self.states[id].phase;
+            if p != Phase::Waiting {
+                return Err(format!("waiting req {id} in phase {p:?}"));
+            }
+        }
+        for id in &self.running {
+            let p = self.states[id].phase;
+            if p != Phase::Prefilling && p != Phase::Decoding {
+                return Err(format!("running req {id} in phase {p:?}"));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,173 @@
+//! Per-request lifecycle state tracked by the scheduler.
+
+use crate::coordinator::estimator::Impact;
+use crate::request::{Class, Request};
+
+/// Lifecycle phase of a request inside the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// CPU preprocessing (image decode / frame extraction) in flight.
+    Preprocessing,
+    /// Ready and queued, not yet admitted (or re-queued after preemption).
+    Waiting,
+    /// Admitted; prefill chunks in progress.
+    Prefilling,
+    /// Prompt fully cached; decoding one token per iteration.
+    Decoding,
+    Finished,
+}
+
+/// Scheduler-side request state.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub req: Request,
+    pub phase: Phase,
+    /// Class from the active policy's classifier (None for baselines).
+    pub class: Option<Class>,
+    /// Impact estimate (None for baselines without estimators).
+    pub impact: Option<Impact>,
+    /// End-to-end latency SLO (seconds), = slo_scale × isolated E2E.
+    pub slo_latency: f64,
+    /// When CPU preprocessing finished and the request became schedulable.
+    pub ready_time: f64,
+    /// First time the request entered the waiting queue (aging baseline).
+    pub first_enqueue: f64,
+    /// Vision encode has run. Cleared on preemption-by-recompute (the
+    /// recompute path rebuilds everything, encoder output included).
+    pub encoded: bool,
+    /// KV rows currently cached for this request: prefill chunks plus one
+    /// row per decode step. Resets to 0 on preemption-by-recompute.
+    pub cached_rows: u32,
+    /// Output tokens emitted (the first token counts).
+    pub decoded: u32,
+    pub first_token: Option<f64>,
+    pub finish: Option<f64>,
+    pub preemptions: u32,
+    pub preempted_at: Option<f64>,
+    pub preempted_time: f64,
+}
+
+impl ReqState {
+    pub fn new(req: Request, slo_latency: f64) -> ReqState {
+        ReqState {
+            req,
+            phase: Phase::Preprocessing,
+            class: None,
+            impact: None,
+            slo_latency,
+            ready_time: 0.0,
+            first_enqueue: 0.0,
+            encoded: false,
+            cached_rows: 0,
+            decoded: 0,
+            first_token: None,
+            finish: None,
+            preemptions: 0,
+            preempted_at: None,
+            preempted_time: 0.0,
+        }
+    }
+
+    /// Age since the request first became schedulable (the regulator's
+    /// waiting time `w`).
+    #[inline]
+    pub fn waiting_time(&self, now: f64) -> f64 {
+        (now - self.first_enqueue).max(0.0)
+    }
+
+    /// Total prefill target in KV rows: the prompt, plus — after a
+    /// preemption-by-recompute — the already-emitted tokens except the
+    /// newest one (which becomes the next decode input, exactly as in
+    /// vLLM's recompute path).
+    #[inline]
+    pub fn prefill_target(&self) -> u32 {
+        self.req.prefill_tokens() + self.decoded.saturating_sub(1)
+    }
+
+    /// Remaining prefill rows to (re)build.
+    #[inline]
+    pub fn prefill_remaining(&self) -> u32 {
+        self.prefill_target().saturating_sub(self.cached_rows)
+    }
+
+    /// KV rows needed for the next decode step (writes one new row).
+    #[inline]
+    pub fn kv_for_next_decode(&self) -> u32 {
+        self.cached_rows + 1
+    }
+
+    /// EDF's absolute deadline.
+    #[inline]
+    pub fn deadline(&self) -> f64 {
+        self.req.arrival + self.slo_latency
+    }
+
+    pub fn to_outcome(&self) -> crate::metrics::Outcome {
+        crate::metrics::Outcome {
+            id: self.req.id,
+            modality: self.req.modality,
+            class: self.class,
+            arrival: self.req.arrival,
+            first_token: self.first_token.expect("finished request lacks first token"),
+            finish: self.finish.expect("unfinished request"),
+            output_tokens: self.req.output_tokens,
+            slo_latency: self.slo_latency,
+            preemptions: self.preemptions,
+            preempted_time: self.preempted_time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Modality;
+
+    fn state() -> ReqState {
+        ReqState::new(
+            Request {
+                id: 1,
+                arrival: 2.0,
+                modality: Modality::Image,
+                text_tokens: 40,
+                mm_tokens: 729,
+                video_duration_s: 0.0,
+                output_tokens: 50,
+            },
+            10.0,
+        )
+    }
+
+    #[test]
+    fn prefill_accounting() {
+        let mut s = state();
+        assert_eq!(s.prefill_target(), 769);
+        s.cached_rows = 500;
+        assert_eq!(s.prefill_remaining(), 269);
+        // decode path: after prefill completes and the first token is out
+        s.cached_rows = 769;
+        s.decoded = 1;
+        assert_eq!(s.kv_for_next_decode(), 770);
+        // three more decode steps write three rows
+        s.cached_rows = 772;
+        s.decoded = 4;
+        assert_eq!(s.kv_for_next_decode(), 773);
+        // preempted: rebuild prompt + decoded-1 rows
+        s.cached_rows = 0;
+        assert_eq!(s.prefill_target(), 772);
+        assert_eq!(s.prefill_remaining(), 772);
+    }
+
+    #[test]
+    fn deadline_is_arrival_plus_slo() {
+        assert_eq!(state().deadline(), 12.0);
+    }
+
+    #[test]
+    fn waiting_time_clamped() {
+        let mut s = state();
+        s.first_enqueue = 5.0;
+        assert_eq!(s.waiting_time(9.0), 4.0);
+        assert_eq!(s.waiting_time(3.0), 0.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Paged KV-cache manager (vLLM-style block allocator).
+//!
+//! The GPU KV cache is divided into fixed-size blocks of
+//! `block_tokens` tokens; each request owns ceil(tokens / block_tokens)
+//! blocks. The scheduler reserves capacity *before* scheduling prefill
+//! chunks or decode steps and preempts (frees) requests when reservation
+//! fails — exactly the resource the paper's trucks monopolize under
+//! memory pressure (§2.4).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Alloc {
+    blocks: u64,
+    tokens: u32,
+}
+
+/// Block-granular KV-cache accounting for one device.
+#[derive(Debug)]
+pub struct KvCache {
+    block_tokens: u32,
+    total_blocks: u64,
+    free_blocks: u64,
+    allocs: HashMap<u64, Alloc>,
+    /// High-water mark of used blocks (for reporting).
+    peak_used_blocks: u64,
+}
+
+impl KvCache {
+    /// `capacity_tokens` rounds *down* to whole blocks (a partial block is
+    /// unusable).
+    pub fn new(capacity_tokens: u64, block_tokens: u32) -> KvCache {
+        assert!(block_tokens > 0);
+        KvCache {
+            block_tokens,
+            total_blocks: capacity_tokens / block_tokens as u64,
+            free_blocks: capacity_tokens / block_tokens as u64,
+            allocs: HashMap::new(),
+            peak_used_blocks: 0,
+        }
+    }
+
+    fn blocks_for(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_tokens as u64)
+    }
+
+    /// Grow (or create) request `id`'s allocation to cover `tokens` total
+    /// tokens. Returns false (and changes nothing) if the cache lacks
+    /// free blocks. Shrinking is not supported (KV never shrinks while a
+    /// request lives).
+    pub fn try_reserve(&mut self, id: u64, tokens: u32) -> bool {
+        let cur = self.allocs.get(&id).copied().unwrap_or(Alloc { blocks: 0, tokens: 0 });
+        let need = self.blocks_for(tokens.max(cur.tokens));
+        let extra = need.saturating_sub(cur.blocks);
+        if extra > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= extra;
+        self.allocs.insert(id, Alloc { blocks: need, tokens: tokens.max(cur.tokens) });
+        let used = self.total_blocks - self.free_blocks;
+        self.peak_used_blocks = self.peak_used_blocks.max(used);
+        true
+    }
+
+    /// Whether `tokens` total for request `id` would fit right now.
+    pub fn can_reserve(&self, id: u64, tokens: u32) -> bool {
+        let cur = self.allocs.get(&id).copied().unwrap_or(Alloc { blocks: 0, tokens: 0 });
+        let need = self.blocks_for(tokens.max(cur.tokens));
+        need.saturating_sub(cur.blocks) <= self.free_blocks
+    }
+
+    /// Release all blocks of request `id` (completion or preemption-by-
+    /// recompute). No-op if unknown.
+    pub fn free(&mut self, id: u64) {
+        if let Some(a) = self.allocs.remove(&id) {
+            self.free_blocks += a.blocks;
+        }
+    }
+
+    pub fn tokens_of(&self, id: u64) -> u32 {
+        self.allocs.get(&id).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.total_blocks - self.free_blocks
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        self.free_blocks * self.block_tokens as u64
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.total_blocks
+    }
+
+    /// Usable capacity in tokens (whole blocks).
+    pub fn capacity_tokens(&self) -> u64 {
+        self.total_blocks * self.block_tokens as u64
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    pub fn peak_utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.peak_used_blocks as f64 / self.total_blocks as f64
+    }
+
+    /// Internal consistency: free + Σ per-request blocks == total.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let owned: u64 = self.allocs.values().map(|a| a.blocks).sum();
+        if owned + self.free_blocks != self.total_blocks {
+            return Err(format!(
+                "block leak: owned={owned} free={} total={}",
+                self.free_blocks, self.total_blocks
+            ));
+        }
+        for (id, a) in &self.allocs {
+            if self.blocks_for(a.tokens) != a.blocks {
+                return Err(format!(
+                    "req {id}: tokens={} needs {} blocks but owns {}",
+                    a.tokens,
+                    self.blocks_for(a.tokens),
+                    a.blocks
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite as pt;
+
+    #[test]
+    fn reserve_and_free_roundtrip() {
+        let mut kv = KvCache::new(1600, 16); // 100 blocks
+        assert!(kv.try_reserve(1, 100)); // 7 blocks
+        assert_eq!(kv.used_blocks(), 7);
+        assert!(kv.try_reserve(1, 200)); // grow to 13 blocks
+        assert_eq!(kv.used_blocks(), 13);
+        kv.free(1);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_fails_without_side_effects() {
+        let mut kv = KvCache::new(160, 16); // 10 blocks
+        assert!(kv.try_reserve(1, 100)); // 7 blocks
+        assert!(!kv.try_reserve(2, 100)); // needs 7, only 3 free
+        assert_eq!(kv.used_blocks(), 7);
+        assert!(kv.try_reserve(2, 48)); // 3 blocks fits exactly
+        assert_eq!(kv.used_blocks(), 10);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn growth_within_block_is_free() {
+        let mut kv = KvCache::new(160, 16);
+        assert!(kv.try_reserve(1, 1));
+        assert_eq!(kv.used_blocks(), 1);
+        assert!(kv.try_reserve(1, 16)); // same block
+        assert_eq!(kv.used_blocks(), 1);
+        assert!(kv.try_reserve(1, 17)); // second block
+        assert_eq!(kv.used_blocks(), 2);
+    }
+
+    #[test]
+    fn shrink_requests_keep_allocation() {
+        let mut kv = KvCache::new(160, 16);
+        assert!(kv.try_reserve(1, 64));
+        assert!(kv.try_reserve(1, 32)); // no shrink
+        assert_eq!(kv.tokens_of(1), 64);
+    }
+
+    #[test]
+    fn partial_trailing_capacity_is_unusable() {
+        let kv = KvCache::new(100, 16); // 6 blocks, 4 tokens wasted
+        assert_eq!(kv.total_blocks(), 6);
+        assert_eq!(kv.free_tokens(), 96);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut kv = KvCache::new(160, 16);
+        kv.try_reserve(1, 96);
+        kv.free(1);
+        kv.try_reserve(2, 16);
+        assert_eq!(kv.used_blocks(), 1);
+        assert!((kv.peak_utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_no_leaks_under_random_ops() {
+        pt::run(150, |g| {
+            let mut kv = KvCache::new(g.u64_in(64, 4096), 16);
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..g.usize_in(1, 120) {
+                if g.bool() || live.is_empty() {
+                    let id = step as u64;
+                    if kv.try_reserve(id, g.u64_in(1, 800) as u32) {
+                        live.push(id);
+                    }
+                } else {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let id = live.swap_remove(idx);
+                    if g.bool() {
+                        // grow before free sometimes
+                        let t = kv.tokens_of(id);
+                        let _ = kv.try_reserve(id, t + g.u64_in(1, 64) as u32);
+                    }
+                    kv.free(id);
+                }
+                kv.check_invariants().map_err(|e| format!("step {step}: {e}"))?;
+            }
+            for id in live {
+                kv.free(id);
+            }
+            if kv.used_blocks() != 0 {
+                return Err("blocks leaked after freeing everything".into());
+            }
+            kv.check_invariants()
+        });
+    }
+}

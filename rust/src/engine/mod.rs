@@ -1,0 +1,91 @@
+//! Execution engines: the device abstraction under the coordinator.
+//!
+//! The coordinator emits one [`StepPlan`] per scheduling iteration
+//! (vLLM-V1-style continuous batching: encode + prefill chunks + decode
+//! batch) and the engine reports how long the iteration took:
+//!
+//! * [`sim_engine::SimEngine`] — charges the calibrated cost model of a
+//!   [`crate::model::ModelProfile`] in virtual time; this is what all
+//!   paper-scale experiments run on.
+//! * [`real::RealEngine`] — executes the TinyMLLM's AOT artifacts through
+//!   PJRT (see `crate::runtime`) and reports wall time; this proves the
+//!   identical coordinator drives real model execution.
+
+pub mod kv_cache;
+pub mod real;
+pub mod sim_engine;
+
+use crate::request::Modality;
+
+/// Vision-encoder work for a request being admitted this iteration.
+#[derive(Debug, Clone)]
+pub struct EncodeItem {
+    pub req_id: u64,
+    pub modality: Modality,
+    pub mm_tokens: u32,
+    pub video_duration_s: f64,
+}
+
+/// One chunk of prefill work (chunked prefill: `ctx_before` tokens are
+/// already cached, this iteration processes `chunk_tokens` more).
+#[derive(Debug, Clone)]
+pub struct PrefillItem {
+    pub req_id: u64,
+    pub ctx_before: u32,
+    pub chunk_tokens: u32,
+    /// True when this chunk completes the prompt — the iteration emits
+    /// the request's first token.
+    pub last_chunk: bool,
+    /// Text tokens of the prompt (the suffix after any vision tokens);
+    /// the real engine needs the split to build embeddings.
+    pub text_tokens: u32,
+    /// Vision tokens of the whole prompt (0 for text). The simulator
+    /// amortizes the encoder's throughput cost across prefill chunks in
+    /// proportion to `chunk_tokens / prefill_total` — modeling vLLM V1's
+    /// per-iteration encoder budget, which tiles multimodal encoding
+    /// alongside chunked prefill instead of blocking a whole iteration.
+    pub mm_tokens: u32,
+    /// Total prompt tokens (the amortization denominator).
+    pub prefill_total: u32,
+}
+
+/// One running sequence decoding a single token this iteration.
+#[derive(Debug, Clone)]
+pub struct DecodeItem {
+    pub req_id: u64,
+    /// Tokens in the KV cache before this step.
+    pub ctx_tokens: u32,
+}
+
+/// Work selected for one scheduling iteration.
+#[derive(Debug, Clone, Default)]
+pub struct StepPlan {
+    pub encodes: Vec<EncodeItem>,
+    pub prefills: Vec<PrefillItem>,
+    pub decodes: Vec<DecodeItem>,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.encodes.is_empty() && self.prefills.is_empty() && self.decodes.is_empty()
+    }
+
+    /// Total new tokens processed (budget accounting).
+    pub fn token_count(&self) -> u64 {
+        self.prefills.iter().map(|p| p.chunk_tokens as u64).sum::<u64>()
+            + self.decodes.len() as u64
+    }
+}
+
+/// A device executing iteration plans.
+pub trait Engine {
+    /// Execute the plan; return the iteration duration in seconds
+    /// (virtual for simulation, wall-clock for real execution).
+    fn execute(&mut self, plan: &StepPlan) -> f64;
+
+    /// Called when a request finishes or is preempted-by-recompute so the
+    /// engine can drop per-request state (KV literals etc.).
+    fn release(&mut self, req_id: u64);
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,289 @@
+//! Real execution engine: drives the TinyMLLM AOT artifacts through PJRT.
+//!
+//! Proves the three-layer contract end-to-end: the *same coordinator and
+//! policies* that run on the simulator produce [`StepPlan`]s that this
+//! engine executes against actual compiled HLO (whose attention is the L1
+//! Pallas kernel). Iteration durations are measured wall time.
+//!
+//! Static-shape bucketing (DESIGN.md §5): prompts pad to the enclosing
+//! prefill bucket, vision patches to the enclosing encoder bucket, decode
+//! batches to the enclosing batch bucket. Synthetic prompt content (token
+//! ids / pixel patches) derives deterministically from the request id —
+//! the workload model specifies only token *counts*.
+//!
+//! Chunked prefill note: the TinyMLLM prefill artifact processes a whole
+//! prompt (≤ 512 tokens) in one call, so the coordinator must be run with
+//! a token budget ≥ the longest tiny-model prompt. Chunked prefill
+//! semantics are exercised on the simulator, whose cost model charges
+//! per-chunk.
+
+use super::{Engine, StepPlan};
+use crate::runtime::{literal_f32, Input, Runtime};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Per-request device-path state.
+struct ReqExec {
+    /// Prompt embeddings [prefill_tokens, d_model] (vision prefix + text).
+    embeds: Vec<f32>,
+    /// Vision embedding rows already computed (encode ran).
+    vision_rows: usize,
+    /// KV cache [n_layers, 2, n_heads, max_seq, head_dim] after prefill.
+    kv: Option<Vec<f32>>,
+    /// Tokens cached so far (prompt + decoded).
+    length: usize,
+    /// Last emitted token (input to the next decode step).
+    last_token: i32,
+    /// All generated tokens (observability; greedy argmax).
+    generated: Vec<i32>,
+}
+
+/// PJRT-backed engine over the artifacts in `artifacts/`.
+pub struct RealEngine {
+    rt: Runtime,
+    reqs: HashMap<u64, ReqExec>,
+    d_model: usize,
+    /// Emitted tokens per request, exposed for tests/examples.
+    pub outputs: HashMap<u64, Vec<i32>>,
+}
+
+impl RealEngine {
+    pub fn new(rt: Runtime) -> RealEngine {
+        let d_model = rt.manifest.hparams.d_model;
+        RealEngine { rt, reqs: HashMap::new(), d_model, outputs: HashMap::new() }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn state(&mut self, id: u64) -> &mut ReqExec {
+        self.reqs.entry(id).or_insert_with(|| ReqExec {
+            embeds: Vec::new(),
+            vision_rows: 0,
+            kv: None,
+            length: 0,
+            last_token: 0,
+            generated: Vec::new(),
+        })
+    }
+
+    /// Deterministic synthetic pixel patches for a request.
+    fn synth_patches(id: u64, n: usize, patch_dim: usize) -> Vec<f32> {
+        let mut rng = Rng::new(id.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x1A6E);
+        (0..n * patch_dim).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    /// Deterministic synthetic text token ids for a request.
+    fn synth_text(id: u64, n: usize, vocab: usize) -> Vec<i32> {
+        let mut rng = Rng::new(id.wrapping_mul(0xD1B54A32D192ED03) ^ 0x7E47);
+        (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    fn run_encode(&mut self, item: &super::EncodeItem) -> Result<()> {
+        let hp = self.rt.manifest.hparams.clone();
+        let n = item.mm_tokens as usize;
+        let bucket = Runtime::bucket_for(&hp.encoder_buckets, n)
+            .ok_or_else(|| anyhow!("mm_tokens {n} exceeds encoder buckets"))?;
+        let mut pixels = Self::synth_patches(item.req_id, n, hp.patch_dim);
+        pixels.resize(bucket * hp.patch_dim, 0.0);
+        let out = self
+            .rt
+            .execute(&format!("encoder_{bucket}"), &[Input::F32(&pixels, vec![bucket, hp.patch_dim])])
+            .context("encoder")?;
+        let rows = literal_f32(&out[0])?;
+        let st = self.state(item.req_id);
+        st.embeds.clear();
+        st.embeds.extend_from_slice(&rows[..n * hp.d_model]);
+        st.vision_rows = n;
+        Ok(())
+    }
+
+    fn run_prefill(&mut self, item: &super::PrefillItem) -> Result<()> {
+        if !item.last_chunk || item.ctx_before != 0 {
+            bail!(
+                "RealEngine requires single-chunk prefill (req {}: ctx_before={} last={})",
+                item.req_id,
+                item.ctx_before,
+                item.last_chunk
+            );
+        }
+        let hp = self.rt.manifest.hparams.clone();
+        let total = item.chunk_tokens as usize;
+        let text_n = item.text_tokens as usize;
+        let bucket = Runtime::bucket_for(&hp.prefill_buckets, total)
+            .ok_or_else(|| anyhow!("prompt {total} exceeds prefill buckets"))?;
+
+        // Text embeddings via the embed artifact (padded ids).
+        let mut ids = Self::synth_text(item.req_id, text_n, hp.vocab);
+        ids.resize(bucket, 0);
+        let out = self
+            .rt
+            .execute(&format!("embed_{bucket}"), &[Input::I32(&ids, vec![bucket])])
+            .context("embed")?;
+        let text_emb = literal_f32(&out[0])?;
+
+        let d = self.d_model;
+        let st = self.state(item.req_id);
+        let vision_rows = st.vision_rows;
+        if vision_rows + text_n != total {
+            bail!(
+                "req {}: vision {} + text {} != prompt {}",
+                item.req_id,
+                vision_rows,
+                text_n,
+                total
+            );
+        }
+        // Prompt buffer = vision prefix ++ text rows, padded to bucket.
+        let mut embeds = st.embeds.clone();
+        embeds.extend_from_slice(&text_emb[..text_n * d]);
+        embeds.resize(bucket * d, 0.0);
+
+        let out = self
+            .rt
+            .execute(
+                &format!("prefill_{bucket}"),
+                &[Input::F32(&embeds, vec![bucket, d]), Input::ScalarI32(total as i32)],
+            )
+            .context("prefill")?;
+        let logits = literal_f32(&out[0])?;
+        let kv = literal_f32(&out[1])?;
+        let tok = argmax(&logits) as i32;
+
+        let st = self.state(item.req_id);
+        st.kv = Some(kv);
+        st.length = total;
+        st.last_token = tok;
+        st.generated.push(tok);
+        st.embeds = Vec::new(); // prompt embeddings no longer needed
+        self.outputs.entry(item.req_id).or_default().push(tok);
+        Ok(())
+    }
+
+    fn run_decodes(&mut self, items: &[super::DecodeItem]) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let hp = self.rt.manifest.hparams.clone();
+        let kv_elems = hp.kv_elems();
+        // Split the decode set into bucket-sized groups.
+        for group in items.chunks(*hp.decode_buckets.iter().max().unwrap()) {
+            let bucket = Runtime::bucket_for(&hp.decode_buckets, group.len())
+                .ok_or_else(|| anyhow!("decode group {} exceeds buckets", group.len()))?;
+            let mut ids = vec![0i32; bucket];
+            let mut lengths = vec![0i32; bucket];
+            let mut kv = vec![0f32; bucket * kv_elems];
+            for (slot, it) in group.iter().enumerate() {
+                let st = self
+                    .reqs
+                    .get(&it.req_id)
+                    .ok_or_else(|| anyhow!("decode for unknown req {}", it.req_id))?;
+                let st_kv = st
+                    .kv
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("decode before prefill (req {})", it.req_id))?;
+                ids[slot] = st.last_token;
+                lengths[slot] = st.length as i32;
+                kv[slot * kv_elems..(slot + 1) * kv_elems].copy_from_slice(st_kv);
+            }
+            let kv_dims = vec![bucket, hp.n_layers, 2, hp.n_heads, hp.max_seq, hp.head_dim];
+            let out = self
+                .rt
+                .execute(
+                    &format!("decode_{bucket}"),
+                    &[
+                        Input::I32(&ids, vec![bucket]),
+                        Input::F32(&kv, kv_dims),
+                        Input::I32(&lengths, vec![bucket]),
+                    ],
+                )
+                .context("decode")?;
+            let logits = literal_f32(&out[0])?;
+            let new_kv = literal_f32(&out[1])?;
+            for (slot, it) in group.iter().enumerate() {
+                let tok = argmax(&logits[slot * hp.vocab..(slot + 1) * hp.vocab]) as i32;
+                let st = self.reqs.get_mut(&it.req_id).unwrap();
+                st.kv
+                    .as_mut()
+                    .unwrap()
+                    .copy_from_slice(&new_kv[slot * kv_elems..(slot + 1) * kv_elems]);
+                st.length += 1;
+                st.last_token = tok;
+                st.generated.push(tok);
+                self.outputs.entry(it.req_id).or_default().push(tok);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fallible step execution (Engine::execute unwraps; examples may call
+    /// this directly for error reporting).
+    pub fn try_execute(&mut self, plan: &StepPlan) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        for e in &plan.encodes {
+            self.run_encode(e)?;
+        }
+        for p in &plan.prefills {
+            self.run_prefill(p)?;
+        }
+        self.run_decodes(&plan.decodes)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Generated tokens of a request so far.
+    pub fn generated(&self, id: u64) -> Option<&[i32]> {
+        self.reqs.get(&id).map(|r| r.generated.as_slice())
+    }
+}
+
+impl Engine for RealEngine {
+    fn execute(&mut self, plan: &StepPlan) -> f64 {
+        self.try_execute(plan).expect("RealEngine step failed")
+    }
+
+    fn release(&mut self, req_id: u64) {
+        self.reqs.remove(&req_id);
+    }
+
+    fn name(&self) -> &'static str {
+        "real-pjrt"
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn synth_inputs_deterministic() {
+        let a = RealEngine::synth_text(7, 16, 512);
+        let b = RealEngine::synth_text(7, 16, 512);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..512).contains(&t)));
+        let c = RealEngine::synth_text(8, 16, 512);
+        assert_ne!(a, c);
+
+        let p = RealEngine::synth_patches(7, 4, 48);
+        assert_eq!(p.len(), 4 * 48);
+        assert_eq!(p, RealEngine::synth_patches(7, 4, 48));
+    }
+}

@@ -1,0 +1,161 @@
+//! Reusable experiment drivers: every figure bench, the CLI and the
+//! examples run simulations through these helpers so setups are identical
+//! (and reproducible from the seeds recorded in EXPERIMENTS.md).
+
+use crate::config::ServeConfig;
+use crate::coordinator::{SchedStats, Scheduler};
+use crate::engine::sim_engine::SimEngine;
+use crate::metrics::Report;
+use crate::model::ModelProfile;
+use crate::policies::build_policy;
+use crate::request::Request;
+use crate::workload::{Mix, WorkloadGen};
+
+/// Outcome of one simulated serving run.
+pub struct RunResult {
+    pub report: Report,
+    pub stats: SchedStats,
+    /// Virtual seconds the run spanned.
+    pub makespan: f64,
+}
+
+/// Generate the trace a config describes (same seed ⇒ same trace, so
+/// policies compete on identical arrival sequences).
+pub fn make_trace(cfg: &ServeConfig, profile: &ModelProfile) -> Vec<Request> {
+    let mix = Mix::by_name(&cfg.mix).expect("validated mix");
+    WorkloadGen::new(profile, mix, cfg.rate, cfg.seed).generate(cfg.num_requests)
+}
+
+/// Run one simulated serving experiment under `cfg`.
+pub fn run_sim(cfg: &ServeConfig) -> RunResult {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model");
+    let trace = make_trace(cfg, &profile);
+    run_sim_with_trace(cfg, trace)
+}
+
+/// Run a simulation over an explicit trace (A/B policy comparisons).
+pub fn run_sim_with_trace(cfg: &ServeConfig, trace: Vec<Request>) -> RunResult {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model");
+    let policy = build_policy(cfg, &profile);
+    let engine = Box::new(SimEngine::new(&profile));
+    let mut sched = Scheduler::new(cfg.clone(), policy, engine);
+    let report = sched.run(trace);
+    RunResult { makespan: sched.now(), stats: sched.stats.clone(), report }
+}
+
+/// Goodput (Fig 15): the maximum request rate sustaining
+/// `attainment` SLO compliance (DistServe-style, default 0.9), found by
+/// doubling + bisection over simulated runs.
+pub fn goodput(base: &ServeConfig, attainment: f64, n_requests: usize) -> f64 {
+    let meets = |rate: f64| -> bool {
+        let mut cfg = base.clone();
+        cfg.rate = rate;
+        cfg.num_requests = n_requests;
+        let r = run_sim(&cfg);
+        let total = r.report.outcomes.len();
+        if total == 0 {
+            return false;
+        }
+        // dropped requests count as violations
+        let ok = r
+            .report
+            .outcomes
+            .iter()
+            .filter(|o| !o.violates_slo())
+            .count();
+        ok as f64 / (total + r.stats.dropped as usize) as f64 >= attainment
+    };
+
+    // exponential search for an upper bound
+    let mut lo = 0.0;
+    let mut hi = 0.25;
+    while meets(hi) {
+        lo = hi;
+        hi *= 2.0;
+        if hi > 64.0 {
+            return hi; // effectively unbounded at this scale
+        }
+    }
+    // bisect
+    for _ in 0..7 {
+        let mid = 0.5 * (lo + hi);
+        if meets(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Modality;
+
+    fn cfg(policy: &str) -> ServeConfig {
+        let mut c = ServeConfig::default();
+        c.policy = policy.into();
+        c.num_requests = 150;
+        c.rate = 2.0;
+        c.seed = 7;
+        c
+    }
+
+    #[test]
+    fn fcfs_completes_all_requests() {
+        let r = run_sim(&cfg("fcfs"));
+        assert_eq!(r.report.outcomes.len() + r.stats.dropped as usize, 150);
+        assert!(r.stats.dropped <= 2);
+        assert!(r.makespan > 0.0);
+        // every outcome well-formed
+        for o in &r.report.outcomes {
+            assert!(o.first_token >= o.arrival, "ttft before arrival");
+            assert!(o.finish >= o.first_token);
+        }
+    }
+
+    #[test]
+    fn all_policies_run_same_trace() {
+        for p in ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"] {
+            let r = run_sim(&cfg(p));
+            assert!(
+                r.report.outcomes.len() + r.stats.dropped as usize == 150,
+                "{p}: {} + {}",
+                r.report.outcomes.len(),
+                r.stats.dropped
+            );
+        }
+    }
+
+    #[test]
+    fn tcm_beats_fcfs_on_text_ttft_under_mh() {
+        // the paper's headline direction (Fig 10)
+        let fcfs = run_sim(&cfg("fcfs"));
+        let tcm = run_sim(&cfg("tcm"));
+        let f = fcfs.report.by_modality(Modality::Text).avg_ttft;
+        let t = tcm.report.by_modality(Modality::Text).avg_ttft;
+        assert!(t < f, "tcm text ttft {t} !< fcfs {f}");
+    }
+
+    #[test]
+    fn t0_workload_is_fast_for_everyone() {
+        let mut c = cfg("fcfs");
+        c.mix = "T0".into();
+        let r = run_sim(&c);
+        let s = r.report.overall();
+        assert!(s.slo_violation_rate < 0.05, "{}", s.slo_violation_rate);
+        assert!(s.avg_ttft < 1.0, "{}", s.avg_ttft);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = run_sim(&cfg("tcm"));
+        let b = run_sim(&cfg("tcm"));
+        assert_eq!(a.report.outcomes.len(), b.report.outcomes.len());
+        assert_eq!(a.makespan, b.makespan);
+        for (x, y) in a.report.outcomes.iter().zip(&b.report.outcomes) {
+            assert_eq!(x.first_token, y.first_token);
+        }
+    }
+}

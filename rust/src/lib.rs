@@ -1,0 +1,42 @@
+//! # TCM-Serve
+//!
+//! A modality-aware scheduling framework for multimodal LLM inference —
+//! a full-system reproduction of *"Rocks, Pebbles and Sand: Modality-aware
+//! Scheduling for Multimodal Large Language Model Inference"* (TCM-Serve).
+//!
+//! The paper's insight: multimodal requests differ by orders of magnitude
+//! in prefill time and KV-cache footprint — videos behave like *trucks*,
+//! images like *cars*, text like *motorcycles*. TCM-Serve classifies
+//! requests by estimated resource impact, queues them per class, and
+//! schedules with dynamic priorities (static class order + aging) so
+//! motorcycles flow through without starving trucks.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3 (this crate)** — coordinator: classifier, queues, priority
+//!   regulator, chunked-prefill continuous batching, paged KV cache,
+//!   plus every baseline the paper evaluates against.
+//! * **L2 (python/compile/model.py)** — a tiny-but-real MLLM in JAX,
+//!   AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention kernel
+//!   (the prefill hot spot), interpret-mode lowered into the same HLO.
+//!
+//! Entry points: [`coordinator::Coordinator`] drives an [`engine::Engine`]
+//! (simulated cost-model engine or the PJRT-backed real engine) over a
+//! [`workload::WorkloadGen`] stream under a [`config::ServeConfig`].
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod policies;
+pub mod report;
+pub mod request;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub mod experiments;

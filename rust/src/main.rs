@@ -1,0 +1,174 @@
+//! tcm-serve — the launcher.
+//!
+//! Subcommands:
+//!   simulate   run a simulated serving experiment and print the report
+//!   serve      drive the RealEngine (PJRT, TinyMLLM artifacts) over a
+//!              generated workload and report wall-clock metrics
+//!   profile    run the offline Workload Profiler for a model
+//!   goodput    search the max sustainable rate at 90% SLO attainment
+//!   trace      generate a workload trace file for later replay
+//!
+//! Config precedence: defaults (paper §4.1) < --config file.toml < flags.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::profiler::Profiler;
+use tcm_serve::coordinator::Scheduler;
+use tcm_serve::experiments;
+use tcm_serve::policies::build_policy;
+use tcm_serve::report;
+use tcm_serve::request::Modality;
+use tcm_serve::util::cli::Parser;
+
+fn parser() -> Parser {
+    Parser::new("tcm-serve", "modality-aware scheduling for multimodal LLM inference")
+        .subcommand("simulate", "simulated serving experiment (cost-model engine)")
+        .subcommand("serve", "real serving over the PJRT TinyMLLM artifacts")
+        .subcommand("profile", "offline workload profiling for a model")
+        .subcommand("goodput", "max sustainable rate at 90% SLO attainment")
+        .subcommand("trace", "generate a workload trace file")
+        .option("config", "TOML config file")
+        .option("model", "model profile (Table 1 name or tiny-mllm)")
+        .option("mix", "workload mix: T0 | ML | MH")
+        .option("policy", "fcfs | edf | naive-class | static-priority | naive-aging | tcm")
+        .option("rate", "Poisson arrival rate, req/s")
+        .option("requests", "number of requests")
+        .option("seed", "workload seed")
+        .option("slo-scale", "SLO = scale x isolated e2e latency")
+        .option("memory-frac", "fraction of KV capacity available")
+        .option("token-budget", "chunked-prefill token budget per iteration")
+        .option("out", "output path (trace subcommand)")
+        .option("artifacts", "artifacts directory (serve subcommand)")
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parser().parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let doc = match tcm_serve::config::toml::Doc::load(std::path::Path::new(path)) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("failed to read config {path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        if let Err(e) = cfg.apply_doc(&doc) {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if let Err(e) = cfg.apply_args(&args) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+
+    match args.subcommand.as_deref() {
+        Some("simulate") | None => cmd_simulate(&cfg),
+        Some("serve") => cmd_serve(&mut cfg, args.get("artifacts")),
+        Some("profile") => cmd_profile(&cfg),
+        Some("goodput") => cmd_goodput(&cfg),
+        Some("trace") => cmd_trace(&cfg, args.get_or("out", "workload.trace")),
+        Some(other) => {
+            eprintln!("unknown subcommand {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_simulate(cfg: &ServeConfig) {
+    println!(
+        "simulate: model={} mix={} policy={} rate={} requests={} seed={} slo={}x mem={:.0}%",
+        cfg.model,
+        cfg.mix,
+        cfg.policy,
+        cfg.rate,
+        cfg.num_requests,
+        cfg.seed,
+        cfg.slo_scale,
+        cfg.memory_frac * 100.0
+    );
+    let r = experiments::run_sim(cfg);
+    report::header("results by class");
+    report::mcto_rows(&cfg.policy, &r.report);
+    report::header("results by modality");
+    report::modality_rows(&cfg.policy, &r.report);
+    println!(
+        "\niterations={} preemptions={} dropped={} makespan={:.1}s engine_busy={:.1}s \
+         planning={:.1}µs/iter",
+        r.stats.iterations,
+        r.stats.preemptions,
+        r.stats.dropped,
+        r.makespan,
+        r.stats.busy_time_s,
+        r.stats.planning_time_s * 1e6 / r.stats.iterations.max(1) as f64
+    );
+}
+
+fn cmd_serve(cfg: &mut ServeConfig, artifacts: Option<&str>) {
+    let dir = artifacts
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts missing at {} — run `make artifacts`", dir.display());
+        std::process::exit(1);
+    }
+    cfg.model = "tiny-mllm".into();
+    cfg.scheduler.atomic_prefill = true;
+    cfg.scheduler.max_running = cfg.scheduler.max_running.min(8);
+
+    println!("loading artifacts from {} ...", dir.display());
+    let rt = tcm_serve::runtime::Runtime::load(&dir).expect("runtime load");
+    let engine = Box::new(tcm_serve::engine::real::RealEngine::new(rt));
+    let profile = tcm_serve::model::by_name("tiny-mllm").unwrap();
+    let trace = experiments::make_trace(cfg, &profile);
+    let policy = build_policy(cfg, &profile);
+    let mut sched = Scheduler::new(cfg.clone(), policy, engine);
+
+    let wall = std::time::Instant::now();
+    let rep = sched.run(trace);
+    let wall = wall.elapsed().as_secs_f64();
+    report::header("real-engine report (wall-clock)");
+    report::mcto_rows(&cfg.policy, &rep);
+    let tokens: u64 = rep.outcomes.iter().map(|o| o.output_tokens as u64).sum();
+    println!(
+        "\n{} requests, wall {:.1}s, {:.1} tok/s, {} iterations",
+        rep.outcomes.len(),
+        wall,
+        tokens as f64 / wall,
+        sched.stats.iterations
+    );
+}
+
+fn cmd_profile(cfg: &ServeConfig) {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let data = Profiler::new(&profile, cfg.seed).run(cfg.num_requests.max(100));
+    report::header(&format!("workload profile — {}", cfg.model));
+    for m in Modality::ALL {
+        let ss = data.of_modality(m);
+        let ttfts: Vec<f64> = ss.iter().map(|s| s.ttft()).collect();
+        let kv: Vec<f64> = ss.iter().map(|s| s.kv_tokens as f64).collect();
+        report::cdf_deciles(&format!("{m} ttft(s)"), &ttfts);
+        report::cdf_deciles(&format!("{m} kv(tok)"), &kv);
+    }
+    println!("median output tokens: {:.0}", data.median_output_tokens());
+}
+
+fn cmd_goodput(cfg: &ServeConfig) {
+    println!("searching goodput for policy={} slo={}x ...", cfg.policy, cfg.slo_scale);
+    let g = experiments::goodput(cfg, 0.9, cfg.num_requests.min(200));
+    println!("goodput ≈ {g:.2} req/s at 90% SLO attainment");
+}
+
+fn cmd_trace(cfg: &ServeConfig, out: &str) {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = experiments::make_trace(cfg, &profile);
+    tcm_serve::workload::save_trace(std::path::Path::new(out), &trace).expect("write trace");
+    println!("wrote {} requests to {out}", trace.len());
+}

@@ -1,0 +1,233 @@
+//! Serving metrics: exactly the quantities the paper's figures report.
+//!
+//! * normalized latency — end-to-end seconds per output token (Fig 3/4/8…)
+//! * TTFT — time to first token, average and P90 (Fig 2b, 10, 12)
+//! * SLO violations — rate, and severity = mean delay beyond the SLO
+//!   among violators (Fig 3/4/13/14/15)
+//! * preemptions — count and aggregate preempted time (Fig 11)
+//! * goodput — max sustainable rate meeting the SLO (Fig 15)
+
+use crate::request::{Class, Modality};
+
+/// Everything recorded about one completed request.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub id: u64,
+    pub modality: Modality,
+    /// Class assigned by the active classifier (None for baselines that
+    /// do not classify; grouped reports then fall back to modality).
+    pub class: Option<Class>,
+    pub arrival: f64,
+    /// Absolute time the first output token was emitted.
+    pub first_token: f64,
+    /// Absolute completion time.
+    pub finish: f64,
+    pub output_tokens: u32,
+    /// Absolute SLO deadline for end-to-end latency (seconds of latency,
+    /// not an absolute timestamp): slo_scale × isolated E2E.
+    pub slo_latency: f64,
+    pub preemptions: u32,
+    /// Aggregate time spent preempted (evicted and waiting to re-run).
+    pub preempted_time: f64,
+}
+
+impl Outcome {
+    #[inline]
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    #[inline]
+    pub fn e2e(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Seconds per output token (the paper's "normalized latency").
+    #[inline]
+    pub fn normalized_latency(&self) -> f64 {
+        self.e2e() / self.output_tokens.max(1) as f64
+    }
+
+    #[inline]
+    pub fn violates_slo(&self) -> bool {
+        self.e2e() > self.slo_latency
+    }
+
+    /// Delay beyond the SLO (0 when met).
+    #[inline]
+    pub fn severity(&self) -> f64 {
+        (self.e2e() - self.slo_latency).max(0.0)
+    }
+}
+
+/// Aggregated statistics over a set of outcomes.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub avg_norm_latency: f64,
+    pub avg_ttft: f64,
+    pub p50_ttft: f64,
+    pub p90_ttft: f64,
+    pub p99_ttft: f64,
+    pub slo_violation_rate: f64,
+    /// Mean delay beyond SLO among violators (the paper's "severity").
+    pub violation_severity: f64,
+    pub preemptions: u64,
+    pub preempted_time: f64,
+    pub avg_e2e: f64,
+    pub throughput_tok_per_s: f64,
+}
+
+impl Summary {
+    pub fn of(outcomes: &[&Outcome]) -> Summary {
+        if outcomes.is_empty() {
+            return Summary::default();
+        }
+        let n = outcomes.len();
+        let mut ttfts: Vec<f64> = outcomes.iter().map(|o| o.ttft()).collect();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let violators: Vec<&&Outcome> = outcomes.iter().filter(|o| o.violates_slo()).collect();
+        let severity = if violators.is_empty() {
+            0.0
+        } else {
+            violators.iter().map(|o| o.severity()).sum::<f64>() / violators.len() as f64
+        };
+        let t_start = outcomes.iter().map(|o| o.arrival).fold(f64::INFINITY, f64::min);
+        let t_end = outcomes.iter().map(|o| o.finish).fold(0.0f64, f64::max);
+        let total_tokens: u64 = outcomes.iter().map(|o| o.output_tokens as u64).sum();
+        Summary {
+            n,
+            avg_norm_latency: outcomes.iter().map(|o| o.normalized_latency()).sum::<f64>()
+                / n as f64,
+            avg_ttft: ttfts.iter().sum::<f64>() / n as f64,
+            p50_ttft: crate::util::stats::percentile_sorted(&ttfts, 50.0),
+            p90_ttft: crate::util::stats::percentile_sorted(&ttfts, 90.0),
+            p99_ttft: crate::util::stats::percentile_sorted(&ttfts, 99.0),
+            slo_violation_rate: violators.len() as f64 / n as f64,
+            violation_severity: severity,
+            preemptions: outcomes.iter().map(|o| o.preemptions as u64).sum(),
+            preempted_time: outcomes.iter().map(|o| o.preempted_time).sum(),
+            avg_e2e: outcomes.iter().map(|o| o.e2e()).sum::<f64>() / n as f64,
+            throughput_tok_per_s: if t_end > t_start {
+                total_tokens as f64 / (t_end - t_start)
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// A full experiment result: all outcomes plus grouped views.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub outcomes: Vec<Outcome>,
+}
+
+impl Report {
+    pub fn new(outcomes: Vec<Outcome>) -> Report {
+        Report { outcomes }
+    }
+
+    pub fn overall(&self) -> Summary {
+        Summary::of(&self.outcomes.iter().collect::<Vec<_>>())
+    }
+
+    pub fn by_modality(&self, m: Modality) -> Summary {
+        Summary::of(&self.outcomes.iter().filter(|o| o.modality == m).collect::<Vec<_>>())
+    }
+
+    /// Group by assigned class, falling back to the naive modality mapping
+    /// for outcomes without a class (baselines): text→M, image→C, video→T.
+    pub fn by_class(&self, c: Class) -> Summary {
+        let fallback = |o: &Outcome| match o.modality {
+            Modality::Text => Class::Motorcycle,
+            Modality::Image => Class::Car,
+            Modality::Video => Class::Truck,
+        };
+        Summary::of(
+            &self
+                .outcomes
+                .iter()
+                .filter(|o| o.class.unwrap_or_else(|| fallback(o)) == c)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(ttft: f64, e2e: f64, slo: f64, out: u32) -> Outcome {
+        Outcome {
+            id: 0,
+            modality: Modality::Text,
+            class: None,
+            arrival: 10.0,
+            first_token: 10.0 + ttft,
+            finish: 10.0 + e2e,
+            output_tokens: out,
+            slo_latency: slo,
+            preemptions: 0,
+            preempted_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn outcome_derived_metrics() {
+        let o = outcome(0.5, 4.0, 3.0, 8);
+        assert!((o.ttft() - 0.5).abs() < 1e-12);
+        assert!((o.e2e() - 4.0).abs() < 1e-12);
+        assert!((o.normalized_latency() - 0.5).abs() < 1e-12);
+        assert!(o.violates_slo());
+        assert!((o.severity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meeting_slo_has_zero_severity() {
+        let o = outcome(0.1, 2.0, 3.0, 10);
+        assert!(!o.violates_slo());
+        assert_eq!(o.severity(), 0.0);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let a = outcome(0.1, 1.0, 5.0, 10);
+        let b = outcome(0.3, 6.0, 5.0, 10);
+        let s = Summary::of(&[&a, &b]);
+        assert_eq!(s.n, 2);
+        assert!((s.avg_ttft - 0.2).abs() < 1e-12);
+        assert!((s.slo_violation_rate - 0.5).abs() < 1e-12);
+        assert!((s.violation_severity - 1.0).abs() < 1e-12);
+        assert!((s.avg_norm_latency - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.avg_ttft, 0.0);
+    }
+
+    #[test]
+    fn report_class_fallback_uses_modality() {
+        let mut o1 = outcome(0.1, 1.0, 5.0, 10);
+        o1.modality = Modality::Video;
+        let mut o2 = outcome(0.1, 1.0, 5.0, 10);
+        o2.modality = Modality::Text;
+        o2.class = Some(Class::Truck); // classifier overrides modality
+        let r = Report::new(vec![o1, o2]);
+        assert_eq!(r.by_class(Class::Truck).n, 2);
+        assert_eq!(r.by_class(Class::Motorcycle).n, 0);
+    }
+
+    #[test]
+    fn p90_ordering() {
+        let outs: Vec<Outcome> =
+            (0..100).map(|i| outcome(i as f64 / 100.0, 1.0, 5.0, 10)).collect();
+        let s = Summary::of(&outs.iter().collect::<Vec<_>>());
+        assert!(s.p50_ttft < s.p90_ttft);
+        assert!(s.p90_ttft < s.p99_ttft);
+        assert!((s.p90_ttft - 0.891).abs() < 0.01);
+    }
+}

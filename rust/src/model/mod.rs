@@ -1,0 +1,6 @@
+//! Model zoo: cost-model profiles for the paper's Table-1 MLLM families
+//! plus the tiny PJRT-executed model.
+
+pub mod profiles;
+
+pub use profiles::{by_name, names, profiles, tiny_mllm, ModelProfile, Tokenizer};

@@ -1,0 +1,497 @@
+//! Model cost profiles: the paper's Table-1 model zoo as calibrated cost
+//! models for the discrete-event engine.
+//!
+//! Each profile encodes the per-family characteristics the paper measures
+//! in §2 (Fig 2: token-count distributions; Fig 6: TTFT breakdown into
+//! preprocess/encode/prefill; §2.2: latency bands) on an A100-40GB-class
+//! device. Absolute constants are calibrated so the *bands and ratios*
+//! match the paper: text TTFT ≈ 0.01 s, image < 1 s, video 1–10 s; videos
+//! one to three orders of magnitude more KV tokens than text; Pixtral
+//! prefill-heavy vs Qwen/Gemma preprocess/encode-heavy.
+//!
+//! The `tiny-mllm` profile describes the model the RealEngine actually
+//! executes through PJRT (python/compile/model.py); its constants are
+//! irrelevant for simulation but its tokenization contract matters.
+
+use crate::request::{Modality, Request};
+
+/// How a family turns an image/video into vision tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    /// Tokens per image (median). Near-constant for grid-patch models.
+    pub image_tokens: f64,
+    /// Multiplicative jitter (lognormal sigma) on image tokens — 0 for
+    /// fixed-grid models, >0 for dynamic-resolution models (Qwen).
+    pub image_jitter: f64,
+    /// Tokens per sampled video frame.
+    pub frame_tokens: f64,
+    /// Frames sampled per second of video.
+    pub frame_rate: f64,
+    /// Maximum frames sampled (uniform sampling caps long videos).
+    pub max_frames: u32,
+}
+
+impl Tokenizer {
+    /// Vision tokens for a video of the given duration.
+    pub fn video_tokens(&self, duration_s: f64) -> u32 {
+        let frames = (duration_s * self.frame_rate).ceil().min(self.max_frames as f64);
+        (frames.max(1.0) * self.frame_tokens) as u32
+    }
+}
+
+/// Calibrated cost model for one model family on the reference device.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub vision_encoder: &'static str,
+    pub llm_backend: &'static str,
+    /// LLM backend parameter count (billions) — documentation only.
+    pub llm_params_b: f64,
+
+    pub tokenizer: Tokenizer,
+
+    // --- GPU prefill (LLM) ---
+    /// Fixed per-prefill-launch overhead (s).
+    pub prefill_base_s: f64,
+    /// Linear prefill throughput (prompt tokens / s).
+    pub prefill_tok_per_s: f64,
+    /// Quadratic attention coefficient (s per token^2): dominates for
+    /// 10^4–10^5-token video prompts.
+    pub prefill_quad_s: f64,
+
+    // --- GPU decode ---
+    /// Per-iteration decode step time at batch size 1 (s).
+    pub decode_base_s: f64,
+    /// Additional step time per extra sequence in the decode batch (s).
+    pub decode_per_seq_s: f64,
+
+    // --- vision preprocess (CPU) + encode (GPU) ---
+    /// Image preprocess (decode/resize/patch) time (s).
+    pub preprocess_image_s: f64,
+    /// Video preprocess time per second of video (frame extraction).
+    pub preprocess_video_s_per_s: f64,
+    /// Fixed encoder launch overhead (s).
+    pub encode_base_s: f64,
+    /// Encoder throughput (vision tokens / s).
+    pub encode_tok_per_s: f64,
+
+    // --- memory ---
+    /// KV-cache capacity in tokens at 100% memory (weights already
+    /// subtracted from the 40 GB device).
+    pub kv_capacity_tokens: u64,
+}
+
+impl ModelProfile {
+    /// Preprocessing time (CPU stage) for a request.
+    pub fn preprocess_time(&self, req: &Request) -> f64 {
+        match req.modality {
+            Modality::Text => 0.0,
+            Modality::Image => self.preprocess_image_s,
+            Modality::Video => 0.05 + self.preprocess_video_s_per_s * req.video_duration_s,
+        }
+    }
+
+    /// Vision-encoder time (GPU stage) for a request.
+    pub fn encode_time(&self, req: &Request) -> f64 {
+        if req.mm_tokens == 0 {
+            return 0.0;
+        }
+        self.encode_base_s + req.mm_tokens as f64 / self.encode_tok_per_s
+    }
+
+    /// Time to prefill `chunk` tokens given `ctx` tokens already cached
+    /// (chunked prefill: attention cost scales with context length).
+    pub fn prefill_chunk_time(&self, ctx_before: u32, chunk: u32) -> f64 {
+        let chunk = chunk as f64;
+        let ctx_mid = ctx_before as f64 + chunk / 2.0;
+        self.prefill_base_s
+            + chunk / self.prefill_tok_per_s
+            + self.prefill_quad_s * chunk * ctx_mid
+    }
+
+    /// Full (unchunked) prefill time for `tokens` prompt tokens.
+    pub fn prefill_time(&self, tokens: u32) -> f64 {
+        self.prefill_chunk_time(0, tokens)
+    }
+
+    /// Decode step time for a batch of `n` sequences.
+    pub fn decode_step_time(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        self.decode_base_s + self.decode_per_seq_s * (n as f64 - 1.0)
+    }
+
+    /// Isolated (no-contention) TTFT: preprocess + encode + prefill.
+    pub fn isolated_ttft(&self, req: &Request) -> f64 {
+        self.preprocess_time(req) + self.encode_time(req) + self.prefill_time(req.prefill_tokens())
+    }
+
+    /// Isolated end-to-end latency; the SLO is `slo_scale ×` this (§4.1).
+    pub fn isolated_e2e(&self, req: &Request) -> f64 {
+        self.isolated_ttft(req) + req.output_tokens as f64 * self.decode_base_s
+    }
+}
+
+/// The evaluation model zoo (paper Table 1).
+pub fn profiles() -> Vec<ModelProfile> {
+    vec![
+        ModelProfile {
+            name: "llava-500m",
+            vision_encoder: "SigLIP (400M)",
+            llm_backend: "Qwen2 (500M)",
+            llm_params_b: 0.5,
+            tokenizer: Tokenizer {
+                image_tokens: 729.0,
+                image_jitter: 0.0,
+                frame_tokens: 196.0,
+                frame_rate: 2.0,
+                max_frames: 128,
+            },
+            prefill_base_s: 0.003,
+            prefill_tok_per_s: 60_000.0,
+            prefill_quad_s: 4e-11,
+            decode_base_s: 0.008,
+            decode_per_seq_s: 0.00008,
+            preprocess_image_s: 0.06,
+            preprocess_video_s_per_s: 0.020,
+            encode_base_s: 0.010,
+            encode_tok_per_s: 10_000.0,
+            kv_capacity_tokens: 1_500_000,
+        },
+        ModelProfile {
+            name: "llava-7b",
+            vision_encoder: "SigLIP (400M)",
+            llm_backend: "Qwen2 (7B)",
+            llm_params_b: 7.0,
+            tokenizer: Tokenizer {
+                image_tokens: 729.0,
+                image_jitter: 0.0,
+                frame_tokens: 196.0,
+                frame_rate: 2.0,
+                max_frames: 128,
+            },
+            prefill_base_s: 0.005,
+            prefill_tok_per_s: 12_000.0,
+            prefill_quad_s: 2e-10,
+            decode_base_s: 0.025,
+            decode_per_seq_s: 0.0003,
+            preprocess_image_s: 0.06,
+            preprocess_video_s_per_s: 0.020,
+            encode_base_s: 0.010,
+            encode_tok_per_s: 8_000.0,
+            kv_capacity_tokens: 400_000,
+        },
+        ModelProfile {
+            name: "gemma-4b",
+            vision_encoder: "SigLIP (400M)",
+            llm_backend: "Gemma3 (4B)",
+            llm_params_b: 4.0,
+            tokenizer: Tokenizer {
+                image_tokens: 256.0,
+                image_jitter: 0.0,
+                // Gemma has no native video support: frames as images.
+                frame_tokens: 256.0,
+                frame_rate: 1.0,
+                max_frames: 96,
+            },
+            prefill_base_s: 0.004,
+            prefill_tok_per_s: 20_000.0,
+            prefill_quad_s: 1.2e-10,
+            decode_base_s: 0.016,
+            decode_per_seq_s: 0.0002,
+            // Gemma/Qwen allocate relatively more time to preprocess+encode
+            // (paper Fig 6).
+            preprocess_image_s: 0.11,
+            preprocess_video_s_per_s: 0.022,
+            encode_base_s: 0.015,
+            encode_tok_per_s: 4_000.0,
+            kv_capacity_tokens: 700_000,
+        },
+        ModelProfile {
+            name: "gemma-12b",
+            vision_encoder: "SigLIP (400M)",
+            llm_backend: "Gemma3 (12B)",
+            llm_params_b: 12.0,
+            tokenizer: Tokenizer {
+                image_tokens: 256.0,
+                image_jitter: 0.0,
+                frame_tokens: 256.0,
+                frame_rate: 1.0,
+                max_frames: 96,
+            },
+            prefill_base_s: 0.006,
+            prefill_tok_per_s: 8_000.0,
+            prefill_quad_s: 3e-10,
+            decode_base_s: 0.040,
+            decode_per_seq_s: 0.0005,
+            preprocess_image_s: 0.11,
+            preprocess_video_s_per_s: 0.022,
+            encode_base_s: 0.015,
+            encode_tok_per_s: 4_000.0,
+            kv_capacity_tokens: 250_000,
+        },
+        ModelProfile {
+            name: "qwen-3b",
+            vision_encoder: "Custom ViT (500M)",
+            llm_backend: "Qwen2.5 (3B)",
+            llm_params_b: 3.0,
+            tokenizer: Tokenizer {
+                // dynamic resolution: variable image tokens
+                image_tokens: 720.0,
+                image_jitter: 0.45,
+                frame_tokens: 180.0,
+                frame_rate: 2.0,
+                max_frames: 768,
+            },
+            prefill_base_s: 0.004,
+            prefill_tok_per_s: 25_000.0,
+            prefill_quad_s: 1e-10,
+            decode_base_s: 0.014,
+            decode_per_seq_s: 0.0002,
+            preprocess_image_s: 0.13,
+            preprocess_video_s_per_s: 0.012,
+            encode_base_s: 0.012,
+            encode_tok_per_s: 12_000.0,
+            kv_capacity_tokens: 800_000,
+        },
+        ModelProfile {
+            name: "qwen-7b",
+            vision_encoder: "Custom ViT (500M)",
+            llm_backend: "Qwen2.5 (7B)",
+            llm_params_b: 7.0,
+            tokenizer: Tokenizer {
+                image_tokens: 720.0,
+                image_jitter: 0.45,
+                frame_tokens: 180.0,
+                frame_rate: 2.0,
+                max_frames: 768,
+            },
+            prefill_base_s: 0.005,
+            prefill_tok_per_s: 12_000.0,
+            prefill_quad_s: 2e-10,
+            decode_base_s: 0.025,
+            decode_per_seq_s: 0.0003,
+            preprocess_image_s: 0.13,
+            preprocess_video_s_per_s: 0.012,
+            encode_base_s: 0.012,
+            encode_tok_per_s: 12_000.0,
+            kv_capacity_tokens: 400_000,
+        },
+        ModelProfile {
+            name: "pixtral-12b",
+            vision_encoder: "Pixtral-ViT (400M)",
+            llm_backend: "Mistral NeMo (12B)",
+            llm_params_b: 12.0,
+            tokenizer: Tokenizer {
+                image_tokens: 1024.0,
+                image_jitter: 0.0,
+                // No native video: frames as images, sparse sampling.
+                frame_tokens: 1024.0,
+                frame_rate: 0.5,
+                max_frames: 64,
+            },
+            prefill_base_s: 0.006,
+            prefill_tok_per_s: 8_000.0,
+            prefill_quad_s: 3e-10,
+            decode_base_s: 0.040,
+            decode_per_seq_s: 0.0005,
+            // prefill-dominant TTFT breakdown (paper Fig 6)
+            preprocess_image_s: 0.05,
+            preprocess_video_s_per_s: 0.010,
+            encode_base_s: 0.008,
+            encode_tok_per_s: 20_000.0,
+            kv_capacity_tokens: 250_000,
+        },
+    ]
+}
+
+/// The model the RealEngine actually executes (python/compile/model.py).
+/// Token counts match the tiny model's patch contract: image = 64 patches,
+/// video = 16 patches/frame. Cost constants are only used for SLO targets
+/// when simulating this profile.
+pub fn tiny_mllm() -> ModelProfile {
+    ModelProfile {
+        name: "tiny-mllm",
+        vision_encoder: "TinyViT (0.5M)",
+        llm_backend: "TinyLM (0.7M)",
+        llm_params_b: 0.0007,
+        tokenizer: Tokenizer {
+            image_tokens: 64.0,
+            image_jitter: 0.0,
+            frame_tokens: 16.0,
+            frame_rate: 1.0,
+            max_frames: 12,
+        },
+        prefill_base_s: 0.001,
+        prefill_tok_per_s: 50_000.0,
+        prefill_quad_s: 1e-10,
+        decode_base_s: 0.004,
+        decode_per_seq_s: 0.0002,
+        preprocess_image_s: 0.002,
+        preprocess_video_s_per_s: 0.001,
+        encode_base_s: 0.001,
+        encode_tok_per_s: 50_000.0,
+        kv_capacity_tokens: 64 * 640,
+    }
+}
+
+/// Look up a profile by name (including tiny-mllm).
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    if name == "tiny-mllm" {
+        return Some(tiny_mllm());
+    }
+    profiles().into_iter().find(|p| p.name == name)
+}
+
+pub fn names() -> Vec<&'static str> {
+    profiles().iter().map(|p| p.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{Modality, Request};
+
+    fn req(modality: Modality, text: u32, mm: u32, dur: f64) -> Request {
+        Request {
+            id: 0,
+            arrival: 0.0,
+            modality,
+            text_tokens: text,
+            mm_tokens: mm,
+            video_duration_s: dur,
+            output_tokens: 128,
+        }
+    }
+
+    #[test]
+    fn all_table1_models_present() {
+        let names = names();
+        for expect in [
+            "llava-500m", "llava-7b", "gemma-4b", "gemma-12b", "qwen-3b", "qwen-7b",
+            "pixtral-12b",
+        ] {
+            assert!(names.contains(&expect), "{expect} missing");
+        }
+        assert_eq!(names.len(), 7);
+    }
+
+    #[test]
+    fn text_ttft_is_milliseconds() {
+        // paper §2.2: text "typically around 0.01 seconds, always < 1 s"
+        for p in profiles() {
+            let r = req(Modality::Text, 100, 0, 0.0);
+            let t = p.isolated_ttft(&r);
+            assert!(t < 0.05, "{}: {t}", p.name);
+            let long = req(Modality::Text, 10_000, 0, 0.0);
+            assert!(p.isolated_ttft(&long) < 1.5, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn image_ttft_under_one_second() {
+        for p in profiles() {
+            let mm = p.tokenizer.image_tokens as u32;
+            let r = req(Modality::Image, 40, mm, 0.0);
+            let t = p.isolated_ttft(&r);
+            assert!((0.05..1.0).contains(&t), "{}: {t}", p.name);
+        }
+    }
+
+    #[test]
+    fn video_ttft_band_matches_fig2b() {
+        // Fig 2b: videos range ~1-10 s with a tail slightly past 10 s for
+        // the largest prompts; median-duration videos must sit in-band.
+        for p in profiles() {
+            let mm = p.tokenizer.video_tokens(45.0);
+            let r = req(Modality::Video, 40, mm, 45.0);
+            let t = p.isolated_ttft(&r);
+            assert!((0.8..10.0).contains(&t), "{}: {t} (mm={mm})", p.name);
+            let mm = p.tokenizer.video_tokens(240.0);
+            let long = req(Modality::Video, 40, mm, 240.0);
+            let t = p.isolated_ttft(&long);
+            assert!(t < 20.0, "{}: long-video tail {t}", p.name);
+        }
+    }
+
+    #[test]
+    fn modality_hierarchy_in_time_and_space() {
+        // videos dominate, then images, then text (Insight 1)
+        for p in profiles() {
+            let text = req(Modality::Text, 100, 0, 0.0);
+            let img = req(Modality::Image, 40, p.tokenizer.image_tokens as u32, 0.0);
+            let vid = req(Modality::Video, 40, p.tokenizer.video_tokens(60.0), 60.0);
+            assert!(p.isolated_ttft(&text) < p.isolated_ttft(&img), "{}", p.name);
+            assert!(p.isolated_ttft(&img) < p.isolated_ttft(&vid), "{}", p.name);
+            assert!(text.prefill_tokens() < img.prefill_tokens());
+            assert!(img.prefill_tokens() < vid.prefill_tokens());
+        }
+    }
+
+    #[test]
+    fn qwen_long_videos_exceed_1e5_tokens() {
+        // paper Fig 2a: Qwen-7B videos can exceed 10^5 tokens
+        let p = by_name("qwen-7b").unwrap();
+        assert!(p.tokenizer.video_tokens(400.0) > 100_000);
+    }
+
+    #[test]
+    fn chunked_prefill_sums_to_full_prefill() {
+        let p = by_name("llava-7b").unwrap();
+        let total = 4096u32;
+        let full = p.prefill_time(total);
+        let mut chunked = 0.0;
+        let mut ctx = 0u32;
+        while ctx < total {
+            let chunk = 512.min(total - ctx);
+            chunked += p.prefill_chunk_time(ctx, chunk);
+            ctx += chunk;
+        }
+        // chunking pays extra per-launch overhead but the quadratic part
+        // must integrate to the same area (midpoint rule is exact here)
+        let overhead = 7.0 * p.prefill_base_s;
+        assert!((chunked - full - overhead).abs() < 1e-6, "{chunked} vs {full}");
+    }
+
+    #[test]
+    fn pixtral_is_prefill_dominant_gemma_is_not() {
+        // paper Fig 6: Pixtral spends most TTFT in prefill; Gemma/Qwen
+        // allocate more to preprocessing+encoding.
+        let pix = by_name("pixtral-12b").unwrap();
+        let r = req(Modality::Image, 40, pix.tokenizer.image_tokens as u32, 0.0);
+        let pre = pix.preprocess_time(&r) + pix.encode_time(&r);
+        let pf = pix.prefill_time(r.prefill_tokens());
+        assert!(pf > pre, "pixtral should be prefill-dominant");
+
+        let gem = by_name("gemma-4b").unwrap();
+        let r = req(Modality::Image, 40, gem.tokenizer.image_tokens as u32, 0.0);
+        let pre = gem.preprocess_time(&r) + gem.encode_time(&r);
+        let pf = gem.prefill_time(r.prefill_tokens());
+        assert!(pre > pf, "gemma should be preprocess/encode-heavy");
+    }
+
+    #[test]
+    fn decode_step_scales_with_batch() {
+        let p = by_name("llava-7b").unwrap();
+        assert_eq!(p.decode_step_time(0), 0.0);
+        assert!(p.decode_step_time(8) > p.decode_step_time(1));
+        // decode stays memory-bound: batch-64 step < 64x batch-1 step
+        assert!(p.decode_step_time(64) < 2.0 * p.decode_step_time(1));
+    }
+
+    #[test]
+    fn video_tokens_capped_by_max_frames() {
+        let p = by_name("llava-7b").unwrap();
+        assert_eq!(
+            p.tokenizer.video_tokens(1000.0),
+            p.tokenizer.video_tokens(64.0) // 128 frames at 2 fps
+        );
+    }
+
+    #[test]
+    fn tiny_mllm_lookup() {
+        assert!(by_name("tiny-mllm").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,352 @@
+//! Scheduling policies: TCM-Serve and every baseline in the paper's
+//! evaluation (Fig 8, Fig 10).
+//!
+//! A policy plugs into the shared continuous-batching scheduler
+//! ([`crate::coordinator::scheduler`]) through three decisions:
+//!
+//! 1. **admit** — classify an arriving request (class + impact estimate);
+//! 2. **order_key** — a per-iteration sort key over waiting/running
+//!    requests (lower runs first);
+//! 3. **preemption** — whether admission may preempt, and which victim
+//!    to evict (the scheduler proposes the max-key running request).
+//!
+//! | policy            | order                        | classify | preempt-for-admission |
+//! |-------------------|------------------------------|----------|-----------------------|
+//! | `fcfs` (vLLM)     | arrival (ready) time         | no       | no (growth only)      |
+//! | `edf`             | absolute deadline            | no       | yes                   |
+//! | `naive-class`     | static prio, naive classes   | naive    | yes                   |
+//! | `static-priority` | static prio, smart classes   | smart    | yes                   |
+//! | `naive-aging`     | pure age (oldest first)      | no       | yes                   |
+//! | `tcm`             | regulator score (aging+class)| smart    | yes                   |
+
+use crate::config::ServeConfig;
+use crate::coordinator::classifier::{Classifier, NaiveClassifier, SmartClassifier};
+use crate::coordinator::estimator::{Impact, ImpactEstimator};
+use crate::coordinator::priority::PriorityRegulator;
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::state::ReqState;
+use crate::model::ModelProfile;
+use crate::request::{Class, Request};
+
+/// Decision interface between the scheduler and a policy.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Classify an arriving request. Returns (class, impact) — `None`s
+    /// for baselines without classifier/estimator.
+    fn admit(&mut self, req: &Request) -> (Option<Class>, Option<Impact>);
+
+    /// Sort key at time `now`: lower = scheduled earlier.
+    fn order_key(&self, rs: &ReqState, now: f64) -> f64;
+
+    /// Victim-selection key, compared lexicographically: the *highest*
+    /// value is evicted first when KV memory runs out. Defaults to
+    /// `(0, order_key)` (evict the least urgent). Class-aware policies
+    /// put the class rank in the first component so trucks are evicted
+    /// before cars before motorcycles regardless of aging — the mechanism
+    /// behind the paper's "TCM eliminates preemptions for motorcycles"
+    /// (Fig 11). A tuple (not a weighted f64 sum) because the second
+    /// component's resolution must survive: collapsing both into one
+    /// float ties all same-class victims and the strict preemption gate
+    /// then live-locks on self-preemption.
+    fn victim_key(&self, rs: &ReqState, now: f64) -> (u8, f64) {
+        (0, self.order_key(rs, now))
+    }
+
+    /// May a waiting request preempt a running one to be admitted?
+    fn preempt_for_admission(&self) -> bool;
+
+    /// Skip memory-blocked waiting requests and try later (smaller) ones?
+    /// vLLM's FCFS keeps strict order (head-of-line blocks); priority
+    /// policies let motorcycles flow past blocked trucks.
+    fn skip_blocked(&self) -> bool;
+}
+
+// ---------------------------------------------------------------------
+// vLLM baseline: FCFS + chunked prefill
+// ---------------------------------------------------------------------
+
+/// First-come-first-served (vLLM default). Preempts only for KV growth
+/// (the scheduler's recompute path), choosing the most recent arrival.
+pub struct FcfsPolicy;
+
+impl Policy for FcfsPolicy {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn admit(&mut self, _req: &Request) -> (Option<Class>, Option<Impact>) {
+        (None, None)
+    }
+
+    fn order_key(&self, rs: &ReqState, _now: f64) -> f64 {
+        rs.ready_time
+    }
+
+    fn preempt_for_admission(&self) -> bool {
+        false
+    }
+
+    fn skip_blocked(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// EDF baseline
+// ---------------------------------------------------------------------
+
+/// Earliest-deadline-first. Assumes deadline knowledge (§4.1: EDF "assumes
+/// knowledge of each request's deadline or relies on prediction models") —
+/// we grant it the true SLO deadline.
+pub struct EdfPolicy;
+
+impl Policy for EdfPolicy {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn admit(&mut self, _req: &Request) -> (Option<Class>, Option<Impact>) {
+        (None, None)
+    }
+
+    fn order_key(&self, rs: &ReqState, _now: f64) -> f64 {
+        rs.deadline()
+    }
+
+    fn preempt_for_admission(&self) -> bool {
+        true
+    }
+
+    fn skip_blocked(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Naive aging baseline (Fig 8): oldest-first, no classes
+// ---------------------------------------------------------------------
+
+/// Pure age priority: the older the request, the higher its priority,
+/// ignoring the motorcycles/cars/trucks hierarchy.
+pub struct NaiveAgingPolicy;
+
+impl Policy for NaiveAgingPolicy {
+    fn name(&self) -> &'static str {
+        "naive-aging"
+    }
+
+    fn admit(&mut self, _req: &Request) -> (Option<Class>, Option<Impact>) {
+        (None, None)
+    }
+
+    fn order_key(&self, rs: &ReqState, now: f64) -> f64 {
+        -rs.waiting_time(now)
+    }
+
+    fn preempt_for_admission(&self) -> bool {
+        true
+    }
+
+    fn skip_blocked(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Classifier + priority family: naive-class, static-priority, tcm
+// ---------------------------------------------------------------------
+
+/// Class-priority policy: a classifier (naive or smart) plus the Priority
+/// Regulator (aging optional). Instantiates three of the paper's systems:
+/// * `naive-class`    = NaiveClassifier + static priorities,
+/// * `static-priority`= SmartClassifier + static priorities,
+/// * `tcm`            = SmartClassifier + full regulator (the paper).
+pub struct ClassPriorityPolicy<C: Classifier> {
+    name: &'static str,
+    classifier: C,
+    estimator: ImpactEstimator,
+    regulator: PriorityRegulator,
+}
+
+impl<C: Classifier> ClassPriorityPolicy<C> {
+    pub fn new(
+        name: &'static str,
+        classifier: C,
+        estimator: ImpactEstimator,
+        regulator: PriorityRegulator,
+    ) -> Self {
+        ClassPriorityPolicy { name, classifier, estimator, regulator }
+    }
+}
+
+impl<C: Classifier + Send> Policy for ClassPriorityPolicy<C> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn admit(&mut self, req: &Request) -> (Option<Class>, Option<Impact>) {
+        let impact = self.estimator.estimate(req);
+        let class = self.classifier.classify(req, &impact);
+        (Some(class), Some(impact))
+    }
+
+    fn order_key(&self, rs: &ReqState, now: f64) -> f64 {
+        // Score = −log(priority); FCFS within class follows from score
+        // monotonicity in waiting time. Tie-break on ready time so equal
+        // scores (e.g. static ablation) stay FCFS.
+        let class = rs.class.unwrap_or(Class::Truck);
+        self.regulator.score(class, rs.waiting_time(now)) + rs.ready_time * 1e-9
+    }
+
+    fn victim_key(&self, rs: &ReqState, now: f64) -> (u8, f64) {
+        // Strict class hierarchy for eviction: trucks first, then cars;
+        // motorcycles only as a last resort. Within a class, evict the
+        // least-priority (highest-score) request.
+        let class = rs.class.unwrap_or(Class::Truck);
+        (class as u8, self.order_key(rs, now))
+    }
+
+    fn preempt_for_admission(&self) -> bool {
+        true
+    }
+
+    fn skip_blocked(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------
+
+/// Train (if needed) and build the policy named in the config.
+/// Profiling/training happens once here — the paper's offline phase.
+pub fn build_policy(cfg: &ServeConfig, profile: &ModelProfile) -> Box<dyn Policy> {
+    match cfg.policy.as_str() {
+        "fcfs" => Box::new(FcfsPolicy),
+        "edf" => Box::new(EdfPolicy),
+        "naive-aging" => Box::new(NaiveAgingPolicy),
+        name @ ("naive-class" | "static-priority" | "tcm") => {
+            let data = Profiler::new(profile, cfg.seed ^ 0x0FF1CE).run(300);
+            let estimator = ImpactEstimator::train(&data);
+            let mut reg_cfg = cfg.regulator.clone();
+            // The ablation variants use static priorities only.
+            if name != "tcm" {
+                reg_cfg.aging_enabled = false;
+            }
+            let regulator = PriorityRegulator::new(reg_cfg);
+            match name {
+                "naive-class" => Box::new(ClassPriorityPolicy::new(
+                    "naive-class",
+                    NaiveClassifier,
+                    estimator,
+                    regulator,
+                )),
+                "static-priority" => Box::new(ClassPriorityPolicy::new(
+                    "static-priority",
+                    SmartClassifier::train(&data, &estimator, cfg.seed),
+                    estimator,
+                    regulator,
+                )),
+                _ => Box::new(ClassPriorityPolicy::new(
+                    "tcm",
+                    SmartClassifier::train(&data, &estimator, cfg.seed),
+                    estimator,
+                    regulator,
+                )),
+            }
+        }
+        other => panic!("unknown policy '{other}' (validate() should have caught this)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::request::Modality;
+
+    fn rs(arrival: f64, ready: f64, slo: f64) -> ReqState {
+        let mut s = ReqState::new(
+            Request {
+                id: 1,
+                arrival,
+                modality: Modality::Text,
+                text_tokens: 50,
+                mm_tokens: 0,
+                video_duration_s: 0.0,
+                output_tokens: 10,
+            },
+            slo,
+        );
+        s.ready_time = ready;
+        s.first_enqueue = ready;
+        s
+    }
+
+    #[test]
+    fn fcfs_orders_by_ready_time() {
+        let p = FcfsPolicy;
+        assert!(p.order_key(&rs(0.0, 1.0, 5.0), 10.0) < p.order_key(&rs(0.5, 2.0, 5.0), 10.0));
+        assert!(!p.preempt_for_admission());
+        assert!(!p.skip_blocked());
+    }
+
+    #[test]
+    fn edf_orders_by_deadline() {
+        let p = EdfPolicy;
+        // arrival 0 + slo 3 = deadline 3 beats arrival 1 + slo 5 = 6
+        assert!(p.order_key(&rs(0.0, 0.1, 3.0), 2.0) < p.order_key(&rs(1.0, 1.1, 5.0), 2.0));
+    }
+
+    #[test]
+    fn naive_aging_prefers_oldest() {
+        let p = NaiveAgingPolicy;
+        assert!(p.order_key(&rs(0.0, 0.0, 5.0), 10.0) < p.order_key(&rs(0.0, 8.0, 5.0), 10.0));
+    }
+
+    #[test]
+    fn factory_builds_every_policy() {
+        let profile = by_name("llava-7b").unwrap();
+        for name in ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"] {
+            let mut cfg = ServeConfig::default();
+            cfg.policy = name.into();
+            cfg.num_requests = 1;
+            let p = build_policy(&cfg, &profile);
+            assert_eq!(p.name(), name);
+        }
+    }
+
+    #[test]
+    fn tcm_motorcycle_outranks_truck_until_aged() {
+        let profile = by_name("llava-7b").unwrap();
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "tcm".into();
+        let mut p = build_policy(&cfg, &profile);
+
+        let mut m = rs(0.0, 0.0, 5.0);
+        let (c, i) = p.admit(&m.req);
+        m.class = c;
+        m.impact = i;
+        assert_eq!(m.class, Some(Class::Motorcycle));
+
+        let mut t = rs(0.0, 0.0, 60.0);
+        t.req.modality = Modality::Video;
+        t.req.mm_tokens = 6272;
+        t.req.video_duration_s = 120.0;
+        let (c, i) = p.admit(&t.req);
+        t.class = c;
+        t.impact = i;
+        assert_eq!(t.class, Some(Class::Truck));
+
+        // fresh: motorcycle first
+        assert!(p.order_key(&m, 0.0) < p.order_key(&t, 0.0));
+        // after the truck waits a very long time, it outranks a fresh
+        // motorcycle (anti-starvation)
+        let mut fresh_m = m.clone();
+        fresh_m.first_enqueue = 3000.0;
+        fresh_m.ready_time = 3000.0;
+        assert!(p.order_key(&t, 3000.0) < p.order_key(&fresh_m, 3000.0));
+    }
+}

@@ -1,0 +1,60 @@
+//! Table formatting shared by the figure benches and the CLI: prints the
+//! same rows/series the paper's figures plot, in aligned plain text.
+
+use crate::metrics::{Report, Summary};
+use crate::request::{Class, Modality};
+
+/// Print a figure/table header with a rule.
+pub fn header(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// One metrics row: label + the standard column set used across figures.
+pub fn summary_row(label: &str, s: &Summary) {
+    println!(
+        "{label:<26} n={:<6} norm_lat={:>9.4} s/tok  ttft_avg={:>8.3} s  ttft_p90={:>8.3} s  \
+         slo_viol={:>5.1}%  severity={:>7.2} s",
+        s.n,
+        s.avg_norm_latency,
+        s.avg_ttft,
+        s.p90_ttft,
+        s.slo_violation_rate * 100.0,
+        s.violation_severity
+    );
+}
+
+/// The paper's per-figure breakdown: Motorcycles / Cars / Trucks / Overall.
+pub fn mcto_rows(label: &str, report: &Report) {
+    for c in Class::ALL {
+        summary_row(&format!("{label} [{}]", c.short()), &report.by_class(c));
+    }
+    summary_row(&format!("{label} [O]"), &report.overall());
+}
+
+/// Per-modality breakdown (motivation figures group by text/image/video).
+pub fn modality_rows(label: &str, report: &Report) {
+    for m in Modality::ALL {
+        summary_row(&format!("{label} [{m}]"), &report.by_modality(m));
+    }
+    summary_row(&format!("{label} [all]"), &report.overall());
+}
+
+/// Preemption row (Fig 11).
+pub fn preemption_row(label: &str, s: &Summary) {
+    println!(
+        "{label:<26} n={:<6} preemptions={:<8} preempted_time={:>9.2} s",
+        s.n, s.preemptions, s.preempted_time
+    );
+}
+
+/// Simple fixed-width CDF print: deciles of a sample (Fig 2).
+pub fn cdf_deciles(label: &str, xs: &[f64]) {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    print!("{label:<28}");
+    for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+        print!(" p{q:<3}={:<10.3}", crate::util::stats::percentile_sorted(&s, q));
+    }
+    println!();
+}

@@ -1,0 +1,234 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Line format:
+//!   `hparam <key> <value>`
+//!   `weight <name> <d0,d1,..|scalar> <offset> <size>`   (f32 values)
+//!   `artifact <name> <file> <sha256-prefix>`
+//!   `weights_file weights.bin <total-f32-count>`
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset into weights.bin in f32 units.
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub digest: String,
+}
+
+/// TinyMLLM hyperparameters the Rust side needs for shape bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Hparams {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub patch_dim: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    pub encoder_buckets: Vec<usize>,
+}
+
+impl Hparams {
+    /// Flattened KV-cache element count per request:
+    /// [n_layers, 2, n_heads, max_seq, head_dim].
+    pub fn kv_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.max_seq * self.head_dim
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub hparams: Hparams,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Total f32 count of weights.bin.
+    pub weights_total: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut hp: BTreeMap<String, String> = BTreeMap::new();
+        let mut weights = Vec::new();
+        let mut artifacts = Vec::new();
+        let mut weights_total = None;
+
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: '{line}'", i + 1);
+            match fields[0] {
+                "hparam" if fields.len() == 3 => {
+                    hp.insert(fields[1].to_string(), fields[2].to_string());
+                }
+                "weight" if fields.len() == 5 => {
+                    let shape = if fields[2] == "scalar" {
+                        vec![]
+                    } else {
+                        fields[2]
+                            .split(',')
+                            .map(|d| d.parse::<usize>().with_context(ctx))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    weights.push(WeightEntry {
+                        name: fields[1].to_string(),
+                        shape,
+                        offset: fields[3].parse().with_context(ctx)?,
+                        size: fields[4].parse().with_context(ctx)?,
+                    });
+                }
+                "artifact" if fields.len() == 4 => {
+                    artifacts.push(ArtifactEntry {
+                        name: fields[1].to_string(),
+                        file: fields[2].to_string(),
+                        digest: fields[3].to_string(),
+                    });
+                }
+                "weights_file" if fields.len() == 3 => {
+                    weights_total = Some(fields[2].parse().with_context(ctx)?);
+                }
+                _ => bail!("unrecognized manifest line {}: '{line}'", i + 1),
+            }
+        }
+
+        let get = |k: &str| -> Result<usize> {
+            hp.get(k)
+                .with_context(|| format!("manifest missing hparam '{k}'"))?
+                .parse::<usize>()
+                .with_context(|| format!("hparam '{k}' not an integer"))
+        };
+        let get_list = |k: &str| -> Result<Vec<usize>> {
+            hp.get(k)
+                .with_context(|| format!("manifest missing hparam '{k}'"))?
+                .split(',')
+                .map(|s| s.parse::<usize>().with_context(|| format!("hparam '{k}'")))
+                .collect()
+        };
+
+        let hparams = Hparams {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            patch_dim: get("patch_dim")?,
+            prefill_buckets: get_list("prefill_buckets")?,
+            decode_buckets: get_list("decode_buckets")?,
+            encoder_buckets: get_list("encoder_buckets")?,
+        };
+
+        // Validate weight layout: contiguous, non-overlapping, sizes match.
+        let mut sorted = weights.clone();
+        sorted.sort_by_key(|w| w.offset);
+        let mut expect = 0usize;
+        for w in &sorted {
+            if w.offset != expect {
+                bail!("weight '{}' at offset {} (expected {expect})", w.name, w.offset);
+            }
+            let n: usize = w.shape.iter().product::<usize>().max(1);
+            if n != w.size {
+                bail!("weight '{}': shape {:?} != size {}", w.name, w.shape, w.size);
+            }
+            expect += w.size;
+        }
+        let weights_total =
+            weights_total.with_context(|| "manifest missing weights_file line")?;
+        if expect != weights_total {
+            bail!("weights sum to {expect} but weights_file says {weights_total}");
+        }
+
+        Ok(Manifest { hparams, weights, artifacts, weights_total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+hparam vocab 512
+hparam d_model 128
+hparam n_layers 2
+hparam n_heads 4
+hparam head_dim 32
+hparam max_seq 640
+hparam patch_dim 48
+hparam prefill_buckets 32,64
+hparam decode_buckets 1,2
+hparam encoder_buckets 16
+weight a.x 128 0 128
+weight b.y 2,64 128 128
+weights_file weights.bin 256
+artifact prefill_32 prefill_32.hlo.txt abcd1234
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hparams.vocab, 512);
+        assert_eq!(m.hparams.prefill_buckets, vec![32, 64]);
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.weights[1].shape, vec![2, 64]);
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.weights_total, 256);
+        assert_eq!(m.hparams.kv_elems(), 2 * 2 * 4 * 640 * 32);
+    }
+
+    #[test]
+    fn rejects_gap_in_weights() {
+        let bad = SAMPLE.replace("weight b.y 2,64 128 128", "weight b.y 2,64 200 128");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_size_mismatch() {
+        let bad = SAMPLE.replace("weight b.y 2,64 128 128", "weight b.y 2,65 128 128");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_hparam() {
+        let bad = SAMPLE.replace("hparam vocab 512\n", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_line() {
+        let bad = format!("{SAMPLE}wat is this\n");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert_eq!(m.hparams.d_model, 128);
+            assert!(m.artifacts.len() >= 17);
+            assert!(m.weights.len() >= 40);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
+//! executes them on the request path. Python never runs here.
+//!
+//! * `manifest.txt` describes the model hparams, the weight layout inside
+//!   `weights.bin`, and one HLO-text file per (entry point, shape bucket).
+//! * HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects in proto form; the
+//!   text parser reassigns ids — see python/compile/aot.py).
+//! * Weights are uploaded to the device **once** as `PjRtBuffer`s; every
+//!   `execute` call prepends them (the HLO entry signature is
+//!   `[weight leaves..., inputs...]`, matching pytree-flatten order).
+
+pub mod manifest;
+
+use crate::runtime::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Typed input for an artifact call.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+    /// Scalar i32 (rank-0).
+    ScalarI32(i32),
+}
+
+/// A loaded PJRT runtime: compiled executables + device-resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    /// Wall time spent inside PJRT execute (perf accounting).
+    pub execute_time: std::time::Duration,
+    pub execute_calls: u64,
+}
+
+impl Runtime {
+    /// Load manifest + weights and compile every artifact eagerly.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    /// Load, compiling only artifacts accepted by `keep` (tests use this
+    /// to avoid compiling all 17 buckets).
+    pub fn load_filtered(dir: &Path, keep: impl Fn(&str) -> bool) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+
+        // Upload weights once.
+        let raw = std::fs::read(dir.join("weights.bin")).context("reading weights.bin")?;
+        if raw.len() != manifest.weights_total * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest says {} f32 values",
+                raw.len(),
+                manifest.weights_total
+            );
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut weight_buffers = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let slice = &floats[w.offset..w.offset + w.size];
+            let buf = client
+                .buffer_from_host_buffer(slice, &w.shape, None)
+                .map_err(|e| anyhow!("uploading weight {}: {e:?}", w.name))?;
+            weight_buffers.push(buf);
+        }
+
+        // Compile artifacts.
+        let mut executables = HashMap::new();
+        for a in &manifest.artifacts {
+            if !keep(&a.name) {
+                continue;
+            }
+            let path = dir.join(&a.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", a.name))?;
+            executables.insert(a.name.clone(), exe);
+        }
+
+        Ok(Runtime {
+            client,
+            executables,
+            weight_buffers,
+            manifest,
+            dir: dir.to_path_buf(),
+            execute_time: std::time::Duration::ZERO,
+            execute_calls: 0,
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute artifact `name` with the given inputs (weights prepended
+    /// automatically). Returns the flattened output tuple as literals.
+    pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+
+        let mut bufs: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            let buf = match input {
+                Input::F32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow!("{name} input {i} (f32): {e:?}"))?,
+                Input::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow!("{name} input {i} (i32): {e:?}"))?,
+                Input::ScalarI32(v) => self
+                    .client
+                    .buffer_from_host_buffer(&[*v], &[], None)
+                    .map_err(|e| anyhow!("{name} input {i} (scalar): {e:?}"))?,
+            };
+            owned.push(buf);
+        }
+        for b in &owned {
+            bufs.push(b);
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.execute_time += t0.elapsed();
+        self.execute_calls += 1;
+
+        let out = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: no replica output"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: empty output"))?;
+        let literal = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        literal.to_tuple().map_err(|e| anyhow!("{name}: to_tuple: {e:?}"))
+    }
+
+    /// Pick the smallest bucket >= n from a bucket list.
+    pub fn bucket_for(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+/// Read an f32 literal into a Vec.
+pub fn literal_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = [32usize, 64, 128, 256, 512];
+        assert_eq!(Runtime::bucket_for(&b, 1), Some(32));
+        assert_eq!(Runtime::bucket_for(&b, 32), Some(32));
+        assert_eq!(Runtime::bucket_for(&b, 33), Some(64));
+        assert_eq!(Runtime::bucket_for(&b, 512), Some(512));
+        assert_eq!(Runtime::bucket_for(&b, 513), None);
+    }
+}

@@ -1,0 +1,158 @@
+//! Thread-based serving front end.
+//!
+//! tokio is unavailable in the offline crate set, so the leader loop uses
+//! std threads + mpsc channels — the same topology as vLLM's single-
+//! threaded engine core behind an ingress queue. Clients submit requests
+//! through a [`ServerHandle`] and receive streamed events (first token /
+//! completion) on a per-request channel.
+//!
+//! This front end drives the *real* engine in wall-clock time; simulation
+//! experiments use [`crate::experiments`] directly (virtual time cannot
+//! be driven by external threads).
+
+use crate::config::ServeConfig;
+use crate::coordinator::Scheduler;
+use crate::engine::Engine;
+use crate::metrics::Report;
+use crate::policies::build_policy;
+use crate::request::Request;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Events streamed back to a client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseEvent {
+    FirstToken { req_id: u64, ttft_s: f64 },
+    Finished { req_id: u64, e2e_s: f64, output_tokens: u32 },
+}
+
+enum ServerMsg {
+    Submit(Request, mpsc::Sender<ResponseEvent>),
+    Shutdown,
+}
+
+/// Client-side handle to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<ServerMsg>,
+}
+
+impl ServerHandle {
+    /// Submit a request; events arrive on the returned receiver.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<ResponseEvent> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(ServerMsg::Submit(req, tx)).expect("server gone");
+        rx
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+    }
+}
+
+/// A serving leader running a scheduler over an engine on its own thread.
+pub struct Server {
+    handle: ServerHandle,
+    join: JoinHandle<Report>,
+}
+
+impl Server {
+    /// Spawn the leader thread. The engine must be Send (both engines are).
+    pub fn spawn(cfg: ServeConfig, engine: Box<dyn Engine + Send>) -> Server {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let join = std::thread::spawn(move || leader_loop(cfg, engine, rx));
+        Server { handle: ServerHandle { tx }, join }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Shut down and collect the final report.
+    pub fn finish(self) -> Report {
+        self.handle.shutdown();
+        self.join.join().expect("leader thread panicked")
+    }
+}
+
+/// The leader: drain ingress, run the scheduler to completion over the
+/// accumulated batch, stream events. Wall-clock arrivals are mapped onto
+/// the scheduler's clock by stamping each request's arrival with the
+/// leader's elapsed time.
+fn leader_loop(
+    cfg: ServeConfig,
+    engine: Box<dyn Engine + Send>,
+    rx: mpsc::Receiver<ServerMsg>,
+) -> Report {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model");
+    let policy = build_policy(&cfg, &profile);
+    let mut sched = Scheduler::new(cfg, policy, engine);
+
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<Request> = Vec::new();
+    let mut subscribers: std::collections::HashMap<u64, mpsc::Sender<ResponseEvent>> =
+        std::collections::HashMap::new();
+
+    // Ingress: accept until shutdown. Requests carry their true submit
+    // time so queueing before the batch runs is accounted for.
+    loop {
+        match rx.recv() {
+            Ok(ServerMsg::Submit(mut req, sub)) => {
+                req.arrival = t0.elapsed().as_secs_f64();
+                subscribers.insert(req.id, sub);
+                pending.push(req);
+            }
+            Ok(ServerMsg::Shutdown) | Err(_) => break,
+        }
+    }
+
+    let report = sched.run(pending);
+    for o in &report.outcomes {
+        if let Some(sub) = subscribers.get(&o.id) {
+            let _ = sub.send(ResponseEvent::FirstToken { req_id: o.id, ttft_s: o.ttft() });
+            let _ = sub.send(ResponseEvent::Finished {
+                req_id: o.id,
+                e2e_s: o.e2e(),
+                output_tokens: o.output_tokens,
+            });
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sim_engine::SimEngine;
+    use crate::request::Modality;
+
+    #[test]
+    fn serve_roundtrip_with_sim_engine() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.num_requests = 4;
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        let server = Server::spawn(cfg, Box::new(SimEngine::new(&profile)));
+        let h = server.handle();
+        let mut rxs = Vec::new();
+        for id in 0..4u64 {
+            rxs.push(h.submit(Request {
+                id,
+                arrival: 0.0,
+                modality: Modality::Text,
+                text_tokens: 64,
+                mm_tokens: 0,
+                video_duration_s: 0.0,
+                output_tokens: 4,
+            }));
+        }
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 4);
+        for rx in rxs {
+            let events: Vec<_> = rx.iter().collect();
+            assert_eq!(events.len(), 2);
+            assert!(matches!(events[0], ResponseEvent::FirstToken { .. }));
+            assert!(matches!(events[1], ResponseEvent::Finished { .. }));
+        }
+    }
+}

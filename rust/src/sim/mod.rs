@@ -1,0 +1,166 @@
+//! Discrete-event simulation substrate: a virtual clock and event queue.
+//!
+//! The serving simulator is *iteration-driven* (the coordinator loop pulls
+//! time forward by executing engine steps), but several side processes
+//! need scheduled events: request arrivals, preprocess-stage completions,
+//! and timeout probes. This module provides the minimal deterministic
+//! event queue those share.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time, carrying a payload.
+#[derive(Debug, Clone)]
+struct Event<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Event<T> {}
+
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (time, seq): reverse the natural (max-heap) order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic event queue: ties in time break by insertion order.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    next_seq: u64,
+    now: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, now: 0.0 }
+    }
+
+    /// Current virtual time (the time of the last popped event, or the
+    /// last explicit `advance_to`).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute virtual time `time`.
+    pub fn schedule(&mut self, time: f64, payload: T) {
+        debug_assert!(time >= self.now, "scheduling into the past: {time} < {}", self.now);
+        self.heap.push(Event { time, seq: self.next_seq, payload });
+        self.next_seq += 1;
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some((e.time, e.payload))
+    }
+
+    /// Pop the earliest event only if it is at or before `time`.
+    pub fn pop_until(&mut self, time: f64) -> Option<(f64, T)> {
+        if self.peek_time()? <= time {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Manually advance the clock (iteration-driven progress).
+    pub fn advance_to(&mut self, time: f64) {
+        if time > self.now {
+            self.now = time;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_advances_on_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn pop_until_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a");
+        q.schedule(10.0, "b");
+        assert_eq!(q.pop_until(5.0), Some((1.0, "a")));
+        assert_eq!(q.pop_until(5.0), None);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(4.0);
+        q.advance_to(2.0); // no-op backwards
+        assert_eq!(q.now(), 4.0);
+    }
+}

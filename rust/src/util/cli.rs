@@ -1,0 +1,255 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `tcm-serve` binary and the examples need:
+//! `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! subcommands. Unknown options are an error (catches typos in scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known_options: Vec<String>,
+    known_flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative parser: declare the accepted options/flags, then parse.
+pub struct Parser {
+    options: Vec<(&'static str, &'static str)>, // (name, help)
+    flags: Vec<(&'static str, &'static str)>,
+    subcommands: Vec<(&'static str, &'static str)>,
+    program: &'static str,
+    about: &'static str,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser { options: vec![], flags: vec![], subcommands: vec![], program, about }
+    }
+
+    pub fn option(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push((name, help));
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push((name, help));
+        self
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.program, self.about, self.program);
+        if !self.subcommands.is_empty() {
+            s.push_str("<subcommand> ");
+        }
+        s.push_str("[options]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (n, h) in &self.subcommands {
+                s.push_str(&format!("  {n:<18} {h}\n"));
+            }
+        }
+        if !self.options.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for (n, h) in &self.options {
+                s.push_str(&format!("  --{n} <value>   {h}\n"));
+            }
+        }
+        if !self.flags.is_empty() {
+            s.push_str("\nFLAGS:\n");
+            for (n, h) in &self.flags {
+                s.push_str(&format!("  --{n}   {h}\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args {
+            known_options: self.options.iter().map(|(n, _)| n.to_string()).collect(),
+            known_flags: self.flags.iter().map(|(n, _)| n.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.iter().peekable();
+
+        if !self.subcommands.is_empty() {
+            match it.peek() {
+                Some(first) if !first.starts_with('-') => {
+                    let name = it.next().unwrap();
+                    if !self.subcommands.iter().any(|(n, _)| n == name) {
+                        return Err(CliError(format!(
+                            "unknown subcommand '{name}'\n\n{}",
+                            self.usage()
+                        )));
+                    }
+                    out.subcommand = Some(name.clone());
+                }
+                _ => {}
+            }
+        }
+
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if out.known_flags.contains(&key) {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    out.flags.push(key);
+                } else if out.known_options.contains(&key) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{key} requires a value")))?
+                            .clone(),
+                    };
+                    out.options.insert(key, val);
+                } else {
+                    return Err(CliError(format!("unknown option --{key}\n\n{}", self.usage())));
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected a number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test", "about")
+            .subcommand("serve", "run server")
+            .subcommand("bench", "run bench")
+            .option("rate", "req/s")
+            .option("model", "model name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parser()
+            .parse(&argv("serve --rate 2.5 --model=llava-7b --verbose pos1"))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("rate"), Some("2.5"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get("model"), Some("llava-7b"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse(&argv("bench")).unwrap();
+        assert_eq!(a.get_f64("rate", 2.0).unwrap(), 2.0);
+        assert_eq!(a.get_or("model", "llava-7b"), "llava-7b");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_option() {
+        assert!(parser().parse(&argv("serve --nope 1")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_subcommand() {
+        assert!(parser().parse(&argv("explode")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(parser().parse(&argv("serve --rate")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_number() {
+        let a = parser().parse(&argv("serve --rate abc")).unwrap();
+        assert!(a.get_f64("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parser().parse(&argv("serve --verbose=1")).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = parser().parse(&argv("--help")).unwrap_err();
+        assert!(e.0.contains("SUBCOMMANDS"));
+    }
+}

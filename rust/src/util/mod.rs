@@ -1,0 +1,7 @@
+//! Self-contained utility substrates (the offline environment has no
+//! rand/clap/proptest/serde, so the subsets this project needs live here).
+
+pub mod cli;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,138 @@
+//! A small property-based testing harness (proptest is unavailable
+//! offline). Provides seeded case generation with automatic shrinking for
+//! the coordinator invariants tests.
+//!
+//! Usage:
+//! ```ignore
+//! proptest_lite::run(200, |g| {
+//!     let xs: Vec<u32> = g.vec(0..64, |g| g.u64_in(0, 100) as u32);
+//!     // ... assert invariant, return Err(msg) to fail ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing seed with progressively
+//! simpler size hints (a pragmatic shrink: smaller collections, smaller
+//! magnitudes) and reports the smallest seed/size that still fails.
+
+use crate::util::rng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size budget in [0.0, 1.0]; generators scale collection lengths and
+    /// magnitudes by this to enable shrinking.
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).round() as u64;
+        self.rng.range_u64(lo, hi_scaled.max(lo))
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi_scaled = lo + (hi - lo) * self.size;
+        self.rng.range_f64(lo, hi_scaled.max(lo))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `cases` random cases of the property. Panics with a reproduction
+/// line on failure.
+pub fn run(cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    run_seeded(0x7C3_5EED, cases, prop)
+}
+
+pub fn run_seeded(seed: u64, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen { rng: Rng::new(case_seed), size: 1.0, case };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed at smaller sizes; keep the
+            // smallest size that still fails.
+            let mut best: Option<(f64, String)> = None;
+            for step in 1..=8 {
+                let size = 1.0 - step as f64 / 9.0;
+                let mut g = Gen { rng: Rng::new(case_seed), size, case };
+                if let Err(m) = prop(&mut g) {
+                    best = Some((size, m));
+                }
+            }
+            let (size, final_msg) = best.unwrap_or((1.0, msg));
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {size:.2}): {final_msg}\n\
+                 reproduce with proptest_lite::run_case({case_seed:#x}, {size:.2}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case (for debugging).
+pub fn run_case(case_seed: u64, size: f64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen { rng: Rng::new(case_seed), size, case: 0 };
+    if let Err(msg) = prop(&mut g) {
+        panic!("case failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run(100, |g| {
+            let x = g.u64_in(0, 100);
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        run(100, |g| {
+            let xs = g.vec(16, |g| g.u64_in(0, 100));
+            if xs.iter().sum::<u64>() < 400 {
+                Ok(())
+            } else {
+                Err("sum too large".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run(200, |g| {
+            let a = g.u64_in(5, 10);
+            let b = g.f64_in(-1.0, 1.0);
+            if (5..=10).contains(&a) && (-1.0..=1.0).contains(&b) {
+                Ok(())
+            } else {
+                Err(format!("a={a} b={b}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,408 @@
+//! Statistical primitives for the profiler, estimator and classifier.
+//!
+//! Everything the paper's learning components need, self-contained:
+//!   * summary statistics and percentiles (metrics reporting),
+//!   * ordinary least squares (the text prefill estimator, §3.3),
+//!   * quantile regression at τ=0.9 (the image/video prefill estimator,
+//!     fitted by iterated subgradient descent on the pinball loss),
+//!   * k-means (the smart classifier's clustering backend, §3.4).
+
+/// Arithmetic mean. 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile with linear interpolation, q in [0, 100]. NaN-free input
+/// required. O(n log n); fine at our sample sizes.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(s: &[f64], q: f64) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = rank - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Empirical CDF evaluation points: returns (sorted_xs, cum_prob).
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    let probs = (1..=s.len()).map(|i| i as f64 / n).collect();
+    (s, probs)
+}
+
+// ---------------------------------------------------------------------
+// Ordinary least squares: y ≈ a + b·x
+// ---------------------------------------------------------------------
+
+/// Closed-form simple linear regression.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub intercept: f64,
+    pub slope: f64,
+}
+
+impl LinearFit {
+    pub fn fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mx = mean(xs);
+        let my = mean(ys);
+        let mut sxx = 0.0;
+        let mut sxy = 0.0;
+        for (&x, &y) in xs.iter().zip(ys) {
+            sxx += (x - mx) * (x - mx);
+            sxy += (x - mx) * (y - my);
+        }
+        let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+        LinearFit { intercept: my - slope * mx, slope }
+    }
+
+    #[inline]
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+
+    /// Coefficient of determination on a dataset.
+    pub fn r2(&self, xs: &[f64], ys: &[f64]) -> f64 {
+        let my = mean(ys);
+        let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+        let ss_res: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(&x, &y)| (y - self.predict(x)).powi(2))
+            .sum();
+        if ss_tot == 0.0 {
+            1.0
+        } else {
+            1.0 - ss_res / ss_tot
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantile regression: y ≈ a + b·x at quantile τ (pinball loss)
+// ---------------------------------------------------------------------
+
+/// Linear quantile regression fitted by subgradient descent on the pinball
+/// loss, warm-started from OLS. The paper (§3.3) uses τ = 0.9 for image
+/// and video prefill estimates "to avoid underestimation and protect SLO
+/// compliance".
+#[derive(Debug, Clone, Copy)]
+pub struct QuantileFit {
+    pub intercept: f64,
+    pub slope: f64,
+    pub tau: f64,
+}
+
+impl QuantileFit {
+    pub fn fit(xs: &[f64], ys: &[f64], tau: f64) -> QuantileFit {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        assert!((0.0..1.0).contains(&tau) || tau == 1.0);
+        let ols = LinearFit::fit(xs, ys);
+        let (mut a, mut b) = (ols.intercept, ols.slope);
+        // Normalize x for conditioning.
+        let mx = mean(xs);
+        let sx = std_dev(xs).max(1e-12);
+        let sy = std_dev(ys).max(1e-12);
+        let n = xs.len() as f64;
+        // Subgradient of pinball loss: -tau if residual>0 else (1-tau).
+        let mut lr = 0.5 * sy;
+        for epoch in 0..400 {
+            let mut ga = 0.0;
+            let mut gb = 0.0;
+            for (&x, &y) in xs.iter().zip(ys) {
+                // Updates happen in normalized-x coordinates for stable
+                // conditioning; the fit is denormalized once at the end.
+                let xn = (x - mx) / sx;
+                let res = y - (a + b * xn);
+                let g = if res > 0.0 { -tau } else { 1.0 - tau };
+                ga += g;
+                gb += g * xn;
+            }
+            a -= lr * ga / n;
+            b -= lr * gb / n;
+            if epoch % 40 == 39 {
+                lr *= 0.5;
+            }
+        }
+        // Denormalize: pred = a + b*(x - mx)/sx = (a - b*mx/sx) + (b/sx)*x
+        QuantileFit { intercept: a - b * mx / sx, slope: b / sx, tau }
+    }
+
+    #[inline]
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+
+    /// Fraction of points at or below the fitted line (should be ≈ tau).
+    pub fn coverage(&self, xs: &[f64], ys: &[f64]) -> f64 {
+        let below = xs
+            .iter()
+            .zip(ys)
+            .filter(|(&x, &y)| y <= self.predict(x))
+            .count();
+        below as f64 / xs.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// K-means (the smart classifier backend)
+// ---------------------------------------------------------------------
+
+/// K-means with k-means++ seeding over points in R^d.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f64>>,
+}
+
+impl KMeans {
+    /// Fit on `points` (each a d-vector) with deterministic seeding.
+    pub fn fit(points: &[Vec<f64>], k: usize, seed: u64) -> KMeans {
+        assert!(!points.is_empty());
+        assert!(k >= 1);
+        let d = points[0].len();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let k = k.min(points.len());
+
+        // k-means++ seeding.
+        let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+        centroids.push(points[rng.below(points.len() as u64) as usize].clone());
+        while centroids.len() < k {
+            let d2: Vec<f64> = points
+                .iter()
+                .map(|p| {
+                    centroids
+                        .iter()
+                        .map(|c| sq_dist(p, c))
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .collect();
+            let total: f64 = d2.iter().sum();
+            if total == 0.0 {
+                // all points identical to some centroid; duplicate one
+                centroids.push(centroids[0].clone());
+                continue;
+            }
+            let idx = rng.categorical(&d2);
+            centroids.push(points[idx].clone());
+        }
+
+        // Lloyd iterations.
+        let mut assign = vec![0usize; points.len()];
+        for _ in 0..100 {
+            let mut changed = false;
+            for (i, p) in points.iter().enumerate() {
+                let best = nearest(&centroids, p).0;
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed = true;
+                }
+            }
+            let mut sums = vec![vec![0.0; d]; k];
+            let mut counts = vec![0usize; k];
+            for (i, p) in points.iter().enumerate() {
+                counts[assign[i]] += 1;
+                for (j, &v) in p.iter().enumerate() {
+                    sums[assign[i]][j] += v;
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for j in 0..d {
+                        centroids[c][j] = sums[c][j] / counts[c] as f64;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        KMeans { centroids }
+    }
+
+    /// Index of the nearest centroid.
+    pub fn assign(&self, p: &[f64]) -> usize {
+        nearest(&self.centroids, p).0
+    }
+
+    /// Centroid magnitudes (L2 norm): used to order clusters into
+    /// motorcycles < cars < trucks by resource intensity.
+    pub fn centroid_norms(&self) -> Vec<f64> {
+        self.centroids
+            .iter()
+            .map(|c| c.iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect()
+    }
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn nearest(cs: &[Vec<f64>], p: &[f64]) -> (usize, f64) {
+    let mut best = (0, f64::INFINITY);
+    for (i, c) in cs.iter().enumerate() {
+        let d = sq_dist(p, c);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 90.0) - 4.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let f = LinearFit::fit(&xs, &ys);
+        assert!((f.intercept - 3.0).abs() < 1e-9);
+        assert!((f.slope - 2.0).abs() < 1e-9);
+        assert!((f.r2(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_noisy_recovers_slope() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.range_f64(0.0, 100.0)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.0 + 0.5 * x + rng.normal()).collect();
+        let f = LinearFit::fit(&xs, &ys);
+        assert!((f.slope - 0.5).abs() < 0.01, "slope={}", f.slope);
+        assert!(f.r2(&xs, &ys) > 0.95);
+    }
+
+    #[test]
+    fn quantile_fit_coverage_near_tau() {
+        let mut rng = Rng::new(6);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.range_f64(0.0, 10.0)).collect();
+        // heteroscedastic noise like real prefill latency
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x + rng.normal().abs() * (0.5 + 0.2 * x))
+            .collect();
+        let f = QuantileFit::fit(&xs, &ys, 0.9);
+        let cov = f.coverage(&xs, &ys);
+        assert!((cov - 0.9).abs() < 0.05, "coverage={cov}");
+        // P90 line must sit above the OLS line on average
+        let ols = LinearFit::fit(&xs, &ys);
+        assert!(f.predict(5.0) > ols.predict(5.0));
+    }
+
+    #[test]
+    fn quantile_fit_tau_one_majorizes() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let ys = vec![1.0, 2.5, 2.8, 4.2];
+        let f = QuantileFit::fit(&xs, &ys, 0.99);
+        let cov = f.coverage(&xs, &ys);
+        assert!(cov >= 0.75, "cov={cov}");
+    }
+
+    #[test]
+    fn kmeans_separates_three_scales() {
+        // three log-scale blobs like motorcycles / cars / trucks
+        let mut rng = Rng::new(7);
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for (label, center) in [(0, 1.5), (1, 2.8), (2, 4.5)] {
+            for _ in 0..200 {
+                pts.push(vec![
+                    center + rng.normal() * 0.2,
+                    center + rng.normal() * 0.2,
+                ]);
+                labels.push(label);
+            }
+        }
+        let km = KMeans::fit(&pts, 3, 42);
+        // order clusters by norm -> should recover the three blobs
+        let norms = km.centroid_norms();
+        let mut order: Vec<usize> = (0..3).collect();
+        order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap());
+        let rank = |c: usize| order.iter().position(|&o| o == c).unwrap();
+        let correct = pts
+            .iter()
+            .zip(&labels)
+            .filter(|(p, &l)| rank(km.assign(p)) == l)
+            .count();
+        assert!(correct as f64 / pts.len() as f64 > 0.97);
+    }
+
+    #[test]
+    fn kmeans_k_larger_than_points() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        let km = KMeans::fit(&pts, 5, 1);
+        assert!(km.centroids.len() <= 5);
+        assert!(km.assign(&[0.1, 0.1]) < km.centroids.len());
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (xs, ps) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+        assert_eq!(ps, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+}

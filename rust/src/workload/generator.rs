@@ -1,0 +1,320 @@
+//! Synthetic request generation calibrated to the paper's characterization.
+
+use crate::model::ModelProfile;
+use crate::request::{Modality, Request};
+use crate::util::rng::Rng;
+
+/// A workload mix: fraction of text/image/video requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mix {
+    pub name: &'static str,
+    pub text: f64,
+    pub image: f64,
+    pub video: f64,
+}
+
+/// Traditional text-only workload.
+pub const MIX_T0: Mix = Mix { name: "T0", text: 1.0, image: 0.0, video: 0.0 };
+/// Light multimodal mix: "a small fraction of image and video requests".
+pub const MIX_ML: Mix = Mix { name: "ML", text: 0.90, image: 0.07, video: 0.03 };
+/// Heavy multimodal mix: "significantly increases their share".
+pub const MIX_MH: Mix = Mix { name: "MH", text: 0.55, image: 0.30, video: 0.15 };
+
+impl Mix {
+    pub fn by_name(name: &str) -> Option<Mix> {
+        match name.to_ascii_uppercase().as_str() {
+            "T0" => Some(MIX_T0),
+            "ML" => Some(MIX_ML),
+            "MH" => Some(MIX_MH),
+            _ => None,
+        }
+    }
+}
+
+/// Dataset-marginal parameters (the ShareGPT / LLaVA-Instruct /
+/// LLaVA-Video analogues). One instance is shared by all models; vision
+/// token counts additionally depend on the model's tokenizer.
+#[derive(Debug, Clone)]
+pub struct DatasetParams {
+    /// Text prompt tokens: log-uniform [min, max] (Fig 2a text CDF).
+    pub text_tokens_min: f64,
+    pub text_tokens_max: f64,
+    /// Accompanying question length for image/video requests.
+    pub mm_question_tokens_min: f64,
+    pub mm_question_tokens_max: f64,
+    /// Video duration: lognormal (mu, sigma) clipped to [min, max] secs.
+    pub video_mu: f64,
+    pub video_sigma: f64,
+    pub video_min_s: f64,
+    pub video_max_s: f64,
+    /// Output tokens: lognormal (mu, sigma) clipped to [min, max].
+    pub out_mu: f64,
+    pub out_sigma: f64,
+    pub out_min: f64,
+    pub out_max: f64,
+}
+
+impl Default for DatasetParams {
+    fn default() -> Self {
+        DatasetParams {
+            text_tokens_min: 10.0,
+            text_tokens_max: 10_000.0,
+            mm_question_tokens_min: 8.0,
+            mm_question_tokens_max: 120.0,
+            // median exp(3.8) ≈ 45 s, long tail to 10 min
+            video_mu: 3.8,
+            video_sigma: 0.8,
+            video_min_s: 4.0,
+            video_max_s: 600.0,
+            // median exp(5.0) ≈ 150 output tokens
+            out_mu: 5.0,
+            out_sigma: 0.7,
+            out_min: 8.0,
+            out_max: 1024.0,
+        }
+    }
+}
+
+impl DatasetParams {
+    /// Scaled-down marginals for the TinyMLLM real engine: prompts must
+    /// fit the largest prefill bucket (512) and prompt+output must fit
+    /// MAX_SEQ (640). Same distribution *shapes* as the default set.
+    pub fn tiny() -> DatasetParams {
+        DatasetParams {
+            text_tokens_min: 8.0,
+            text_tokens_max: 280.0,
+            mm_question_tokens_min: 4.0,
+            mm_question_tokens_max: 40.0,
+            video_mu: 1.8, // median ≈ 6 s
+            video_sigma: 0.5,
+            video_min_s: 2.0,
+            video_max_s: 12.0,
+            out_mu: 3.2, // median ≈ 24 tokens
+            out_sigma: 0.5,
+            out_min: 4.0,
+            out_max: 96.0,
+        }
+    }
+}
+
+/// Seeded workload generator for one (model, mix, rate) configuration.
+pub struct WorkloadGen {
+    rng: Rng,
+    pub mix: Mix,
+    pub rate: f64,
+    pub params: DatasetParams,
+    profile: ModelProfile,
+    next_id: u64,
+    clock: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(profile: &ModelProfile, mix: Mix, rate: f64, seed: u64) -> Self {
+        let params = if profile.name == "tiny-mllm" {
+            DatasetParams::tiny()
+        } else {
+            DatasetParams::default()
+        };
+        WorkloadGen {
+            rng: Rng::new(seed),
+            mix,
+            rate,
+            params,
+            profile: profile.clone(),
+            next_id: 0,
+            clock: 0.0,
+        }
+    }
+
+    /// Generate the next request with a Poisson inter-arrival gap.
+    pub fn next_request(&mut self) -> Request {
+        self.clock += self.rng.exponential(self.rate);
+        let arrival = self.clock;
+        self.sample_at(arrival)
+    }
+
+    /// Generate `n` requests (arrivals strictly increasing).
+    pub fn generate(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Generate `n` requests of a fixed modality, all arriving at t=0
+    /// (characterization-in-isolation workloads, §2.2).
+    pub fn generate_isolated(&mut self, modality: Modality, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|_| {
+                let mut r = self.sample_modality(modality, 0.0);
+                r.arrival = 0.0;
+                r
+            })
+            .collect()
+    }
+
+    fn sample_at(&mut self, arrival: f64) -> Request {
+        let weights = [self.mix.text, self.mix.image, self.mix.video];
+        let modality = Modality::ALL[self.rng.categorical(&weights)];
+        self.sample_modality(modality, arrival)
+    }
+
+    fn sample_modality(&mut self, modality: Modality, arrival: f64) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let p = &self.params;
+        let output_tokens = self
+            .rng
+            .lognormal(p.out_mu, p.out_sigma)
+            .clamp(p.out_min, p.out_max) as u32;
+        match modality {
+            Modality::Text => Request {
+                id,
+                arrival,
+                modality,
+                text_tokens: self.rng.log_uniform(p.text_tokens_min, p.text_tokens_max) as u32,
+                mm_tokens: 0,
+                video_duration_s: 0.0,
+                output_tokens,
+            },
+            Modality::Image => {
+                let tok = &self.profile.tokenizer;
+                let mm = if tok.image_jitter > 0.0 {
+                    (tok.image_tokens
+                        * self.rng.lognormal(0.0, tok.image_jitter))
+                    .clamp(tok.image_tokens * 0.3, tok.image_tokens * 3.5)
+                        as u32
+                } else {
+                    tok.image_tokens as u32
+                };
+                Request {
+                    id,
+                    arrival,
+                    modality,
+                    text_tokens: self
+                        .rng
+                        .log_uniform(p.mm_question_tokens_min, p.mm_question_tokens_max)
+                        as u32,
+                    mm_tokens: mm,
+                    video_duration_s: 0.0,
+                    output_tokens,
+                }
+            }
+            Modality::Video => {
+                let dur = self
+                    .rng
+                    .lognormal(p.video_mu, p.video_sigma)
+                    .clamp(p.video_min_s, p.video_max_s);
+                Request {
+                    id,
+                    arrival,
+                    modality,
+                    text_tokens: self
+                        .rng
+                        .log_uniform(p.mm_question_tokens_min, p.mm_question_tokens_max)
+                        as u32,
+                    mm_tokens: self.profile.tokenizer.video_tokens(dur),
+                    video_duration_s: dur,
+                    output_tokens,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::util::stats;
+
+    fn gen(mix: Mix, seed: u64) -> WorkloadGen {
+        WorkloadGen::new(&by_name("llava-7b").unwrap(), mix, 2.0, seed)
+    }
+
+    #[test]
+    fn arrivals_increase_at_poisson_rate() {
+        let reqs = gen(MIX_MH, 1).generate(4000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 2.0).abs() < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn mix_proportions_respected() {
+        let reqs = gen(MIX_MH, 2).generate(20_000);
+        let frac = |m: Modality| {
+            reqs.iter().filter(|r| r.modality == m).count() as f64 / reqs.len() as f64
+        };
+        assert!((frac(Modality::Text) - 0.55).abs() < 0.02);
+        assert!((frac(Modality::Image) - 0.30).abs() < 0.02);
+        assert!((frac(Modality::Video) - 0.15).abs() < 0.02);
+    }
+
+    #[test]
+    fn t0_is_text_only() {
+        let reqs = gen(MIX_T0, 3).generate(1000);
+        assert!(reqs.iter().all(|r| r.modality == Modality::Text));
+        assert!(reqs.iter().all(|r| r.mm_tokens == 0));
+    }
+
+    #[test]
+    fn text_token_band_matches_fig2() {
+        let reqs = gen(MIX_T0, 4).generate(5000);
+        let toks: Vec<f64> = reqs.iter().map(|r| r.text_tokens as f64).collect();
+        assert!(stats::min(&toks) >= 10.0);
+        assert!(stats::max(&toks) <= 10_000.0);
+        // spans ~3 orders of magnitude
+        assert!(stats::percentile(&toks, 5.0) < 50.0);
+        assert!(stats::percentile(&toks, 95.0) > 4_000.0);
+    }
+
+    #[test]
+    fn image_tokens_near_constant_for_grid_models() {
+        // "near-vertical line for image requests" (Fig 2a)
+        let mut g = gen(MIX_MH, 5);
+        let reqs = g.generate_isolated(Modality::Image, 1000);
+        let mm: Vec<f64> = reqs.iter().map(|r| r.mm_tokens as f64).collect();
+        assert_eq!(stats::min(&mm), stats::max(&mm));
+        assert_eq!(stats::min(&mm), 729.0);
+    }
+
+    #[test]
+    fn qwen_image_tokens_variable() {
+        let p = by_name("qwen-7b").unwrap();
+        let mut g = WorkloadGen::new(&p, MIX_MH, 2.0, 6);
+        let reqs = g.generate_isolated(Modality::Image, 1000);
+        let mm: Vec<f64> = reqs.iter().map(|r| r.mm_tokens as f64).collect();
+        assert!(stats::std_dev(&mm) > 50.0);
+    }
+
+    #[test]
+    fn video_tokens_orders_of_magnitude_above_text() {
+        let p = by_name("qwen-7b").unwrap();
+        let mut g = WorkloadGen::new(&p, MIX_MH, 2.0, 7);
+        let vids = g.generate_isolated(Modality::Video, 2000);
+        let mm: Vec<f64> = vids.iter().map(|r| r.mm_tokens as f64).collect();
+        assert!(stats::percentile(&mm, 50.0) > 1_000.0);
+        assert!(stats::max(&mm) > 100_000.0, "max={}", stats::max(&mm));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(MIX_MH, 9).generate(100);
+        let b = gen(MIX_MH, 9).generate(100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.modality, y.modality);
+            assert_eq!(x.text_tokens, y.text_tokens);
+            assert_eq!(x.mm_tokens, y.mm_tokens);
+        }
+        let c = gen(MIX_MH, 10).generate(100);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.text_tokens != y.text_tokens));
+    }
+
+    #[test]
+    fn output_tokens_within_bounds() {
+        let reqs = gen(MIX_MH, 11).generate(5000);
+        assert!(reqs.iter().all(|r| (8..=1024).contains(&r.output_tokens)));
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload synthesis: the datasets and traffic mixes of the paper's §4.1,
+//! calibrated to the Fig-2 characterization.
+//!
+//! * ShareGPT analogue — text prompts, log-uniform 10..10^4 tokens;
+//! * LLaVA-Instruct analogue — one image per request, short question;
+//! * LLaVA-Video analogue — one video per request, lognormal duration;
+//! * Poisson arrivals at a configurable rate;
+//! * mixes T0 (text-only), ML (light multimodal), MH (heavy multimodal).
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{Mix, WorkloadGen, MIX_MH, MIX_ML, MIX_T0};
+pub use trace::{load_trace, save_trace};

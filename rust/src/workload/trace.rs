@@ -1,0 +1,117 @@
+//! Trace persistence: save/replay request traces as a simple line format.
+//!
+//! Enables (a) byte-identical comparisons between schedulers on the same
+//! arrival sequence, and (b) replaying externally produced traces (e.g.
+//! ServeGen-style production characterizations) through the coordinator.
+//!
+//! Format (one request per line, `#` comments):
+//!   id arrival modality text_tokens mm_tokens video_dur_s output_tokens
+
+use crate::request::{Modality, Request};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+pub fn save_trace(path: &Path, reqs: &[Request]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# id arrival modality text_tokens mm_tokens video_dur_s output_tokens")?;
+    for r in reqs {
+        writeln!(
+            f,
+            "{} {:.6} {} {} {} {:.3} {}",
+            r.id, r.arrival, r.modality, r.text_tokens, r.mm_tokens, r.video_duration_s,
+            r.output_tokens
+        )?;
+    }
+    Ok(())
+}
+
+pub fn load_trace(path: &Path) -> std::io::Result<Vec<Request>> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for (lineno, line) in f.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let err = |msg: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("trace line {}: {msg}: '{line}'", lineno + 1),
+            )
+        };
+        if fields.len() != 7 {
+            return Err(err("expected 7 fields"));
+        }
+        let modality = match fields[2] {
+            "text" => Modality::Text,
+            "image" => Modality::Image,
+            "video" => Modality::Video,
+            _ => return Err(err("bad modality")),
+        };
+        out.push(Request {
+            id: fields[0].parse().map_err(|_| err("bad id"))?,
+            arrival: fields[1].parse().map_err(|_| err("bad arrival"))?,
+            modality,
+            text_tokens: fields[3].parse().map_err(|_| err("bad text_tokens"))?,
+            mm_tokens: fields[4].parse().map_err(|_| err("bad mm_tokens"))?,
+            video_duration_s: fields[5].parse().map_err(|_| err("bad video_dur"))?,
+            output_tokens: fields[6].parse().map_err(|_| err("bad output_tokens"))?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::workload::{WorkloadGen, MIX_MH};
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("tcm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let reqs =
+            WorkloadGen::new(&by_name("llava-7b").unwrap(), MIX_MH, 2.0, 1).generate(200);
+        save_trace(&path, &reqs).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        assert_eq!(loaded.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&loaded) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.modality, b.modality);
+            assert_eq!(a.text_tokens, b.text_tokens);
+            assert_eq!(a.mm_tokens, b.mm_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.arrival - b.arrival).abs() < 1e-5);
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("tcm_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trace");
+        std::fs::write(&path, "1 0.0 text 10\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        std::fs::write(&path, "1 0.0 hologram 10 0 0 5\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("tcm_trace_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.trace");
+        std::fs::write(&path, "# header\n\n5 1.5 video 20 5000 60.0 99\n").unwrap();
+        let t = load_trace(&path).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].id, 5);
+        assert_eq!(t[0].modality, Modality::Video);
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration tests over the real PJRT path: artifacts must exist
+//! (`make artifacts`); tests skip gracefully when they don't so
+//! `cargo test` works pre-build.
+//!
+//! The golden test is the cross-language correctness anchor: the Rust
+//! runtime must reproduce JAX's greedy transcript token-for-token through
+//! HLO text → PJRT compile → execute, proving L1 (Pallas kernel), L2
+//! (model) and the Rust runtime agree.
+
+use tcm_serve::runtime::{literal_f32, Input, Runtime};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() && dir.join("prefill_32.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn load(keep: &[&str]) -> Option<Runtime> {
+    let dir = artifacts_dir()?;
+    let keep: Vec<String> = keep.iter().map(|s| s.to_string()).collect();
+    Some(Runtime::load_filtered(&dir, |n| keep.iter().any(|k| n == k)).expect("runtime load"))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+}
+
+#[test]
+fn golden_transcript_matches_jax() {
+    let Some(mut rt) = load(&["embed_32", "prefill_32", "decode_1"]) else { return };
+    let golden = std::fs::read_to_string(rt.dir().join("golden.txt")).expect("golden.txt");
+    let mut prompt: Vec<i32> = vec![];
+    let mut expected: Vec<i32> = vec![];
+    for line in golden.lines() {
+        if let Some(rest) = line.strip_prefix("prompt ") {
+            prompt = rest.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        } else if let Some(rest) = line.strip_prefix("tokens ") {
+            expected = rest.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        }
+    }
+    assert!(!prompt.is_empty() && !expected.is_empty());
+
+    let hp = rt.manifest.hparams.clone();
+    let n = prompt.len();
+    let mut padded = prompt.clone();
+    padded.resize(32, 0);
+
+    // embed -> prefill
+    let out = rt.execute("embed_32", &[Input::I32(&padded, vec![32])]).unwrap();
+    let emb = literal_f32(&out[0]).unwrap();
+    let out = rt
+        .execute(
+            "prefill_32",
+            &[Input::F32(&emb, vec![32, hp.d_model]), Input::ScalarI32(n as i32)],
+        )
+        .unwrap();
+    let logits = literal_f32(&out[0]).unwrap();
+    let mut kv = literal_f32(&out[1]).unwrap();
+    let mut toks = vec![argmax(&logits) as i32];
+
+    // decode loop (batch bucket 1)
+    let mut length = n as i32;
+    let kv_dims = vec![1, hp.n_layers, 2, hp.n_heads, hp.max_seq, hp.head_dim];
+    while toks.len() < expected.len() {
+        let ids = [*toks.last().unwrap()];
+        let out = rt
+            .execute(
+                "decode_1",
+                &[
+                    Input::I32(&ids, vec![1]),
+                    Input::F32(&kv, kv_dims.clone()),
+                    Input::I32(&[length], vec![1]),
+                ],
+            )
+            .unwrap();
+        let lg = literal_f32(&out[0]).unwrap();
+        kv = literal_f32(&out[1]).unwrap();
+        toks.push(argmax(&lg) as i32);
+        length += 1;
+    }
+    assert_eq!(toks, expected, "rust/PJRT transcript diverged from JAX");
+}
+
+#[test]
+fn prefill_padding_invariance_through_pjrt() {
+    let Some(mut rt) = load(&["embed_32", "embed_64", "prefill_32", "prefill_64"]) else {
+        return;
+    };
+    let hp = rt.manifest.hparams.clone();
+    let ids: Vec<i32> = (0..20).map(|i| (11 * i + 5) % hp.vocab as i32).collect();
+
+    let logits_for = |rt: &mut Runtime, bucket: usize| -> Vec<f32> {
+        let mut padded = ids.clone();
+        padded.resize(bucket, 0);
+        let out = rt
+            .execute(&format!("embed_{bucket}"), &[Input::I32(&padded, vec![bucket])])
+            .unwrap();
+        let emb = literal_f32(&out[0]).unwrap();
+        let out = rt
+            .execute(
+                &format!("prefill_{bucket}"),
+                &[Input::F32(&emb, vec![bucket, hp.d_model]), Input::ScalarI32(20)],
+            )
+            .unwrap();
+        literal_f32(&out[0]).unwrap()
+    };
+
+    let a = logits_for(&mut rt, 32);
+    let b = logits_for(&mut rt, 64);
+    assert_eq!(a.len(), hp.vocab);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4, "padding changed logits: {x} vs {y}");
+    }
+}
+
+#[test]
+fn encoder_produces_finite_embeddings() {
+    let Some(mut rt) = load(&["encoder_16"]) else { return };
+    let hp = rt.manifest.hparams.clone();
+    let pixels: Vec<f32> = (0..16 * hp.patch_dim).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let out = rt
+        .execute("encoder_16", &[Input::F32(&pixels, vec![16, hp.patch_dim])])
+        .unwrap();
+    let emb = literal_f32(&out[0]).unwrap();
+    assert_eq!(emb.len(), 16 * hp.d_model);
+    assert!(emb.iter().all(|v| v.is_finite()));
+    // non-degenerate
+    let mean: f32 = emb.iter().sum::<f32>() / emb.len() as f32;
+    assert!(emb.iter().any(|v| (v - mean).abs() > 1e-3));
+}
+
+#[test]
+fn batched_decode_matches_solo_decode() {
+    let Some(mut rt) = load(&["embed_32", "prefill_32", "decode_1", "decode_2"]) else {
+        return;
+    };
+    let hp = rt.manifest.hparams.clone();
+    let kv_dims1 = vec![1, hp.n_layers, 2, hp.n_heads, hp.max_seq, hp.head_dim];
+    let kv_dims2 = vec![2, hp.n_layers, 2, hp.n_heads, hp.max_seq, hp.head_dim];
+
+    // two different prompts
+    let prep = |rt: &mut Runtime, seed: i32, n: usize| -> (Vec<f32>, i32) {
+        let mut ids: Vec<i32> = (0..n as i32).map(|i| (seed * i + 7) % hp.vocab as i32).collect();
+        ids.resize(32, 0);
+        let out = rt.execute("embed_32", &[Input::I32(&ids, vec![32])]).unwrap();
+        let emb = literal_f32(&out[0]).unwrap();
+        let out = rt
+            .execute(
+                "prefill_32",
+                &[Input::F32(&emb, vec![32, hp.d_model]), Input::ScalarI32(n as i32)],
+            )
+            .unwrap();
+        let logits = literal_f32(&out[0]).unwrap();
+        let kv = literal_f32(&out[1]).unwrap();
+        (kv, argmax(&logits) as i32)
+    };
+    let (kv_a, tok_a) = prep(&mut rt, 3, 9);
+    let (kv_b, tok_b) = prep(&mut rt, 5, 14);
+
+    let solo = |rt: &mut Runtime, kv: &[f32], tok: i32, len: i32| -> Vec<f32> {
+        let out = rt
+            .execute(
+                "decode_1",
+                &[
+                    Input::I32(&[tok], vec![1]),
+                    Input::F32(kv, kv_dims1.clone()),
+                    Input::I32(&[len], vec![1]),
+                ],
+            )
+            .unwrap();
+        literal_f32(&out[0]).unwrap()
+    };
+    let la = solo(&mut rt, &kv_a, tok_a, 9);
+    let lb = solo(&mut rt, &kv_b, tok_b, 14);
+
+    let mut kv2 = kv_a.clone();
+    kv2.extend_from_slice(&kv_b);
+    let out = rt
+        .execute(
+            "decode_2",
+            &[
+                Input::I32(&[tok_a, tok_b], vec![2]),
+                Input::F32(&kv2, kv_dims2),
+                Input::I32(&[9, 14], vec![2]),
+            ],
+        )
+        .unwrap();
+    let lg = literal_f32(&out[0]).unwrap();
+    for i in 0..hp.vocab {
+        assert!((lg[i] - la[i]).abs() < 1e-4, "slot 0 logit {i}");
+        assert!((lg[hp.vocab + i] - lb[i]).abs() < 1e-4, "slot 1 logit {i}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration tests over the full coordinator + SimEngine stack, plus an
+//! end-to-end run of the coordinator over the RealEngine (PJRT) when
+//! artifacts are built.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::Scheduler;
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::{run_sim, run_sim_with_trace};
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::{Modality, Request};
+
+fn base_cfg(policy: &str) -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = policy.into();
+    c.num_requests = 200;
+    c.seed = 11;
+    c
+}
+
+fn req(id: u64, arrival: f64, m: Modality, text: u32, mm: u32, out: u32) -> Request {
+    Request {
+        id,
+        arrival,
+        modality: m,
+        text_tokens: text,
+        mm_tokens: mm,
+        video_duration_s: if m == Modality::Video { 30.0 } else { 0.0 },
+        output_tokens: out,
+    }
+}
+
+#[test]
+fn chunked_prefill_splits_long_prompts() {
+    // a 9000-token text prompt must take multiple iterations at budget 2048
+    let mut cfg = base_cfg("fcfs");
+    cfg.scheduler.token_budget = 2048;
+    let trace = vec![req(0, 0.0, Modality::Text, 9000, 0, 4)];
+    let r = run_sim_with_trace(&cfg, trace);
+    assert_eq!(r.report.outcomes.len(), 1);
+    // ceil(9000/2048)=5 prefill iterations + 3 decode iterations
+    assert!(r.stats.iterations >= 8, "iterations={}", r.stats.iterations);
+}
+
+#[test]
+fn hol_blocking_under_fcfs_vs_tcm() {
+    // one giant video then a burst of tiny text requests: FCFS makes the
+    // texts wait for the whole video prefill; TCM lets them through.
+    // The video needs ~0.7 s of CPU preprocessing, then ~7 s of GPU
+    // prefill; the text burst arrives while it is prefilling.
+    let video_tokens = 40_000;
+    let mk_trace = || {
+        let mut t = vec![req(0, 0.0, Modality::Video, 30, video_tokens, 64)];
+        for i in 1..=20 {
+            t.push(req(i, 1.0 + i as f64 * 0.05, Modality::Text, 60, 0, 16));
+        }
+        t
+    };
+    let fcfs = run_sim_with_trace(&base_cfg("fcfs"), mk_trace());
+    let tcm = run_sim_with_trace(&base_cfg("tcm"), mk_trace());
+    let f = fcfs.report.by_modality(Modality::Text).avg_ttft;
+    let t = tcm.report.by_modality(Modality::Text).avg_ttft;
+    assert!(
+        t < f * 0.5,
+        "TCM should at least halve text TTFT under HOL blocking: {t} vs {f}"
+    );
+}
+
+#[test]
+fn memory_pressure_triggers_preemption() {
+    let mut cfg = base_cfg("fcfs");
+    cfg.memory_frac = 0.02; // 8k tokens for llava-7b
+    cfg.num_requests = 60;
+    cfg.mix = "MH".into();
+    let r = run_sim(&cfg);
+    assert!(r.stats.preemptions > 0, "tight memory must force preemptions");
+    // everything still conserved
+    assert_eq!(r.report.outcomes.len() + r.stats.dropped as usize, 60);
+}
+
+#[test]
+fn oversized_prompt_is_dropped_not_wedged() {
+    let mut cfg = base_cfg("fcfs");
+    cfg.memory_frac = 0.01; // 4000 tokens capacity
+    let trace = vec![
+        req(0, 0.0, Modality::Video, 30, 100_000, 64), // can never fit
+        req(1, 0.1, Modality::Text, 50, 0, 8),
+    ];
+    let r = run_sim_with_trace(&cfg, trace);
+    assert_eq!(r.stats.dropped, 1);
+    assert_eq!(r.report.outcomes.len(), 1);
+    assert_eq!(r.report.outcomes[0].id, 1);
+}
+
+#[test]
+fn decode_growth_eviction_drops_sole_oversized_request() {
+    // prompt fits but prompt+output exceeds capacity and nothing else can
+    // be evicted: the request must be dropped, not loop forever.
+    let mut cfg = base_cfg("fcfs");
+    cfg.memory_frac = 0.002; // 800 tokens
+    let trace = vec![req(0, 0.0, Modality::Text, 700, 0, 512)];
+    let r = run_sim_with_trace(&cfg, trace);
+    assert_eq!(r.stats.dropped, 1);
+    assert_eq!(r.report.outcomes.len(), 0);
+}
+
+#[test]
+fn queue_manager_sees_classified_requests() {
+    let cfg = base_cfg("tcm");
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(&cfg, &profile);
+    let engine = Box::new(SimEngine::new(&profile));
+    let mut sched = Scheduler::new(cfg.clone(), policy, engine);
+    let trace = tcm_serve::experiments::make_trace(&cfg, &profile);
+    let n = trace.len() as u64;
+    sched.run(trace);
+    let qm = sched.queue_manager();
+    let enq: u64 = tcm_serve::request::Class::ALL
+        .iter()
+        .map(|&c| qm.stats(c).enqueued)
+        .sum();
+    assert!(enq >= n, "every request must pass through a class queue");
+    assert!(qm.is_empty(), "queues drained at completion");
+    sched.check_invariants().unwrap();
+}
+
+#[test]
+fn ttft_not_before_preprocess_completes() {
+    let cfg = base_cfg("fcfs");
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let r = run_sim_with_trace(&cfg, vec![req(0, 1.0, Modality::Video, 30, 5000, 16)]);
+    let o = &r.report.outcomes[0];
+    let pre = profile.preprocess_time(&req(0, 1.0, Modality::Video, 30, 5000, 16));
+    assert!(o.ttft() >= pre, "ttft {} < preprocess {pre}", o.ttft());
+}
+
+#[test]
+fn preprocess_pool_contention_serializes() {
+    // more simultaneous videos than workers: later ones wait for a CPU
+    // slot. Long videos (heavy preprocess) with small token counts (light
+    // GPU) make the CPU stage the bottleneck.
+    let mut cfg = base_cfg("fcfs");
+    cfg.scheduler.preprocess_workers = 2;
+    let trace: Vec<Request> = (0..6)
+        .map(|i| {
+            let mut r = req(i, 0.0, Modality::Video, 30, 500, 8);
+            r.video_duration_s = 60.0;
+            r
+        })
+        .collect();
+    let a = run_sim_with_trace(&cfg, trace.clone());
+    cfg.scheduler.preprocess_workers = 6;
+    let b = run_sim_with_trace(&cfg, trace);
+    assert!(
+        a.report.overall().avg_ttft > b.report.overall().avg_ttft,
+        "fewer preprocess workers must increase TTFT"
+    );
+}
+
+#[test]
+fn slo_scale_loosens_violations() {
+    let mut strict = base_cfg("tcm");
+    strict.slo_scale = 1.5;
+    strict.rate = 4.0;
+    let mut loose = strict.clone();
+    loose.slo_scale = 20.0;
+    let s = run_sim(&strict).report.overall().slo_violation_rate;
+    let l = run_sim(&loose).report.overall().slo_violation_rate;
+    assert!(l <= s, "looser SLO cannot violate more: {l} > {s}");
+}
+
+// ---------------------------------------------------------------------
+// Real engine end-to-end (skips unless `make artifacts` has run)
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_drives_real_engine_end_to_end() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = tcm_serve::runtime::Runtime::load(&dir).expect("runtime");
+    let engine = Box::new(tcm_serve::engine::real::RealEngine::new(rt));
+
+    let mut cfg = ServeConfig::default();
+    cfg.model = "tiny-mllm".into();
+    cfg.policy = "tcm".into();
+    cfg.rate = 50.0; // tiny model is fast; saturate a bit
+    cfg.num_requests = 12;
+    cfg.seed = 3;
+    cfg.scheduler.atomic_prefill = true;
+    cfg.scheduler.max_running = 8;
+
+    let profile = tcm_serve::model::by_name("tiny-mllm").unwrap();
+    let trace = tcm_serve::experiments::make_trace(&cfg, &profile);
+    let policy = build_policy(&cfg, &profile);
+    let mut sched = Scheduler::new(cfg, policy, engine);
+    let report = sched.run(trace);
+
+    assert_eq!(report.outcomes.len(), 12, "all requests served");
+    for o in &report.outcomes {
+        assert!(o.ttft() > 0.0);
+        assert!(o.finish >= o.first_token);
+    }
+    assert_eq!(sched.engine().name(), "real-pjrt");
+    sched.check_invariants().unwrap();
+}

