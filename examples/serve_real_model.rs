@@ -5,80 +5,99 @@
 //!
 //! All three layers compose here: the Pallas flash-attention kernel (L1)
 //! is inside the prefill HLO (L2), loaded and executed by the Rust
-//! coordinator (L3). Requires `make artifacts`.
+//! coordinator (L3). Requires `make artifacts` and a build with
+//! `RUSTFLAGS="--cfg pjrt_runtime"` (the PJRT path needs the external
+//! xla + anyhow crates; see rust/README.md).
 //!
 //! Run: `cargo run --release --example serve_real_model [-- <n_requests>]`
 
-use tcm_serve::config::ServeConfig;
-use tcm_serve::coordinator::Scheduler;
-use tcm_serve::engine::real::RealEngine;
-use tcm_serve::experiments::make_trace;
-use tcm_serve::policies::build_policy;
-use tcm_serve::report;
-use tcm_serve::request::Modality;
-use tcm_serve::runtime::Runtime;
+#[cfg(pjrt_runtime)]
+mod real {
+    use tcm_serve::config::ServeConfig;
+    use tcm_serve::coordinator::Scheduler;
+    use tcm_serve::engine::real::RealEngine;
+    use tcm_serve::experiments::make_trace;
+    use tcm_serve::policies::build_policy;
+    use tcm_serve::report;
+    use tcm_serve::request::Modality;
+    use tcm_serve::runtime::Runtime;
 
-fn main() {
-    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
+    pub fn run() {
+        let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("artifacts missing — run `make artifacts` first");
+            std::process::exit(1);
+        }
+
+        println!("loading + compiling artifacts from {} ...", dir.display());
+        let t0 = std::time::Instant::now();
+        let rt = Runtime::load(&dir).expect("runtime load");
+        println!(
+            "compiled {} executables in {:.1}s",
+            rt.artifact_names().len(),
+            t0.elapsed().as_secs_f64()
+        );
+
+        let mut cfg = ServeConfig::default();
+        cfg.model = "tiny-mllm".into();
+        cfg.policy = "tcm".into();
+        cfg.mix = "MH".into();
+        cfg.rate = 30.0;
+        cfg.num_requests = n;
+        cfg.seed = 7;
+        cfg.scheduler.atomic_prefill = true; // whole-prompt prefill buckets
+        cfg.scheduler.max_running = 8;
+
+        let profile = tcm_serve::model::by_name("tiny-mllm").unwrap();
+        let trace = make_trace(&cfg, &profile);
+        let by = |m: Modality| trace.iter().filter(|r| r.modality == m).count();
+        println!(
+            "serving {} requests (text {}, image {}, video {}) at {:.0} req/s (simulated arrivals)",
+            n,
+            by(Modality::Text),
+            by(Modality::Image),
+            by(Modality::Video),
+            cfg.rate
+        );
+
+        let policy = build_policy(&cfg, &profile);
+        let engine = Box::new(RealEngine::new(rt));
+        let mut sched = Scheduler::new(cfg, policy, engine);
+
+        let wall = std::time::Instant::now();
+        let rep = sched.run(trace);
+        let wall = wall.elapsed().as_secs_f64();
+
+        report::header("real-engine serving report (wall-clock seconds)");
+        report::mcto_rows("tiny-mllm/tcm", &rep);
+
+        let total_tokens: u64 = rep.outcomes.iter().map(|o| o.output_tokens as u64).sum();
+        println!(
+            "\ncompleted {}/{} requests | wall {:.1}s | engine iterations {} | \
+             decode throughput {:.1} tok/s | scheduler planning {:.1} ms total",
+            rep.outcomes.len(),
+            n,
+            wall,
+            sched.stats.iterations,
+            total_tokens as f64 / wall,
+            sched.stats.planning_time_s * 1e3,
+        );
+        sched.check_invariants().expect("invariants");
+        println!("OK — three layers composed: Pallas kernel -> TinyMLLM HLO -> PJRT -> coordinator");
     }
+}
 
-    println!("loading + compiling artifacts from {} ...", dir.display());
-    let t0 = std::time::Instant::now();
-    let rt = Runtime::load(&dir).expect("runtime load");
-    println!(
-        "compiled {} executables in {:.1}s",
-        rt.artifact_names().len(),
-        t0.elapsed().as_secs_f64()
+#[cfg(pjrt_runtime)]
+fn main() {
+    real::run();
+}
+
+#[cfg(not(pjrt_runtime))]
+fn main() {
+    eprintln!(
+        "serve_real_model needs the PJRT runtime, which is compile-gated: rebuild with \
+         RUSTFLAGS=\"--cfg pjrt_runtime\" (requires the xla + anyhow crates, see rust/README.md)."
     );
-
-    let mut cfg = ServeConfig::default();
-    cfg.model = "tiny-mllm".into();
-    cfg.policy = "tcm".into();
-    cfg.mix = "MH".into();
-    cfg.rate = 30.0;
-    cfg.num_requests = n;
-    cfg.seed = 7;
-    cfg.scheduler.atomic_prefill = true; // whole-prompt prefill buckets
-    cfg.scheduler.max_running = 8;
-
-    let profile = tcm_serve::model::by_name("tiny-mllm").unwrap();
-    let trace = make_trace(&cfg, &profile);
-    let by = |m: Modality| trace.iter().filter(|r| r.modality == m).count();
-    println!(
-        "serving {} requests (text {}, image {}, video {}) at {:.0} req/s (simulated arrivals)",
-        n,
-        by(Modality::Text),
-        by(Modality::Image),
-        by(Modality::Video),
-        cfg.rate
-    );
-
-    let policy = build_policy(&cfg, &profile);
-    let engine = Box::new(RealEngine::new(rt));
-    let mut sched = Scheduler::new(cfg, policy, engine);
-
-    let wall = std::time::Instant::now();
-    let rep = sched.run(trace);
-    let wall = wall.elapsed().as_secs_f64();
-
-    report::header("real-engine serving report (wall-clock seconds)");
-    report::mcto_rows("tiny-mllm/tcm", &rep);
-
-    let total_tokens: u64 = rep.outcomes.iter().map(|o| o.output_tokens as u64).sum();
-    println!(
-        "\ncompleted {}/{} requests | wall {:.1}s | engine iterations {} | \
-         decode throughput {:.1} tok/s | scheduler planning {:.1} ms total",
-        rep.outcomes.len(),
-        n,
-        wall,
-        sched.stats.iterations,
-        total_tokens as f64 / wall,
-        sched.stats.planning_time_s * 1e3,
-    );
-    sched.check_invariants().expect("invariants");
-    println!("OK — three layers composed: Pallas kernel -> TinyMLLM HLO -> PJRT -> coordinator");
+    std::process::exit(1);
 }

@@ -1,15 +1,80 @@
 //! Trace persistence + A/B policy comparison: generate a workload trace,
 //! save it, reload it, and replay the identical arrival sequence through
-//! every scheduling policy.
+//! every scheduling policy — driving the scheduler through its *online*
+//! stepping API (`inject` / `step` / `advance_to`), exactly as the server
+//! leader does, with requests injected only once virtual time reaches
+//! their arrival.
+//!
+//! The stepped replay is checked bit-identical against the batch
+//! `Scheduler::run` wrapper on every policy, so this example doubles as a
+//! live demonstration that online stepping and batch simulation agree.
 //!
 //! This is how external traces (e.g. ServeGen-style production
 //! characterizations, converted to the trace line format) plug into the
 //! system: `cargo run --release --example traffic_replay -- my.trace`
 
 use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
 use tcm_serve::experiments::{make_trace, run_sim_with_trace};
+use tcm_serve::metrics::Report;
+use tcm_serve::policies::build_policy;
 use tcm_serve::report;
+use tcm_serve::request::Request;
 use tcm_serve::workload::{load_trace, save_trace};
+
+/// Replay a trace through the stepping API in virtual time: hold each
+/// request outside the scheduler until its arrival, step between
+/// injections, and count the events streamed along the way.
+fn replay_stepped(cfg: &ServeConfig, trace: &[Request]) -> (Report, u64, u64) {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(cfg, &profile);
+    let mut sched = Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&profile)));
+
+    let mut pending = trace.to_vec();
+    pending.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let mut iter = pending.into_iter();
+    let mut next = iter.next();
+    let mut first_tokens = 0u64;
+    let mut preemptions = 0u64;
+
+    loop {
+        // online injection: only hand over requests that have "arrived"
+        while next.as_ref().is_some_and(|r| r.arrival <= sched.now()) {
+            sched.inject(next.take().unwrap());
+            next = iter.next();
+        }
+        let outcome = sched.step();
+        for ev in sched.take_events() {
+            match ev {
+                RequestEvent::FirstToken { .. } => first_tokens += 1,
+                RequestEvent::Preempted { .. } => preemptions += 1,
+                _ => {}
+            }
+        }
+        // jump virtual time to whatever comes first: the scheduler's next
+        // internal event or the next external arrival
+        let external = next.as_ref().map(|r| r.arrival);
+        match outcome {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => {
+                sched.advance_to(external.map_or(next_event, |a| next_event.min(a)));
+            }
+            StepOutcome::Blocked { next_event: Some(t) } => {
+                sched.advance_to(external.map_or(t, |a| t.min(a)));
+            }
+            StepOutcome::Blocked { next_event: None } => match external {
+                Some(a) => sched.advance_to(a),
+                None => sched.drop_blocked(),
+            },
+            StepOutcome::Drained => match external {
+                Some(a) => sched.advance_to(a),
+                None => break,
+            },
+        }
+    }
+    (sched.report(), first_tokens, preemptions)
+}
 
 fn main() {
     let mut cfg = ServeConfig::default();
@@ -38,11 +103,32 @@ fn main() {
         }
     };
 
-    report::header("identical trace through every policy (MH, llava-7b)");
+    report::header("identical trace through every policy (MH, llava-7b) — stepped replay");
     for policy in ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"] {
         let mut c = cfg.clone();
         c.policy = policy.into();
-        let r = run_sim_with_trace(&c, trace.clone());
-        report::summary_row(policy, &r.report.overall());
+
+        let (stepped, first_tokens, preemptions) = replay_stepped(&c, &trace);
+        let batch = run_sim_with_trace(&c, trace.clone());
+
+        // online stepping and the batch wrapper must agree exactly
+        assert_eq!(stepped.outcomes.len(), batch.report.outcomes.len(), "{policy}: outcomes");
+        assert_eq!(stepped.failed.len(), batch.report.failed.len(), "{policy}: drops");
+        for (a, b) in stepped.outcomes.iter().zip(&batch.report.outcomes) {
+            assert_eq!(a.id, b.id, "{policy}: outcome order");
+            assert_eq!(
+                a.first_token.to_bits(),
+                b.first_token.to_bits(),
+                "{policy}: ttft diverged for req {}",
+                a.id
+            );
+        }
+
+        report::summary_row(policy, &stepped.overall());
+        println!(
+            "    streamed: {first_tokens} first-token events, {preemptions} preemption \
+             events, {} drops (batch-identical ✓)",
+            stepped.failed.len()
+        );
     }
 }

@@ -1,0 +1,7 @@
+fn main() {
+    // Declare the custom cfg gating the PJRT path (see README.md) so
+    // rustc's `unexpected_cfgs` lint (1.80+) accepts it; older toolchains
+    // ignore the instruction.
+    println!("cargo:rustc-check-cfg=cfg(pjrt_runtime)");
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -18,4 +18,4 @@ pub mod queues;
 pub mod scheduler;
 pub mod state;
 
-pub use scheduler::{SchedStats, Scheduler};
+pub use scheduler::{RequestEvent, SchedStats, Scheduler, StepOutcome};

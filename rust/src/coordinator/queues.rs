@@ -13,17 +13,24 @@ use std::collections::VecDeque;
 /// Running statistics for one class queue.
 #[derive(Debug, Clone, Default)]
 pub struct QueueStats {
-    /// Total requests ever enqueued.
+    /// Distinct requests enqueued on readiness (first entry only;
+    /// re-enqueues after preemption are counted in `requeued`).
     pub enqueued: u64,
-    /// Total requests dequeued (admitted to the engine).
+    /// Re-enqueues after preemption-by-recompute.
+    pub requeued: u64,
+    /// Distinct requests that left the queue (first dequeue only, so a
+    /// preempted-and-readmitted request counts once).
     pub dequeued: u64,
-    /// Sum of waiting times at dequeue (avg = sum / dequeued).
+    /// Sum of time-in-queue across *all* visits, including post-preemption
+    /// requeues (avg_wait = sum / dequeued = average total queueing time
+    /// per request).
     pub total_wait: f64,
     /// High-water mark of queue length.
     pub peak_len: usize,
 }
 
 impl QueueStats {
+    /// Average total time-in-queue per request (all visits summed).
     pub fn avg_wait(&self) -> f64 {
         if self.dequeued == 0 {
             0.0
@@ -38,6 +45,8 @@ impl QueueStats {
 struct Entry {
     id: u64,
     enqueue_time: f64,
+    /// Re-enqueue after preemption (not a fresh arrival).
+    requeue: bool,
 }
 
 /// Three class queues (M, C, T) with FCFS order within each.
@@ -54,9 +63,20 @@ impl QueueManager {
 
     pub fn enqueue(&mut self, class: Class, id: u64, now: f64) {
         let q = &mut self.queues[class as usize];
-        q.push_back(Entry { id, enqueue_time: now });
+        q.push_back(Entry { id, enqueue_time: now, requeue: false });
         let s = &mut self.stats[class as usize];
         s.enqueued += 1;
+        s.peak_len = s.peak_len.max(q.len());
+    }
+
+    /// Re-enqueue a preempted request. Tracked in `requeued` (not
+    /// `enqueued`) so preemptions don't inflate arrival counts, while its
+    /// renewed waiting time still accrues into `total_wait` at dequeue.
+    pub fn requeue(&mut self, class: Class, id: u64, now: f64) {
+        let q = &mut self.queues[class as usize];
+        q.push_back(Entry { id, enqueue_time: now, requeue: true });
+        let s = &mut self.stats[class as usize];
+        s.requeued += 1;
         s.peak_len = s.peak_len.max(q.len());
     }
 
@@ -67,7 +87,9 @@ impl QueueManager {
         if let Some(pos) = q.iter().position(|e| e.id == id) {
             let e = q.remove(pos).unwrap();
             let s = &mut self.stats[class as usize];
-            s.dequeued += 1;
+            if !e.requeue {
+                s.dequeued += 1;
+            }
             s.total_wait += (now - e.enqueue_time).max(0.0);
             true
         } else {
@@ -130,6 +152,20 @@ mod tests {
         assert_eq!(s.enqueued, 2);
         assert_eq!(s.dequeued, 2);
         assert!((s.avg_wait() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requeues_tracked_separately_with_total_wait() {
+        let mut qm = QueueManager::new();
+        qm.enqueue(Class::Car, 1, 0.0);
+        assert!(qm.dequeue(Class::Car, 1, 2.0)); // admitted after 2 s
+        qm.requeue(Class::Car, 1, 3.0); // preempted, back in queue
+        assert!(qm.dequeue(Class::Car, 1, 5.0)); // readmitted after 2 more s
+        let s = qm.stats(Class::Car);
+        assert_eq!(s.enqueued, 1, "requeue must not count as a fresh enqueue");
+        assert_eq!(s.requeued, 1);
+        assert_eq!(s.dequeued, 1, "one distinct request left the queue");
+        assert!((s.avg_wait() - 4.0).abs() < 1e-12, "total time-in-queue, not last visit");
     }
 
     #[test]

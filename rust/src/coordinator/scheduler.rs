@@ -13,6 +13,26 @@
 //!    semantics);
 //! 4. execute the plan on the engine; advance time; emit tokens
 //!    (prefill-completing iterations emit the first token → TTFT).
+//!
+//! # Stepping API (online serving)
+//!
+//! The loop is re-entrant: callers drive it one iteration at a time with
+//! new arrivals injected between iterations, which is what real online
+//! serving needs (the server leader ingests from an mpsc channel between
+//! steps) and what the batch path wraps:
+//!
+//! * [`Scheduler::inject`] — hand a request to the scheduler; it enters
+//!   the CPU preprocess stage when virtual time reaches its arrival.
+//! * [`Scheduler::step`] — process due arrivals/readiness, then plan,
+//!   execute and apply **one** iteration; returns a [`StepOutcome`]
+//!   telling the caller whether work happened and when to come back.
+//! * [`Scheduler::advance_to`] — move the clock forward (wall-clock
+//!   mapping for servers, event jumps for simulations).
+//! * [`Scheduler::take_events`] — drain the [`RequestEvent`]s emitted
+//!   since the last call, so callers observe per-iteration progress
+//!   (first tokens, preemptions, drops) instead of a post-hoc report.
+//! * [`Scheduler::drain`] — step until nothing is left; the batch
+//!   [`Scheduler::run`] is exactly `inject` everything + `drain`.
 
 use crate::config::ServeConfig;
 use crate::coordinator::queues::QueueManager;
@@ -21,7 +41,7 @@ use crate::engine::kv_cache::KvCache;
 use crate::engine::{DecodeItem, EncodeItem, Engine, PrefillItem, StepPlan};
 use crate::metrics::Report;
 use crate::model::ModelProfile;
-use crate::policies::Policy;
+use crate::policies::{OrderKey, Policy, VictimKey};
 use crate::request::Request;
 use crate::sim::EventQueue;
 use std::collections::HashMap;
@@ -35,9 +55,47 @@ enum ReserveMode {
     Growth,
     /// Admission for a policy that may preempt: victims must have strictly
     /// worse keys than the candidate.
-    AdmitPreempting { cand_key: f64 },
+    AdmitPreempting { cand_key: OrderKey },
     /// Admission without preemption (vLLM FCFS): fail quietly.
     AdmitPlain,
+}
+
+/// Result of one [`Scheduler::step`] call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepOutcome {
+    /// One iteration plan was executed; the clock advanced by `dt`
+    /// seconds (virtual for the simulator, wall for the real engine).
+    Executed { dt: f64 },
+    /// No request is ready or running. `next_event` is the scheduler-time
+    /// of the next internal wake-up (a pending arrival or a preprocess
+    /// completion); `advance_to` it (or wait that long in wall-clock) and
+    /// step again.
+    Idle { next_event: f64 },
+    /// Requests exist but nothing could be planned (memory/slot blocked).
+    /// `next_event` is the next internal wake-up, if any; with `None`
+    /// the blockage is permanent unless new requests are injected —
+    /// batch callers `drop_blocked` at that point.
+    Blocked { next_event: Option<f64> },
+    /// No requests anywhere (pending, ready, running) — fully drained.
+    Drained,
+}
+
+/// Per-request lifecycle notifications, emitted as the iteration that
+/// causes them is applied and drained by callers via
+/// [`Scheduler::take_events`]. Times are scheduler-clock seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RequestEvent {
+    /// CPU preprocessing finished; the request is schedulable.
+    Ready { id: u64, t: f64 },
+    /// The prefill-completing iteration produced the first token (TTFT).
+    FirstToken { id: u64, t: f64 },
+    /// Preempted-by-recompute and re-queued.
+    Preempted { id: u64, t: f64 },
+    /// All output tokens emitted.
+    Finished { id: u64, t: f64 },
+    /// Dropped: the request can never be scheduled (prompt exceeds KV
+    /// capacity, or terminally blocked at drain).
+    Dropped { id: u64, t: f64 },
 }
 
 /// Aggregate counters for introspection and the perf benches.
@@ -65,18 +123,21 @@ pub struct Scheduler {
     running: Vec<u64>,
     queues: QueueManager,
     preproc_free: Vec<f64>,
+    /// Injected requests not yet due (keyed by arrival time).
+    arrivals: EventQueue<Request>,
     ready_events: EventQueue<u64>,
     now: f64,
 
     finished: Vec<u64>,
+    failed: Vec<u64>,
+    events: Vec<RequestEvent>,
     pub stats: SchedStats,
 }
 
 impl Scheduler {
     pub fn new(cfg: ServeConfig, policy: Box<dyn Policy>, engine: Box<dyn Engine>) -> Scheduler {
         let profile = crate::model::by_name(&cfg.model).expect("validated model name");
-        let capacity =
-            (profile.kv_capacity_tokens as f64 * cfg.memory_frac) as u64;
+        let capacity = (profile.kv_capacity_tokens as f64 * cfg.memory_frac) as u64;
         let kv = KvCache::new(capacity, cfg.scheduler.kv_block_tokens);
         let preproc_free = vec![0.0; cfg.scheduler.preprocess_workers.max(1)];
         Scheduler {
@@ -90,9 +151,12 @@ impl Scheduler {
             running: Vec::new(),
             queues: QueueManager::new(),
             preproc_free,
+            arrivals: EventQueue::new(),
             ready_events: EventQueue::new(),
             now: 0.0,
             finished: Vec::new(),
+            failed: Vec::new(),
+            events: Vec::new(),
             stats: SchedStats::default(),
         }
     }
@@ -121,121 +185,173 @@ impl Scheduler {
         self.engine.as_mut()
     }
 
-    /// Run a full trace to completion and report outcomes.
+    // -----------------------------------------------------------------
+    // stepping API
+    // -----------------------------------------------------------------
+
+    /// Hand a request to the scheduler. It enters CPU preprocessing once
+    /// the clock reaches its arrival time; a request whose arrival is
+    /// already in the past is ingested on the next step.
+    pub fn inject(&mut self, req: Request) {
+        let due = req.arrival.max(self.arrivals.now());
+        self.arrivals.schedule(due, req);
+    }
+
+    /// Move the scheduler clock forward (never backward). Servers call
+    /// this with wall-clock elapsed time between steps; simulations jump
+    /// to the `next_event` times returned by [`Scheduler::step`].
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Drain the request events emitted since the last call.
+    pub fn take_events(&mut self) -> Vec<RequestEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Run one plan/execute/apply iteration, after processing arrivals
+    /// and preprocess completions due at the current clock.
+    pub fn step(&mut self) -> StepOutcome {
+        // 1. ingest arrivals due now
+        while let Some((_, req)) = self.arrivals.pop_until(self.now) {
+            self.start_preprocess(req);
+        }
+        // 2. preprocess completions due now
+        while let Some((t, id)) = self.ready_events.pop_until(self.now) {
+            self.mark_ready(id, t);
+        }
+
+        let has_work = !self.waiting.is_empty() || !self.running.is_empty();
+        if !has_work {
+            return match self.next_event_time() {
+                Some(t) => StepOutcome::Idle { next_event: t },
+                None => StepOutcome::Drained,
+            };
+        }
+
+        // 3. plan
+        let t_plan = std::time::Instant::now();
+        let plan = self.build_plan();
+        self.stats.planning_time_s += t_plan.elapsed().as_secs_f64();
+
+        if plan.is_empty() {
+            // Everything schedulable is blocked; the caller decides
+            // whether to jump to the next event, wait for injections, or
+            // drop the blocked tail.
+            return StepOutcome::Blocked { next_event: self.next_event_time() };
+        }
+
+        // 4. execute
+        let dt = self.engine.execute(&plan);
+        self.stats.busy_time_s += dt;
+        self.stats.iterations += 1;
+        self.now += dt;
+        self.apply_results(&plan);
+
+        // Troubleshooting aid: TCM_TRACE=2 dumps iterations 1000-1060.
+        if std::env::var_os("TCM_TRACE").map(|v| v == "2").unwrap_or(false)
+            && (1000..1060).contains(&self.stats.iterations)
+        {
+            let desc: Vec<String> = self
+                .running
+                .iter()
+                .chain(self.waiting.iter())
+                .map(|&id| {
+                    let s = &self.states[&id];
+                    format!(
+                        "r{id}[{:?} c={} d={} prompt={} key={:?} vkey={:?} rdy={:.3} cls={:?}]",
+                        s.phase,
+                        s.cached_rows,
+                        s.decoded,
+                        s.req.prefill_tokens(),
+                        self.policy.order_key(s, self.now),
+                        self.policy.victim_key(s, self.now),
+                        s.ready_time,
+                        s.class,
+                    )
+                })
+                .collect();
+            eprintln!(
+                "[it {}] plan: pf={:?} dec={:?} | {}",
+                self.stats.iterations,
+                plan.prefills
+                    .iter()
+                    .map(|p| (p.req_id, p.chunk_tokens))
+                    .collect::<Vec<_>>(),
+                plan.decodes.iter().map(|d| d.req_id).collect::<Vec<_>>(),
+                desc.join(" ")
+            );
+        }
+        // Troubleshooting aid: TCM_TRACE=1 dumps periodic state.
+        if self.stats.iterations % 100_000 == 0 && std::env::var_os("TCM_TRACE").is_some() {
+            eprintln!(
+                "[tcm-trace] iter={} now={:.1} waiting={} running={} finished={} \
+                 dropped={} preempt={} kv_used={}/{} dt={dt:.6}",
+                self.stats.iterations,
+                self.now,
+                self.waiting.len(),
+                self.running.len(),
+                self.finished.len(),
+                self.stats.dropped,
+                self.stats.preemptions,
+                self.kv.used_blocks(),
+                self.kv.total_blocks(),
+            );
+        }
+
+        StepOutcome::Executed { dt }
+    }
+
+    /// Step until nothing is left, jumping virtual time across idle gaps
+    /// and dropping terminally blocked requests (no future event can ever
+    /// unblock them), then report. Callers that care about per-iteration
+    /// events should drive [`Scheduler::step`] themselves.
+    pub fn drain(&mut self) -> Report {
+        loop {
+            self.events.clear();
+            match self.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => self.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => self.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => self.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+        }
+        self.events.clear();
+        self.report()
+    }
+
+    /// Run a full trace to completion and report outcomes — a thin
+    /// wrapper over the stepping API (inject everything, drain).
     pub fn run(&mut self, trace: Vec<Request>) -> Report {
         let mut trace = trace;
         trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        let mut idx = 0;
-
-        loop {
-            // 1. ingest arrivals due now
-            while idx < trace.len() && trace[idx].arrival <= self.now {
-                self.start_preprocess(trace[idx].clone());
-                idx += 1;
-            }
-            // 2. preprocess completions due now
-            while let Some((t, id)) = self.ready_events.pop_until(self.now) {
-                self.mark_ready(id, t);
-            }
-
-            let has_work = !self.waiting.is_empty() || !self.running.is_empty();
-            if !has_work {
-                match self.next_event_time(&trace, idx) {
-                    Some(t) => {
-                        self.now = self.now.max(t);
-                        continue;
-                    }
-                    None => break, // drained
-                }
-            }
-
-            // 3. plan
-            let t_plan = std::time::Instant::now();
-            let plan = self.build_plan();
-            self.stats.planning_time_s += t_plan.elapsed().as_secs_f64();
-
-            if plan.is_empty() {
-                // Everything schedulable is blocked; jump to the next
-                // external event, or drop the blocked tail if none exists.
-                match self.next_event_time(&trace, idx) {
-                    Some(t) => {
-                        self.now = self.now.max(t);
-                        continue;
-                    }
-                    None => {
-                        self.drop_blocked();
-                        if self.waiting.is_empty() && self.running.is_empty() {
-                            break;
-                        }
-                        continue;
-                    }
-                }
-            }
-
-            // 4. execute
-            let dt = self.engine.execute(&plan);
-            self.stats.busy_time_s += dt;
-            self.stats.iterations += 1;
-            self.now += dt;
-            self.apply_results(&plan);
-
-            // Troubleshooting aid: TCM_TRACE=2 dumps iterations 1000-1060.
-            if std::env::var_os("TCM_TRACE").map(|v| v == "2").unwrap_or(false)
-                && (1000..1060).contains(&self.stats.iterations)
-            {
-                let desc: Vec<String> = self
-                    .running
-                    .iter()
-                    .chain(self.waiting.iter())
-                    .map(|&id| {
-                        let s = &self.states[&id];
-                        format!(
-                            "r{id}[{:?} c={} d={} prompt={} key={:.10} vkey={:?} rdy={:.3} cls={:?}]",
-                            s.phase,
-                            s.cached_rows,
-                            s.decoded,
-                            s.req.prefill_tokens(),
-                            self.policy.order_key(s, self.now),
-                            self.policy.victim_key(s, self.now),
-                            s.ready_time,
-                            s.class,
-                        )
-                    })
-                    .collect();
-                eprintln!(
-                    "[it {}] plan: pf={:?} dec={:?} | {}",
-                    self.stats.iterations,
-                    plan.prefills
-                        .iter()
-                        .map(|p| (p.req_id, p.chunk_tokens))
-                        .collect::<Vec<_>>(),
-                    plan.decodes.iter().map(|d| d.req_id).collect::<Vec<_>>(),
-                    desc.join(" ")
-                );
-            }
-            // Troubleshooting aid: TCM_TRACE=1 dumps periodic state.
-            if self.stats.iterations % 100_000 == 0 && std::env::var_os("TCM_TRACE").is_some() {
-                eprintln!(
-                    "[tcm-trace] iter={} now={:.1} waiting={} running={} finished={} \
-                     dropped={} preempt={} kv_used={}/{} dt={dt:.6}",
-                    self.stats.iterations,
-                    self.now,
-                    self.waiting.len(),
-                    self.running.len(),
-                    self.finished.len(),
-                    self.stats.dropped,
-                    self.stats.preemptions,
-                    self.kv.used_blocks(),
-                    self.kv.total_blocks(),
-                );
-            }
+        for req in trace {
+            self.inject(req);
         }
+        self.drain()
+    }
 
-        let mut outcomes = Vec::with_capacity(self.finished.len());
-        for id in &self.finished {
-            outcomes.push(self.states[id].to_outcome());
+    /// Outcomes so far: completed requests plus explicitly dropped ones
+    /// (surfaced as failed outcomes so SLO/goodput accounting sees every
+    /// request).
+    pub fn report(&self) -> Report {
+        let outcomes = self.finished.iter().map(|id| self.states[id].to_outcome()).collect();
+        let failed = self.failed.iter().map(|id| self.states[id].to_failed_outcome()).collect();
+        Report::with_failed(outcomes, failed)
+    }
+
+    /// Next internal wake-up: the earliest pending arrival or preprocess
+    /// completion.
+    fn next_event_time(&self) -> Option<f64> {
+        match (self.arrivals.peek_time(), self.ready_events.peek_time()) {
+            (Some(a), Some(r)) => Some(a.min(r)),
+            (Some(a), None) => Some(a),
+            (None, Some(r)) => Some(r),
+            (None, None) => None,
         }
-        Report::new(outcomes)
     }
 
     // -----------------------------------------------------------------
@@ -275,28 +391,18 @@ impl Scheduler {
         if let Some(c) = class {
             self.queues.enqueue(c, id, t);
         }
-    }
-
-    fn next_event_time(&self, trace: &[Request], idx: usize) -> Option<f64> {
-        let next_arrival = trace.get(idx).map(|r| r.arrival);
-        let next_ready = self.ready_events.peek_time();
-        match (next_arrival, next_ready) {
-            (Some(a), Some(r)) => Some(a.min(r)),
-            (Some(a), None) => Some(a),
-            (None, Some(r)) => Some(r),
-            (None, None) => None,
-        }
+        self.events.push(RequestEvent::Ready { id, t });
     }
 
     // -----------------------------------------------------------------
     // planning
     // -----------------------------------------------------------------
 
-    fn key(&self, id: u64) -> f64 {
+    fn key(&self, id: u64) -> OrderKey {
         self.policy.order_key(&self.states[&id], self.now)
     }
 
-    fn vkey(&self, id: u64) -> (u8, f64) {
+    fn vkey(&self, id: u64) -> VictimKey {
         self.policy.victim_key(&self.states[&id], self.now)
     }
 
@@ -310,7 +416,7 @@ impl Scheduler {
         // Decorate-sort: compute each key once (policy key evaluation is
         // a dyn call and, for TCM, an exp/log — O(n log n) comparator
         // invocations tripled planning time before this, §Perf).
-        let mut order: Vec<(f64, u64)> =
+        let mut order: Vec<(OrderKey, u64)> =
             self.running.iter().map(|&id| (self.key(id), id)).collect();
         order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let order: Vec<u64> = order.into_iter().map(|(_, id)| id).collect();
@@ -340,7 +446,7 @@ impl Scheduler {
         // admissions compete in ONE policy-ordered pass (vLLM V1 priority
         // scheduling is global: a waiting motorcycle outranks a running
         // truck's next chunk).
-        let mut prefill_order: Vec<(f64, u64)> = self
+        let mut prefill_order: Vec<(OrderKey, u64)> = self
             .running
             .iter()
             .copied()
@@ -583,29 +689,38 @@ impl Scheduler {
         let class = st.class;
         self.waiting.push(id);
         if let Some(c) = class {
-            self.queues.enqueue(c, id, now);
+            // a re-enqueue, not a fresh arrival: tracked separately so
+            // queue stats don't double-count preempted requests
+            self.queues.requeue(c, id, now);
         }
+        self.events.push(RequestEvent::Preempted { id, t: now });
     }
 
     /// Fail a request that can never be scheduled (prompt exceeds KV
-    /// capacity under the current memory budget).
+    /// capacity under the current memory budget). The drop is surfaced:
+    /// counted in `stats.dropped`, recorded as a failed outcome in
+    /// [`Scheduler::report`], and emitted as [`RequestEvent::Dropped`].
     fn drop_request(&mut self, id: u64) {
         self.waiting.retain(|&x| x != id);
         self.running.retain(|&x| x != id);
         self.kv.free(id);
         self.engine.release(id);
+        let now = self.now;
         let st = self.states.get_mut(&id).unwrap();
         if let Some(c) = st.class {
-            let now = self.now;
             self.queues.dequeue(c, id, now);
         }
-        st.phase = Phase::Finished;
+        st.phase = Phase::Dropped;
+        st.finish = Some(now);
+        self.failed.push(id);
         self.stats.dropped += 1;
+        self.events.push(RequestEvent::Dropped { id, t: now });
     }
 
     /// Drop every blocked waiting request (terminal starvation guard when
-    /// no future events exist).
-    fn drop_blocked(&mut self) {
+    /// no future events exist). Public so online callers can apply the
+    /// same guard at shutdown that [`Scheduler::drain`] applies in batch.
+    pub fn drop_blocked(&mut self) {
         for id in self.waiting.clone() {
             self.drop_request(id);
         }
@@ -628,6 +743,7 @@ impl Scheduler {
                     // token's logits: TTFT is measured here
                     st.first_token = Some(now);
                     st.decoded = 1;
+                    self.events.push(RequestEvent::FirstToken { id: item.req_id, t: now });
                 }
                 if st.decoded >= st.req.output_tokens {
                     self.finish(item.req_id);
@@ -653,6 +769,7 @@ impl Scheduler {
         self.engine.release(id);
         self.running.retain(|&x| x != id);
         self.finished.push(id);
+        self.events.push(RequestEvent::Finished { id, t: now });
     }
 
     /// Consistency invariants (exercised by property tests).
@@ -669,6 +786,25 @@ impl Scheduler {
             if p != Phase::Prefilling && p != Phase::Decoding {
                 return Err(format!("running req {id} in phase {p:?}"));
             }
+        }
+        for id in &self.finished {
+            let p = self.states[id].phase;
+            if p != Phase::Finished {
+                return Err(format!("finished req {id} in phase {p:?}"));
+            }
+        }
+        for id in &self.failed {
+            let p = self.states[id].phase;
+            if p != Phase::Dropped {
+                return Err(format!("failed req {id} in phase {p:?}"));
+            }
+        }
+        if self.failed.len() as u64 != self.stats.dropped {
+            return Err(format!(
+                "drop accounting: {} failed outcomes but stats.dropped={}",
+                self.failed.len(),
+                self.stats.dropped
+            ));
         }
         Ok(())
     }

@@ -15,6 +15,9 @@ pub enum Phase {
     /// Prompt fully cached; decoding one token per iteration.
     Decoding,
     Finished,
+    /// Dropped without completing (prompt can never fit, or terminally
+    /// blocked at drain). Surfaced as a failed outcome, never silent.
+    Dropped,
 }
 
 /// Scheduler-side request state.
@@ -114,6 +117,18 @@ impl ReqState {
             slo_latency: self.slo_latency,
             preemptions: self.preemptions,
             preempted_time: self.preempted_time,
+        }
+    }
+
+    /// Outcome record for a dropped request (`finish` holds the drop
+    /// time; there may be no first token).
+    pub fn to_failed_outcome(&self) -> crate::metrics::FailedOutcome {
+        crate::metrics::FailedOutcome {
+            id: self.req.id,
+            modality: self.req.modality,
+            class: self.class,
+            arrival: self.req.arrival,
+            dropped_at: self.finish.unwrap_or(self.req.arrival),
         }
     }
 }

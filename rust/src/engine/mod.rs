@@ -12,6 +12,7 @@
 //!   identical coordinator drives real model execution.
 
 pub mod kv_cache;
+#[cfg(pjrt_runtime)]
 pub mod real;
 pub mod sim_engine;
 

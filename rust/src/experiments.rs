@@ -52,18 +52,12 @@ pub fn goodput(base: &ServeConfig, attainment: f64, n_requests: usize) -> f64 {
         cfg.rate = rate;
         cfg.num_requests = n_requests;
         let r = run_sim(&cfg);
-        let total = r.report.outcomes.len();
-        if total == 0 {
+        if r.report.outcomes.is_empty() {
             return false;
         }
-        // dropped requests count as violations
-        let ok = r
-            .report
-            .outcomes
-            .iter()
-            .filter(|o| !o.violates_slo())
-            .count();
-        ok as f64 / (total + r.stats.dropped as usize) as f64 >= attainment
+        // dropped requests surface in `report.failed` and count as
+        // violations
+        r.report.slo_attainment() >= attainment
     };
 
     // exponential search for an upper bound
@@ -106,6 +100,8 @@ mod tests {
     fn fcfs_completes_all_requests() {
         let r = run_sim(&cfg("fcfs"));
         assert_eq!(r.report.outcomes.len() + r.stats.dropped as usize, 150);
+        assert_eq!(r.report.failed.len(), r.stats.dropped as usize, "drops surface in report");
+        assert_eq!(r.report.total(), 150);
         assert!(r.stats.dropped <= 2);
         assert!(r.makespan > 0.0);
         // every outcome well-formed

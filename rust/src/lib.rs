@@ -33,6 +33,10 @@ pub mod model;
 pub mod policies;
 pub mod report;
 pub mod request;
+/// PJRT runtime: needs the external `xla` + `anyhow` crates, which are
+/// not in the offline crate set — compile-gated behind
+/// `RUSTFLAGS="--cfg pjrt_runtime"` (see README.md).
+#[cfg(pjrt_runtime)]
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -12,9 +12,7 @@
 
 use tcm_serve::config::ServeConfig;
 use tcm_serve::coordinator::profiler::Profiler;
-use tcm_serve::coordinator::Scheduler;
 use tcm_serve::experiments;
-use tcm_serve::policies::build_policy;
 use tcm_serve::report;
 use tcm_serve::request::Modality;
 use tcm_serve::util::cli::Parser;
@@ -111,7 +109,11 @@ fn cmd_simulate(cfg: &ServeConfig) {
     );
 }
 
+#[cfg(pjrt_runtime)]
 fn cmd_serve(cfg: &mut ServeConfig, artifacts: Option<&str>) {
+    use tcm_serve::coordinator::Scheduler;
+    use tcm_serve::policies::build_policy;
+
     let dir = artifacts
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
@@ -144,6 +146,16 @@ fn cmd_serve(cfg: &mut ServeConfig, artifacts: Option<&str>) {
         tokens as f64 / wall,
         sched.stats.iterations
     );
+}
+
+#[cfg(not(pjrt_runtime))]
+fn cmd_serve(_cfg: &mut ServeConfig, _artifacts: Option<&str>) {
+    eprintln!(
+        "the real PJRT engine is not compiled into this binary; rebuild with \
+         RUSTFLAGS=\"--cfg pjrt_runtime\" (requires the xla + anyhow crates, \
+         see rust/README.md)"
+    );
+    std::process::exit(1);
 }
 
 fn cmd_profile(cfg: &ServeConfig) {

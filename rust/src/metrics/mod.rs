@@ -117,15 +117,53 @@ impl Summary {
     }
 }
 
+/// A request the scheduler gave up on: the prompt can never fit under the
+/// memory budget, or the request was terminally blocked at drain. Kept
+/// distinct from [`Outcome`] because there is no first token or finish to
+/// measure — but reports must still account for it (a silently vanished
+/// request overcounts SLO attainment and goodput).
+#[derive(Debug, Clone)]
+pub struct FailedOutcome {
+    pub id: u64,
+    pub modality: Modality,
+    pub class: Option<Class>,
+    pub arrival: f64,
+    /// Scheduler time at which the request was dropped.
+    pub dropped_at: f64,
+}
+
 /// A full experiment result: all outcomes plus grouped views.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
     pub outcomes: Vec<Outcome>,
+    /// Requests dropped without completing. SLO accounting counts these
+    /// as violations; conservation holds as
+    /// `outcomes.len() + failed.len() == requests submitted`.
+    pub failed: Vec<FailedOutcome>,
 }
 
 impl Report {
     pub fn new(outcomes: Vec<Outcome>) -> Report {
-        Report { outcomes }
+        Report { outcomes, failed: Vec::new() }
+    }
+
+    pub fn with_failed(outcomes: Vec<Outcome>, failed: Vec<FailedOutcome>) -> Report {
+        Report { outcomes, failed }
+    }
+
+    /// Every request the scheduler was handed: completed + dropped.
+    pub fn total(&self) -> usize {
+        self.outcomes.len() + self.failed.len()
+    }
+
+    /// Fraction of all requests (completed *and* dropped) that met their
+    /// SLO; a dropped request counts as a violation.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.total() == 0 {
+            return 1.0;
+        }
+        let ok = self.outcomes.iter().filter(|o| !o.violates_slo()).count();
+        ok as f64 / self.total() as f64
     }
 
     pub fn overall(&self) -> Summary {
@@ -219,6 +257,23 @@ mod tests {
         let r = Report::new(vec![o1, o2]);
         assert_eq!(r.by_class(Class::Truck).n, 2);
         assert_eq!(r.by_class(Class::Motorcycle).n, 0);
+    }
+
+    #[test]
+    fn dropped_requests_count_against_attainment() {
+        let ok = outcome(0.1, 1.0, 5.0, 10); // meets SLO
+        let failed = FailedOutcome {
+            id: 9,
+            modality: Modality::Video,
+            class: Some(Class::Truck),
+            arrival: 0.0,
+            dropped_at: 3.0,
+        };
+        let r = Report::with_failed(vec![ok], vec![failed]);
+        assert_eq!(r.total(), 2);
+        assert!((r.slo_attainment() - 0.5).abs() < 1e-12, "a drop is a violation");
+        // grouped summaries still cover completed outcomes only
+        assert_eq!(r.overall().n, 1);
     }
 
     #[test]

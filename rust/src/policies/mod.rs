@@ -28,6 +28,18 @@ use crate::coordinator::state::ReqState;
 use crate::model::ModelProfile;
 use crate::request::{Class, Request};
 
+/// Scheduling sort key, compared lexicographically: `(score, tie)` —
+/// the policy's score first, then a tie-break (class policies use the
+/// ready time so equal scores stay FCFS). A tuple rather than a weighted
+/// f64 blend because a blend leaks into the score magnitude: at
+/// `ready_time ≳ 1e8` virtual seconds an ε-weighted tie-break exceeds
+/// real score gaps and inverts class order.
+pub type OrderKey = (f64, f64);
+
+/// Victim-selection key: class rank first (trucks evicted before cars
+/// before motorcycles), then the order key.
+pub type VictimKey = (u8, OrderKey);
+
 /// Decision interface between the scheduler and a policy.
 pub trait Policy: Send {
     fn name(&self) -> &'static str;
@@ -36,8 +48,9 @@ pub trait Policy: Send {
     /// for baselines without classifier/estimator.
     fn admit(&mut self, req: &Request) -> (Option<Class>, Option<Impact>);
 
-    /// Sort key at time `now`: lower = scheduled earlier.
-    fn order_key(&self, rs: &ReqState, now: f64) -> f64;
+    /// Sort key at time `now`: lexicographically lower = scheduled
+    /// earlier.
+    fn order_key(&self, rs: &ReqState, now: f64) -> OrderKey;
 
     /// Victim-selection key, compared lexicographically: the *highest*
     /// value is evicted first when KV memory runs out. Defaults to
@@ -49,7 +62,7 @@ pub trait Policy: Send {
     /// component's resolution must survive: collapsing both into one
     /// float ties all same-class victims and the strict preemption gate
     /// then live-locks on self-preemption.
-    fn victim_key(&self, rs: &ReqState, now: f64) -> (u8, f64) {
+    fn victim_key(&self, rs: &ReqState, now: f64) -> VictimKey {
         (0, self.order_key(rs, now))
     }
 
@@ -79,8 +92,8 @@ impl Policy for FcfsPolicy {
         (None, None)
     }
 
-    fn order_key(&self, rs: &ReqState, _now: f64) -> f64 {
-        rs.ready_time
+    fn order_key(&self, rs: &ReqState, _now: f64) -> OrderKey {
+        (rs.ready_time, 0.0)
     }
 
     fn preempt_for_admission(&self) -> bool {
@@ -110,8 +123,8 @@ impl Policy for EdfPolicy {
         (None, None)
     }
 
-    fn order_key(&self, rs: &ReqState, _now: f64) -> f64 {
-        rs.deadline()
+    fn order_key(&self, rs: &ReqState, _now: f64) -> OrderKey {
+        (rs.deadline(), 0.0)
     }
 
     fn preempt_for_admission(&self) -> bool {
@@ -140,8 +153,8 @@ impl Policy for NaiveAgingPolicy {
         (None, None)
     }
 
-    fn order_key(&self, rs: &ReqState, now: f64) -> f64 {
-        -rs.waiting_time(now)
+    fn order_key(&self, rs: &ReqState, now: f64) -> OrderKey {
+        (-rs.waiting_time(now), 0.0)
     }
 
     fn preempt_for_admission(&self) -> bool {
@@ -191,15 +204,17 @@ impl<C: Classifier + Send> Policy for ClassPriorityPolicy<C> {
         (Some(class), Some(impact))
     }
 
-    fn order_key(&self, rs: &ReqState, now: f64) -> f64 {
+    fn order_key(&self, rs: &ReqState, now: f64) -> OrderKey {
         // Score = −log(priority); FCFS within class follows from score
-        // monotonicity in waiting time. Tie-break on ready time so equal
-        // scores (e.g. static ablation) stay FCFS.
+        // monotonicity in waiting time. Lexicographic tie-break on ready
+        // time keeps equal scores (e.g. static ablation) FCFS without
+        // perturbing the score itself — an ε-weighted blend inverts class
+        // order once ready_time grows past the score gaps.
         let class = rs.class.unwrap_or(Class::Truck);
-        self.regulator.score(class, rs.waiting_time(now)) + rs.ready_time * 1e-9
+        (self.regulator.score(class, rs.waiting_time(now)), rs.ready_time)
     }
 
-    fn victim_key(&self, rs: &ReqState, now: f64) -> (u8, f64) {
+    fn victim_key(&self, rs: &ReqState, now: f64) -> VictimKey {
         // Strict class hierarchy for eviction: trucks first, then cars;
         // motorcycles only as a last resort. Within a class, evict the
         // least-priority (highest-score) request.
@@ -316,6 +331,40 @@ mod tests {
             let p = build_policy(&cfg, &profile);
             assert_eq!(p.name(), name);
         }
+    }
+
+    #[test]
+    fn class_order_survives_large_ready_times() {
+        // Regression: the old tie-break (`score + ready_time * 1e-9`)
+        // leaked into the score magnitude — at ready_time ≥ ~1e9 virtual
+        // seconds the perturbation exceeded the M/C static score gap
+        // (−ln 0.05 − (−ln 0.1) ≈ 0.69) and inverted class order. The
+        // lexicographic key must keep a fresh motorcycle ahead of a car
+        // no matter how late it became ready.
+        let profile = by_name("llava-7b").unwrap();
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "static-priority".into(); // aging off: scores constant
+        let p = build_policy(&cfg, &profile);
+
+        let now = 1.0e9;
+        let mut m = rs(now, now, 5.0); // motorcycle ready very late
+        m.class = Some(Class::Motorcycle);
+        let mut c = rs(0.0, 0.0, 5.0); // car ready at time zero
+        c.class = Some(Class::Car);
+
+        assert!(
+            p.order_key(&m, now) < p.order_key(&c, now),
+            "motorcycle must outrank car regardless of ready-time magnitude: {:?} vs {:?}",
+            p.order_key(&m, now),
+            p.order_key(&c, now)
+        );
+        // and the tie-break still keeps equal scores FCFS
+        let mut m2 = rs(now, now - 1.0, 5.0);
+        m2.class = Some(Class::Motorcycle);
+        let mut m3 = m2.clone();
+        m3.ready_time = now;
+        m3.first_enqueue = m2.first_enqueue; // same waiting time → same score
+        assert!(p.order_key(&m2, now) < p.order_key(&m3, now));
     }
 
     #[test]

@@ -4,26 +4,43 @@
 //! std threads + mpsc channels — the same topology as vLLM's single-
 //! threaded engine core behind an ingress queue. Clients submit requests
 //! through a [`ServerHandle`] and receive streamed events (first token /
-//! completion) on a per-request channel.
+//! completion / drop) on a per-request channel.
 //!
-//! This front end drives the *real* engine in wall-clock time; simulation
-//! experiments use [`crate::experiments`] directly (virtual time cannot
-//! be driven by external threads).
+//! The leader is *truly online*: it interleaves channel ingress with
+//! scheduler iterations via the stepping API
+//! ([`Scheduler::inject`] / [`Scheduler::step`]) — a request submitted
+//! while others are in flight is scheduled between their iterations, and
+//! its `FirstToken` event is delivered at the iteration that produces it,
+//! not after the batch drains. Wall-clock time maps onto the scheduler
+//! clock continuously ([`Scheduler::advance_to`] with the leader's
+//! elapsed time before every step).
+//!
+//! This front end drives the *real* engine in wall-clock time; pure
+//! virtual-time experiments use [`crate::experiments`] directly. A
+//! simulated engine still works behind the server (the tests do exactly
+//! that), with the caveat that its virtual iteration costs accumulate
+//! into the scheduler clock on top of the wall mapping, so event
+//! timestamps run ahead of wall time.
 
 use crate::config::ServeConfig;
-use crate::coordinator::Scheduler;
+use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
 use crate::engine::Engine;
 use crate::metrics::Report;
 use crate::policies::build_policy;
 use crate::request::Request;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Events streamed back to a client.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ResponseEvent {
     FirstToken { req_id: u64, ttft_s: f64 },
     Finished { req_id: u64, e2e_s: f64, output_tokens: u32 },
+    /// The scheduler gave up on the request (prompt can never fit, or
+    /// terminally blocked at shutdown).
+    Dropped { req_id: u64 },
 }
 
 enum ServerMsg {
@@ -75,10 +92,18 @@ impl Server {
     }
 }
 
-/// The leader: drain ingress, run the scheduler to completion over the
-/// accumulated batch, stream events. Wall-clock arrivals are mapped onto
-/// the scheduler's clock by stamping each request's arrival with the
-/// leader's elapsed time.
+/// Per-request client bookkeeping on the leader side.
+struct Subscriber {
+    tx: mpsc::Sender<ResponseEvent>,
+    arrival: f64,
+    output_tokens: u32,
+}
+
+/// The leader: interleave ingress with scheduler steps. Each loop turn
+/// drains every pending channel message (injecting new requests), maps
+/// wall-clock onto the scheduler clock, runs one iteration, and streams
+/// the iteration's events to subscribers. When there is nothing runnable
+/// it blocks on the channel instead of spinning.
 fn leader_loop(
     cfg: ServeConfig,
     engine: Box<dyn Engine + Send>,
@@ -88,43 +113,146 @@ fn leader_loop(
     let policy = build_policy(&cfg, &profile);
     let mut sched = Scheduler::new(cfg, policy, engine);
 
-    let t0 = std::time::Instant::now();
-    let mut pending: Vec<Request> = Vec::new();
-    let mut subscribers: std::collections::HashMap<u64, mpsc::Sender<ResponseEvent>> =
-        std::collections::HashMap::new();
+    let t0 = Instant::now();
+    let mut subscribers: HashMap<u64, Subscriber> = HashMap::new();
+    let mut shutdown = false;
+    // Block on the channel (instead of polling) on the next turn; set
+    // whenever the scheduler reports nothing can run until new input.
+    let mut block_for_msg = false;
 
-    // Ingress: accept until shutdown. Requests carry their true submit
-    // time so queueing before the batch runs is accounted for.
     loop {
-        match rx.recv() {
-            Ok(ServerMsg::Submit(mut req, sub)) => {
-                req.arrival = t0.elapsed().as_secs_f64();
-                subscribers.insert(req.id, sub);
-                pending.push(req);
+        // 1. ingest: drain everything available; block once when idle
+        loop {
+            let msg = if block_for_msg && !shutdown {
+                block_for_msg = false;
+                match rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some(ServerMsg::Submit(mut req, tx)) => {
+                    // stamp the true submit time so queueing before the
+                    // first iteration is accounted for
+                    req.arrival = t0.elapsed().as_secs_f64();
+                    subscribers.insert(
+                        req.id,
+                        Subscriber { tx, arrival: req.arrival, output_tokens: req.output_tokens },
+                    );
+                    sched.inject(req);
+                }
+                Some(ServerMsg::Shutdown) => shutdown = true,
+                None => break,
             }
-            Ok(ServerMsg::Shutdown) | Err(_) => break,
+        }
+
+        // 2. wall-clock → scheduler clock (monotone; never rewinds)
+        sched.advance_to(t0.elapsed().as_secs_f64());
+
+        // 3. one scheduling iteration
+        let outcome = sched.step();
+
+        // 4. stream this iteration's events as they happen
+        for ev in sched.take_events() {
+            deliver(&mut subscribers, ev);
+        }
+
+        match outcome {
+            StepOutcome::Executed { .. } => {}
+            // Nothing runnable until an internal event (preprocess
+            // completion / pending arrival): jump the scheduler clock to
+            // it. For the real engine that time is at/near wall time; for
+            // a simulated engine it is virtual and there is no point
+            // waiting wall-clock for it.
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => {
+                if shutdown {
+                    // same terminal guard the batch drain applies: these
+                    // can never run; fail them so clients are notified
+                    sched.drop_blocked();
+                } else {
+                    block_for_msg = true;
+                }
+            }
+            StepOutcome::Drained => {
+                if shutdown {
+                    break;
+                }
+                block_for_msg = true;
+            }
         }
     }
 
-    let report = sched.run(pending);
-    for o in &report.outcomes {
-        if let Some(sub) = subscribers.get(&o.id) {
-            let _ = sub.send(ResponseEvent::FirstToken { req_id: o.id, ttft_s: o.ttft() });
-            let _ = sub.send(ResponseEvent::Finished {
-                req_id: o.id,
-                e2e_s: o.e2e(),
-                output_tokens: o.output_tokens,
-            });
-        }
+    // deliver anything emitted by a final drop_blocked
+    for ev in sched.take_events() {
+        deliver(&mut subscribers, ev);
     }
-    report
+    sched.report()
+}
+
+/// Route one scheduler event to its subscriber. Terminal events
+/// (`Finished`/`Dropped`) retire the subscriber entry — the map must not
+/// grow with total requests served, and dropping the retained `Sender`
+/// closes the per-request channel so clients iterating their receiver
+/// terminate without waiting for server shutdown.
+fn deliver(subscribers: &mut HashMap<u64, Subscriber>, ev: RequestEvent) {
+    match ev {
+        RequestEvent::FirstToken { id, t } => {
+            if let Some(s) = subscribers.get(&id) {
+                let _ = s.tx.send(ResponseEvent::FirstToken { req_id: id, ttft_s: t - s.arrival });
+            }
+        }
+        RequestEvent::Finished { id, t } => {
+            if let Some(s) = subscribers.remove(&id) {
+                let _ = s.tx.send(ResponseEvent::Finished {
+                    req_id: id,
+                    e2e_s: t - s.arrival,
+                    output_tokens: s.output_tokens,
+                });
+            }
+        }
+        RequestEvent::Dropped { id, .. } => {
+            if let Some(s) = subscribers.remove(&id) {
+                let _ = s.tx.send(ResponseEvent::Dropped { req_id: id });
+            }
+        }
+        // internal lifecycle events, not client-visible
+        RequestEvent::Ready { .. } | RequestEvent::Preempted { .. } => {}
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::sim_engine::SimEngine;
+    use crate::engine::StepPlan;
     use crate::request::Modality;
+
+    fn text_req(id: u64, text_tokens: u32, output_tokens: u32) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            modality: Modality::Text,
+            text_tokens,
+            mm_tokens: 0,
+            video_duration_s: 0.0,
+            output_tokens,
+        }
+    }
 
     #[test]
     fn serve_roundtrip_with_sim_engine() {
@@ -136,15 +264,7 @@ mod tests {
         let h = server.handle();
         let mut rxs = Vec::new();
         for id in 0..4u64 {
-            rxs.push(h.submit(Request {
-                id,
-                arrival: 0.0,
-                modality: Modality::Text,
-                text_tokens: 64,
-                mm_tokens: 0,
-                video_duration_s: 0.0,
-                output_tokens: 4,
-            }));
+            rxs.push(h.submit(text_req(id, 64, 4)));
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 4);
@@ -154,5 +274,108 @@ mod tests {
             assert!(matches!(events[0], ResponseEvent::FirstToken { .. }));
             assert!(matches!(events[1], ResponseEvent::Finished { .. }));
         }
+    }
+
+    /// A sim engine that takes real wall time per iteration, so tests can
+    /// observe streaming while work is genuinely in flight.
+    struct ThrottledEngine {
+        inner: SimEngine,
+        delay: Duration,
+    }
+
+    impl Engine for ThrottledEngine {
+        fn execute(&mut self, plan: &StepPlan) -> f64 {
+            std::thread::sleep(self.delay);
+            self.inner.execute(plan)
+        }
+
+        fn release(&mut self, req_id: u64) {
+            self.inner.release(req_id);
+        }
+
+        fn name(&self) -> &'static str {
+            "throttled-sim"
+        }
+    }
+
+    /// The online-serving acceptance test: a request submitted first gets
+    /// its FirstToken event while a later-submitted request is still
+    /// unfinished — events stream per iteration, not batch-then-flush at
+    /// shutdown (the pre-refactor leader buffered everything until
+    /// `Shutdown` and only then ran the scheduler).
+    #[test]
+    fn first_token_streams_while_later_request_in_flight() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        let engine = ThrottledEngine {
+            inner: SimEngine::new(&profile),
+            delay: Duration::from_millis(2),
+        };
+        let server = Server::spawn(cfg, Box::new(engine));
+        let h = server.handle();
+
+        // A: tiny prompt — first token within the first few iterations.
+        let rx_a = h.submit(text_req(0, 32, 8));
+        // B: giant prompt — ~100 chunked-prefill iterations (≈200 ms at
+        // 2 ms per iteration) before ITS first token.
+        let rx_b = h.submit(text_req(1, 50_000, 4));
+
+        // No shutdown has been sent: a FirstToken arriving here proves
+        // per-iteration streaming (the old leader would block forever
+        // until Shutdown, timing this recv out).
+        let first = rx_a
+            .recv_timeout(Duration::from_secs(30))
+            .expect("first token must stream before shutdown");
+        assert!(
+            matches!(first, ResponseEvent::FirstToken { req_id: 0, .. }),
+            "expected FirstToken for request 0, got {first:?}"
+        );
+        // ... and the later submission must still be in flight.
+        assert!(
+            matches!(rx_b.try_recv(), Err(mpsc::TryRecvError::Empty)),
+            "the giant request must not have produced events when the tiny one's \
+             first token streams"
+        );
+
+        let report = server.finish();
+        assert_eq!(report.total(), 2, "both requests accounted for");
+        assert_eq!(report.outcomes.len(), 2);
+        // A's full event stream arrived, in order
+        let events_a: Vec<_> = rx_a.iter().collect();
+        assert!(matches!(events_a.last(), Some(ResponseEvent::Finished { req_id: 0, .. })));
+        let events_b: Vec<_> = rx_b.iter().collect();
+        assert_eq!(events_b.len(), 2);
+        assert!(matches!(events_b[0], ResponseEvent::FirstToken { req_id: 1, .. }));
+    }
+
+    /// Requests submitted *after* earlier ones already started executing
+    /// must still be served (the old leader only scheduled the batch
+    /// accumulated before Shutdown — late submissions during execution
+    /// were impossible by construction).
+    #[test]
+    fn late_submission_joins_running_schedule() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        let engine = ThrottledEngine {
+            inner: SimEngine::new(&profile),
+            delay: Duration::from_millis(2),
+        };
+        let server = Server::spawn(cfg, Box::new(engine));
+        let h = server.handle();
+
+        let rx_long = h.submit(text_req(0, 20_000, 4));
+        // wait until the long request is demonstrably being worked on
+        std::thread::sleep(Duration::from_millis(20));
+        let rx_late = h.submit(text_req(1, 16, 2));
+        let ev = rx_late
+            .recv_timeout(Duration::from_secs(30))
+            .expect("late request must be scheduled while the first still runs");
+        assert!(matches!(ev, ResponseEvent::FirstToken { req_id: 1, .. }));
+
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 2);
+        let _ = rx_long.iter().count(); // drain
     }
 }

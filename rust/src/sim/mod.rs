@@ -1,10 +1,12 @@
 //! Discrete-event simulation substrate: a virtual clock and event queue.
 //!
-//! The serving simulator is *iteration-driven* (the coordinator loop pulls
-//! time forward by executing engine steps), but several side processes
-//! need scheduled events: request arrivals, preprocess-stage completions,
-//! and timeout probes. This module provides the minimal deterministic
-//! event queue those share.
+//! The serving simulator is *iteration-driven* (the coordinator's `step`
+//! loop pulls time forward by executing engine steps), but several side
+//! processes need scheduled events: injected request arrivals (the
+//! scheduler's online ingress queue), preprocess-stage completions, and
+//! timeout probes. This module provides the minimal deterministic event
+//! queue those share; determinism (ties break by insertion order) is what
+//! makes the stepped and batch scheduler paths bit-identical.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -1,14 +1,18 @@
 //! Integration tests over the real PJRT path: artifacts must exist
 //! (`make artifacts`); tests skip gracefully when they don't so
-//! `cargo test` works pre-build.
+//! `cargo test` works pre-build. The whole file is gated behind
+//! `RUSTFLAGS="--cfg pjrt_runtime"` because the PJRT runtime needs the
+//! external xla + anyhow crates (see rust/README.md).
 //!
 //! The golden test is the cross-language correctness anchor: the Rust
 //! runtime must reproduce JAX's greedy transcript token-for-token through
 //! HLO text → PJRT compile → execute, proving L1 (Pallas kernel), L2
 //! (model) and the Rust runtime agree.
 
-use tcm_serve::runtime::{literal_f32, Input, Runtime};
+#![cfg(pjrt_runtime)]
+
 use std::path::PathBuf;
+use tcm_serve::runtime::{literal_f32, Input, Runtime};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -46,6 +46,18 @@ fn conservation_and_causality_all_policies() {
                 cfg.num_requests
             ));
         }
+        // drops are surfaced in the report itself, never silent
+        if r.report.failed.len() != r.stats.dropped as usize {
+            return Err(format!(
+                "{}: {} failed outcomes != {} stats.dropped",
+                cfg.policy,
+                r.report.failed.len(),
+                r.stats.dropped
+            ));
+        }
+        if r.report.total() != cfg.num_requests {
+            return Err(format!("{}: report.total() != num_requests", cfg.policy));
+        }
         for o in &r.report.outcomes {
             if o.first_token < o.arrival {
                 return Err(format!("req {}: first token before arrival", o.id));

@@ -1,0 +1,281 @@
+//! The stepping API contract: `inject`-all-then-`step`-until-drained must
+//! produce a `Report` identical to the batch `Scheduler::run` wrapper on
+//! seeded traces, for every policy, with `check_invariants` holding after
+//! every step — and the event stream must account for every request.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::make_trace;
+use tcm_serve::metrics::Report;
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::Request;
+use tcm_serve::util::proptest_lite as pt;
+
+const POLICIES: [&str; 6] =
+    ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
+
+fn new_scheduler(cfg: &ServeConfig) -> Scheduler {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(cfg, &profile);
+    Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&profile)))
+}
+
+/// Drive the stepping API by hand (inject everything, step until
+/// drained), checking invariants after every step and collecting the
+/// event stream. Mirrors what `drain()` does, but from the outside.
+fn run_stepped(
+    cfg: &ServeConfig,
+    trace: Vec<Request>,
+) -> Result<(Report, f64, Vec<RequestEvent>), String> {
+    let mut sched = new_scheduler(cfg);
+    let mut trace = trace;
+    trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for req in trace {
+        sched.inject(req);
+    }
+    let mut events = Vec::new();
+    let mut steps = 0u64;
+    loop {
+        match sched.step() {
+            StepOutcome::Executed { dt } => {
+                if dt < 0.0 {
+                    return Err(format!("negative dt {dt}"));
+                }
+            }
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        events.extend(sched.take_events());
+        sched.check_invariants().map_err(|e| format!("after step {steps}: {e}"))?;
+        steps += 1;
+        if steps > 5_000_000 {
+            return Err("stepping did not drain".into());
+        }
+    }
+    events.extend(sched.take_events());
+    Ok((sched.report(), sched.now(), events))
+}
+
+fn reports_identical(policy: &str, a: &Report, b: &Report) -> Result<(), String> {
+    if a.outcomes.len() != b.outcomes.len() {
+        return Err(format!(
+            "{policy}: outcome counts differ ({} vs {})",
+            a.outcomes.len(),
+            b.outcomes.len()
+        ));
+    }
+    if a.failed.len() != b.failed.len() {
+        return Err(format!("{policy}: drop counts differ"));
+    }
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        if x.id != y.id {
+            return Err(format!("{policy}: outcome order diverged at req {}/{}", x.id, y.id));
+        }
+        if x.first_token.to_bits() != y.first_token.to_bits() {
+            return Err(format!("{policy}: req {} first_token not bit-identical", x.id));
+        }
+        if x.finish.to_bits() != y.finish.to_bits() {
+            return Err(format!("{policy}: req {} finish not bit-identical", x.id));
+        }
+        if x.preemptions != y.preemptions {
+            return Err(format!("{policy}: req {} preemption counts differ", x.id));
+        }
+    }
+    for (x, y) in a.failed.iter().zip(&b.failed) {
+        if x.id != y.id || x.dropped_at.to_bits() != y.dropped_at.to_bits() {
+            return Err(format!("{policy}: failed outcome diverged at req {}", x.id));
+        }
+    }
+    Ok(())
+}
+
+/// The event stream must tell the whole story: one FirstToken and one
+/// Finished per completed request, one Dropped per failure, and ordering
+/// (Ready before FirstToken before Finished) per request.
+fn events_consistent(policy: &str, report: &Report, events: &[RequestEvent]) -> Result<(), String> {
+    let mut readies = 0usize;
+    let mut firsts = 0usize;
+    let mut finishes = 0usize;
+    let mut drops = 0usize;
+    for e in events {
+        match e {
+            RequestEvent::Ready { .. } => readies += 1,
+            RequestEvent::FirstToken { .. } => firsts += 1,
+            RequestEvent::Finished { .. } => finishes += 1,
+            RequestEvent::Dropped { .. } => drops += 1,
+            RequestEvent::Preempted { .. } => {}
+        }
+    }
+    if finishes != report.outcomes.len() {
+        return Err(format!(
+            "{policy}: {finishes} Finished events for {} outcomes",
+            report.outcomes.len()
+        ));
+    }
+    // exactly one FirstToken per completed request (even across
+    // preemptions); dropped requests may or may not have reached theirs
+    if firsts < report.outcomes.len() || firsts > report.outcomes.len() + drops {
+        return Err(format!(
+            "{policy}: {firsts} FirstToken events for {} outcomes + {drops} drops",
+            report.outcomes.len()
+        ));
+    }
+    if drops != report.failed.len() {
+        return Err(format!(
+            "{policy}: {drops} Dropped events for {} failures",
+            report.failed.len()
+        ));
+    }
+    if readies != report.total() {
+        return Err(format!("{policy}: {readies} Ready events for {} requests", report.total()));
+    }
+    for o in &report.outcomes {
+        let ready =
+            events.iter().position(|e| matches!(*e, RequestEvent::Ready { id, .. } if id == o.id));
+        let first = events
+            .iter()
+            .position(|e| matches!(*e, RequestEvent::FirstToken { id, .. } if id == o.id));
+        let fin = events
+            .iter()
+            .position(|e| matches!(*e, RequestEvent::Finished { id, .. } if id == o.id));
+        match (ready, first, fin) {
+            (Some(r), Some(f), Some(n)) if r < f && f < n => {}
+            _ => {
+                return Err(format!(
+                    "{policy}: req {} event order broken: ready={ready:?} first={first:?} \
+                     finished={fin:?}",
+                    o.id
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn stepped_equals_batch_all_policies_fixed_seed() {
+    for policy in POLICIES {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 120;
+        cfg.rate = 2.0;
+        cfg.seed = 7;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let batch = new_scheduler(&cfg).run(trace.clone());
+        let (stepped, _, events) = run_stepped(&cfg, trace).unwrap();
+        reports_identical(policy, &stepped, &batch).unwrap();
+        events_consistent(policy, &stepped, &events).unwrap();
+    }
+}
+
+#[test]
+fn stepped_equals_batch_under_memory_pressure() {
+    // preemptions and drops in the mix: the paths must still agree bit
+    // for bit, and every preempted request must emit Preempted events
+    for policy in ["fcfs", "tcm", "edf"] {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 60;
+        cfg.memory_frac = 0.02;
+        cfg.seed = 11;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let mut batch_sched = new_scheduler(&cfg);
+        let batch = batch_sched.run(trace.clone());
+        let (stepped, now, events) = run_stepped(&cfg, trace).unwrap();
+        reports_identical(policy, &stepped, &batch).unwrap();
+        assert_eq!(now.to_bits(), batch_sched.now().to_bits(), "{policy}: makespan diverged");
+
+        let preempt_events =
+            events.iter().filter(|e| matches!(e, RequestEvent::Preempted { .. })).count() as u64;
+        let preempt_outcomes: u64 = stepped
+            .outcomes
+            .iter()
+            .map(|o| o.preemptions as u64)
+            .sum();
+        assert!(
+            preempt_events >= preempt_outcomes,
+            "{policy}: {preempt_events} Preempted events < {preempt_outcomes} recorded on outcomes"
+        );
+    }
+}
+
+#[test]
+fn property_stepped_equals_batch() {
+    pt::run(18, |g| {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = (*g.pick(&POLICIES)).into();
+        cfg.model = (*g.pick(&["llava-7b", "qwen-3b", "llava-500m"])).into();
+        cfg.mix = (*g.pick(&["T0", "ML", "MH"])).into();
+        cfg.rate = g.f64_in(0.5, 6.0);
+        cfg.seed = g.rng.next_u64();
+        cfg.num_requests = g.usize_in(5, 60);
+        cfg.memory_frac = *g.pick(&[1.0, 0.5, 0.05]);
+        cfg.scheduler.token_budget = *g.pick(&[512u32, 2048]);
+        cfg.scheduler.max_running = g.usize_in(2, 64);
+
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+        let batch = new_scheduler(&cfg).run(trace.clone());
+        let (stepped, _, events) = run_stepped(&cfg, trace)?;
+        reports_identical(&cfg.policy, &stepped, &batch)?;
+        events_consistent(&cfg.policy, &stepped, &events)?;
+        Ok(())
+    });
+}
+
+/// Online injection mid-flight: a request injected *between* steps (after
+/// earlier ones already executed) is scheduled and finishes — the core
+/// capability the old monolithic `run` loop could not express.
+#[test]
+fn injection_between_steps_is_scheduled() {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "fcfs".into();
+    let mut sched = new_scheduler(&cfg);
+
+    let req = |id: u64, arrival: f64| Request {
+        id,
+        arrival,
+        modality: tcm_serve::request::Modality::Text,
+        text_tokens: 64,
+        mm_tokens: 0,
+        video_duration_s: 0.0,
+        output_tokens: 8,
+    };
+
+    sched.inject(req(0, 0.0));
+    // run a few iterations so request 0 is genuinely in flight
+    let mut executed = 0;
+    while executed < 3 {
+        match sched.step() {
+            StepOutcome::Executed { .. } => executed += 1,
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    // late injection with an arrival in the past relative to the clock
+    sched.inject(req(1, 0.0));
+    // drain the rest
+    loop {
+        match sched.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+    }
+    let report = sched.report();
+    assert_eq!(report.outcomes.len(), 2, "late injection must be served");
+    let events = sched.take_events();
+    assert!(
+        events.iter().any(|e| matches!(e, RequestEvent::Finished { id: 1, .. })),
+        "finish event for the late request must have been emitted"
+    );
+}
