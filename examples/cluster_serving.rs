@@ -1,0 +1,69 @@
+//! Cluster serving: four engine replicas behind the three router
+//! policies on the same arrival trace, plus the encode/prefill-overlap
+//! knob — the fleet-level version of the quickstart.
+//!
+//! Run: `cargo run --release --example cluster_serving`
+
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::experiments::run_cluster;
+use tcm_serve::report;
+use tcm_serve::request::Modality;
+
+fn main() {
+    let mut cfg = ServeConfig::default(); // llava-7b, MH, SLO 5x
+    cfg.policy = "fcfs".into();
+    cfg.rate = 6.0; // 1.5 req/s per replica
+    cfg.num_requests = 600;
+    cfg.seed = 42;
+    cfg.cluster.replicas = 4;
+
+    println!(
+        "cluster: {} replicas, mix {}, {:.1} req/s total, model {}",
+        cfg.cluster.replicas, cfg.mix, cfg.rate, cfg.model
+    );
+
+    for router in ROUTERS {
+        let mut c = cfg.clone();
+        c.cluster.router = router.into();
+        let cr = run_cluster(&c);
+        report::header(&format!("router = {router}"));
+        report::modality_rows(router, &cr.report);
+        for rs in &cr.per_replica {
+            println!(
+                "  replica {} routed={:<5} busy={:>8.1}s util={:>5.1}% preempt={}",
+                rs.replica,
+                rs.routed,
+                rs.busy_time_s,
+                cr.utilization(rs.replica) * 100.0,
+                rs.preemptions
+            );
+        }
+        println!(
+            "  makespan={:.1}s imbalance={:.2} slo_attainment={:.1}%",
+            cr.makespan,
+            cr.imbalance(),
+            cr.report.slo_attainment() * 100.0
+        );
+    }
+
+    report::header("encode/prefill overlap (modality-partition router)");
+    for overlap in [false, true] {
+        let mut c = cfg.clone();
+        c.cluster.router = "modality-partition".into();
+        c.cluster.encode_overlap = overlap;
+        let cr = run_cluster(&c);
+        let img = cr.report.by_modality(Modality::Image);
+        let vid = cr.report.by_modality(Modality::Video);
+        println!(
+            "overlap={overlap:<5} image ttft avg={:.3}s  video ttft avg={:.3}s  makespan={:.1}s",
+            img.avg_ttft, vid.avg_ttft, cr.makespan
+        );
+    }
+
+    println!("\nExpected shape: round-robin lets videos land on every replica, so text");
+    println!("p99 TTFT inherits rock head-of-line blocking; the rocks/pebbles/sand");
+    println!("partition isolates sand replicas (text p99 drops by orders of magnitude)");
+    println!("while idle-borrowing keeps rock replicas from starving the fleet.");
+    println!("Encode-overlap hides the vision encoder behind prefill/decode and");
+    println!("strictly lowers multimodal TTFT on the same seed.");
+}

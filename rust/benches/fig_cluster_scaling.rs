@@ -1,0 +1,122 @@
+//! fig_cluster_scaling — multi-replica serving: replicas × router-policy
+//! sweep plus the encode/prefill-overlap A/B.
+//!
+//! Expected shape: rocks/pebbles/sand partition routing beats round-robin
+//! on sand (text) TTFT p99 at every scale ≥ 2 replicas — a video routed
+//! onto a sand replica recreates head-of-line blocking one level above
+//! the scheduler — while least-work sits in between (load-aware but
+//! modality-blind). Encode-overlap strictly lowers multimodal TTFT on
+//! the same seed (the encoder stream hides behind prefill/decode).
+//!
+//! With `BENCH_JSON=path` set, every cell is appended to the JSONL sink
+//! for CI (`median_ns` = virtual makespan, `throughput` = output tokens
+//! per virtual second; not hot-path gated).
+
+use tcm_serve::bench_harness::record_named;
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::experiments::run_cluster;
+use tcm_serve::metrics::Report;
+use tcm_serve::request::Modality;
+
+fn cfg(replicas: usize, router: &str, overlap: bool) -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = "fcfs".into(); // vLLM-style in-replica: isolates the router's effect
+    c.mix = "MH".into();
+    c.rate = 1.5 * replicas as f64; // constant offered load per replica
+    c.num_requests = 200 * replicas;
+    c.seed = 23;
+    c.cluster.replicas = replicas;
+    c.cluster.router = router.into();
+    c.cluster.encode_overlap = overlap;
+    c
+}
+
+fn mean_multimodal_ttft(report: &Report) -> f64 {
+    let mm: Vec<f64> = report
+        .outcomes
+        .iter()
+        .filter(|o| o.modality != Modality::Text)
+        .map(|o| o.ttft())
+        .collect();
+    if mm.is_empty() {
+        0.0
+    } else {
+        mm.iter().sum::<f64>() / mm.len() as f64
+    }
+}
+
+fn main() {
+    println!(
+        "=== fig_cluster_scaling — replicas x router (llava-7b, MH, fcfs in-replica, \
+         1.5 req/s per replica) ==="
+    );
+    let mut sand_p99: Vec<(usize, &str, f64)> = Vec::new();
+    for replicas in [1usize, 2, 4, 8] {
+        for router in ROUTERS {
+            let c = cfg(replicas, router, false);
+            let cr = run_cluster(&c);
+            let sand = cr.report.by_modality(Modality::Text);
+            let pebble = cr.report.by_modality(Modality::Image);
+            let rock = cr.report.by_modality(Modality::Video);
+            println!(
+                "r={replicas} {router:<19} sand ttft p50/p99={:>7.3}/{:>8.3}s  \
+                 pebble p99={:>8.3}s  rock p99={:>8.3}s  slo={:>5.1}%  imbalance={:.2}",
+                sand.p50_ttft,
+                sand.p99_ttft,
+                pebble.p99_ttft,
+                rock.p99_ttft,
+                cr.report.slo_attainment() * 100.0,
+                cr.imbalance()
+            );
+            sand_p99.push((replicas, router, sand.p99_ttft));
+            let tokens: u64 = cr.report.outcomes.iter().map(|o| o.output_tokens as u64).sum();
+            record_named(
+                &format!("cluster/{router}/r{replicas}"),
+                cr.makespan * 1e9,
+                Some(tokens as f64 / cr.makespan.max(1e-9)),
+                false,
+            );
+        }
+        println!();
+    }
+
+    println!("--- partition vs round-robin, sand TTFT p99 (lower is better) ---");
+    for replicas in [2usize, 4, 8] {
+        let rr = sand_p99
+            .iter()
+            .find(|(r, n, _)| *r == replicas && *n == "round-robin")
+            .map(|(_, _, v)| *v)
+            .unwrap();
+        let part = sand_p99
+            .iter()
+            .find(|(r, n, _)| *r == replicas && *n == "modality-partition")
+            .map(|(_, _, v)| *v)
+            .unwrap();
+        println!(
+            "r={replicas}: round-robin={rr:.3}s modality-partition={part:.3}s ({})",
+            if part < rr { "partition wins" } else { "round-robin wins" }
+        );
+    }
+
+    println!("\n=== encode/prefill overlap A/B (2 replicas, modality-partition) ===");
+    let mut mm_ttft = [0.0f64; 2];
+    for (i, overlap) in [false, true].into_iter().enumerate() {
+        let c = cfg(2, "modality-partition", overlap);
+        let cr = run_cluster(&c);
+        mm_ttft[i] = mean_multimodal_ttft(&cr.report);
+        let img = cr.report.by_modality(Modality::Image);
+        let vid = cr.report.by_modality(Modality::Video);
+        println!(
+            "overlap={overlap:<5} multimodal mean ttft={:>7.3}s  image avg/p99={:>6.3}/{:>7.3}s  \
+             video avg/p99={:>7.3}/{:>8.3}s  makespan={:.1}s",
+            mm_ttft[i], img.avg_ttft, img.p99_ttft, vid.avg_ttft, vid.p99_ttft, cr.makespan
+        );
+        record_named(&format!("cluster/overlap-{overlap}/r2"), mm_ttft[i] * 1e9, None, false);
+    }
+    println!(
+        "overlap lowers multimodal mean ttft: {:.3}s -> {:.3}s ({})",
+        mm_ttft[0],
+        mm_ttft[1],
+        if mm_ttft[1] < mm_ttft[0] { "yes" } else { "NO — regression" }
+    );
+}

@@ -6,7 +6,7 @@
 //! simulated run, (b) the scoring/classification/KV primitives that
 //! dominate planning.
 
-use tcm_serve::bench_harness::bench;
+use tcm_serve::bench_harness::{bench, record_named};
 use tcm_serve::config::{RegulatorConfig, ServeConfig};
 use tcm_serve::coordinator::estimator::ImpactEstimator;
 use tcm_serve::coordinator::priority::PriorityRegulator;
@@ -34,19 +34,30 @@ fn main() {
             r.stats.planning_time_s * 1e3,
             r.stats.busy_time_s
         );
+        // informational (hot=false): this is a single-run mean, not a
+        // harness median — one OS descheduling spike would make it flaky
+        // as a CI gate; the primitive benches below carry the hot gate
+        record_named(
+            &format!("planning_per_iter/{policy}"),
+            r.stats.planning_time_s * 1e9 / r.stats.iterations.max(1) as f64,
+            None,
+            false,
+        );
     }
     println!();
 
-    // (b) primitives
+    // (b) primitives — recorded as hot-path entries for the CI
+    // bench-regression gate when BENCH_JSON is set
     let reg = PriorityRegulator::new(RegulatorConfig::default());
-    bench("priority_score (1k evals)", || {
+    let r = bench("priority_score_1k", || {
         let mut acc = 0.0;
         for i in 0..1000 {
             acc += reg.score(Class::ALL[i % 3], (i as f64) * 0.1);
         }
         acc
-    })
-    .print();
+    });
+    r.print();
+    r.record(true);
 
     let profile = tcm_serve::model::by_name("llava-7b").unwrap();
     let data = Profiler::new(&profile, 1).run(300);
@@ -60,16 +71,17 @@ fn main() {
         video_duration_s: 45.0,
         output_tokens: 100,
     };
-    bench("impact_estimate (1k reqs)", || {
+    let r = bench("impact_estimate_1k", || {
         let mut acc = 0.0;
         for _ in 0..1000 {
             acc += est.estimate(&req).prefill_s;
         }
         acc
-    })
-    .print();
+    });
+    r.print();
+    r.record(true);
 
-    bench("kv reserve/free cycle (1k reqs)", || {
+    let r = bench("kv_reserve_free_cycle_1k", || {
         let mut kv = KvCache::new(400_000, 16);
         for id in 0..1000u64 {
             kv.try_reserve(id, 500 + (id % 7) as u32 * 100);
@@ -78,11 +90,13 @@ fn main() {
             kv.free(id);
         }
         kv.used_blocks()
-    })
-    .print();
+    });
+    r.print();
+    r.record(true);
 
-    bench("estimator_training (300x3 samples)", || {
+    let r = bench("estimator_training_300x3", || {
         ImpactEstimator::train(&data).median_output()
-    })
-    .print();
+    });
+    r.print();
+    r.record(true);
 }

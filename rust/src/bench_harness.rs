@@ -6,6 +6,7 @@
 //! simulation and print table rows; the harness is used for the hot-path
 //! perf benches where distributional timing matters.
 
+use std::io::Write as _;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -30,6 +31,65 @@ impl BenchResult {
     pub fn median_ns(&self) -> f64 {
         self.median.as_nanos() as f64
     }
+
+    /// Record this result to the `BENCH_JSON` sink (if configured) for
+    /// the CI bench-regression gate; `hot` marks hot-path benches whose
+    /// median regression fails the job.
+    pub fn record(&self, hot: bool) {
+        record_named(&self.name, self.median_ns(), None, hot);
+    }
+}
+
+/// Record an arbitrary named metric to the `BENCH_JSON` sink, if
+/// configured — for figure benches whose gate metric isn't a harness
+/// timing (virtual makespans, TTFT means). No-op without the sink.
+pub fn record_named(name: &str, median_ns: f64, throughput: Option<f64>, hot: bool) {
+    if let Some(path) = json_sink() {
+        let rec = JsonRecord { name, median_ns, throughput, hot };
+        append_json(&path, &rec).expect("write BENCH_JSON sink");
+    }
+}
+
+/// One machine-readable bench record (`tools/bench_compare.py` merges
+/// the JSONL sink into `BENCH_PR3.json` and gates hot-path regressions
+/// against `BENCH_baseline.json`).
+pub struct JsonRecord<'a> {
+    pub name: &'a str,
+    /// Gate metric. Harness benches report the median iteration time;
+    /// figure-level cluster benches report the virtual makespan in ns.
+    pub median_ns: f64,
+    /// Optional domain throughput (tokens per virtual second for the
+    /// cluster bench); informational, never gated.
+    pub throughput: Option<f64>,
+    /// Hot-path marker: only hot records fail CI on regression.
+    pub hot: bool,
+}
+
+/// The JSONL sink path, when bench recording is requested
+/// (`BENCH_JSON=/path/to/file.jsonl`).
+pub fn json_sink() -> Option<String> {
+    std::env::var("BENCH_JSON").ok().filter(|s| !s.is_empty())
+}
+
+/// Append one record as a JSON line. Bench names are plain identifiers,
+/// so no escaping machinery: refuse anything that would need it rather
+/// than emit malformed JSON.
+pub fn append_json(path: &str, rec: &JsonRecord) -> std::io::Result<()> {
+    assert!(
+        rec.name.chars().all(|c| c.is_ascii_alphanumeric() || "/-_.:x ()".contains(c)),
+        "bench name {:?} would need JSON escaping",
+        rec.name
+    );
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let throughput = match rec.throughput {
+        Some(t) => format!("{t:.3}"),
+        None => "null".to_string(),
+    };
+    writeln!(
+        f,
+        "{{\"name\": \"{}\", \"median_ns\": {:.1}, \"throughput\": {}, \"hot\": {}}}",
+        rec.name, rec.median_ns, throughput, rec.hot
+    )
 }
 
 /// Time `f` for at least `min_iters` iterations and ~`target_ms` total.
@@ -88,6 +148,39 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(r.min <= r.median);
         assert!(r.median <= r.max);
+    }
+
+    #[test]
+    fn json_lines_are_well_formed() {
+        let path = std::env::temp_dir()
+            .join(format!("tcm_bench_json_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        append_json(
+            &path_s,
+            &JsonRecord { name: "hot/one", median_ns: 1234.5, throughput: None, hot: true },
+        )
+        .unwrap();
+        append_json(
+            &path_s,
+            &JsonRecord {
+                name: "cluster/rr/r2",
+                median_ns: 9.0e9,
+                throughput: Some(1523.25),
+                hot: false,
+            },
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"name\": \"hot/one\", \"median_ns\": 1234.5, \"throughput\": null, \"hot\": true}"
+        );
+        assert!(lines[1].contains("\"throughput\": 1523.250"));
+        assert!(lines[1].ends_with("\"hot\": false}"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

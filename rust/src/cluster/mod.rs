@@ -1,0 +1,368 @@
+//! Multi-replica cluster serving: N independent [`Scheduler`]+engine
+//! replicas behind one modality-aware [`Router`].
+//!
+//! The paper's single-engine scheduler keeps sand flowing through rocks;
+//! this layer keeps that true at fleet scale. Each replica is a complete
+//! scheduler+engine pair driven through the stepping API
+//! ([`Scheduler::inject`] / [`Scheduler::step`] / [`Scheduler::advance_to`]),
+//! so the cluster composes with everything the stepping refactor enabled:
+//! online injection, per-iteration events, incremental retirement
+//! ([`Scheduler::take_finished`]). Replicas do not share state — the only
+//! cross-replica decision is the router's, made per arrival from
+//! [`ReplicaView`] snapshots — which is what makes cluster runs
+//! deterministic and a 1-replica round-robin cluster bit-identical to a
+//! bare scheduler (proven in `tests/cluster.rs`).
+//!
+//! Virtual time: every replica carries its own clock. The batch driver
+//! ([`Cluster::run`]) advances each replica to an arrival's timestamp
+//! before routing it, so load-aware routers observe the fleet as it
+//! would look at that moment; [`Cluster::drain`] then interleaves
+//! replicas exactly like [`Scheduler::drain`] interleaves iterations.
+//!
+//! Encode/prefill overlap: building the cluster with
+//! `cluster.encode_overlap = true` flips each replica engine's profile to
+//! [`crate::model::ModelProfile::encode_overlap`] mode, where vision
+//! encode runs concurrently with the iteration's prefill/decode pass
+//! (RServe, arXiv 2509.24381) — `max(encode, prefill+decode) + penalty`
+//! instead of the serialized sum.
+
+pub mod router;
+
+pub use router::{build_router, partition_groups, ReplicaView, Router};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use crate::engine::sim_engine::SimEngine;
+use crate::metrics::Report;
+use crate::policies::build_policy;
+use crate::request::Request;
+
+/// Per-replica counters for the merged report (utilization/imbalance).
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    /// Requests the router sent here.
+    pub routed: usize,
+    pub iterations: u64,
+    pub preemptions: u64,
+    pub dropped: u64,
+    /// Virtual seconds the replica's engine was busy.
+    pub busy_time_s: f64,
+    pub planning_time_s: f64,
+    /// The replica's final virtual clock.
+    pub clock: f64,
+}
+
+/// Cluster-level result: one merged [`Report`] (global TTFT percentiles,
+/// SLO attainment across the whole fleet) plus per-replica statistics.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// All outcomes across replicas, sorted by request id.
+    pub report: Report,
+    pub per_replica: Vec<ReplicaStats>,
+    /// Largest replica clock — the fleet-wide makespan.
+    pub makespan: f64,
+}
+
+impl ClusterReport {
+    /// Fraction of the fleet makespan one replica's engine was busy.
+    pub fn utilization(&self, replica: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.per_replica[replica].busy_time_s / self.makespan
+        }
+    }
+
+    /// Load imbalance: max over mean per-replica busy time. 1.0 is a
+    /// perfectly balanced fleet; N means one replica did all the work.
+    pub fn imbalance(&self) -> f64 {
+        if self.per_replica.is_empty() {
+            return 1.0;
+        }
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for r in &self.per_replica {
+            max = max.max(r.busy_time_s);
+            sum += r.busy_time_s;
+        }
+        let mean = sum / self.per_replica.len() as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// N scheduler+engine replicas behind a router, driven through the same
+/// stepping verbs as a single [`Scheduler`].
+pub struct Cluster {
+    replicas: Vec<Scheduler>,
+    router: Box<dyn Router>,
+    routed: Vec<usize>,
+    /// Terminal outcomes reaped from replicas via `take_finished` — the
+    /// cluster retires per-replica state continuously, so replica memory
+    /// stays bounded regardless of how many requests flow through.
+    collected: Report,
+    events: Vec<RequestEvent>,
+}
+
+impl Cluster {
+    /// Build `cfg.cluster.replicas` simulated replicas plus the
+    /// configured router. Policy training and router training are
+    /// seeded from `cfg.seed`, so construction is deterministic.
+    pub fn new(cfg: &ServeConfig) -> Cluster {
+        let profile = crate::model::by_name(&cfg.model).expect("validated model name");
+        let engine_profile = cfg.engine_profile();
+        let n = cfg.cluster.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 0..n {
+            let policy = build_policy(cfg, &profile);
+            let engine = Box::new(SimEngine::new(&engine_profile));
+            replicas.push(Scheduler::new(cfg.clone(), policy, engine));
+        }
+        let router = build_router(cfg, &profile);
+        Cluster {
+            replicas,
+            router,
+            routed: vec![0; n],
+            collected: Report::default(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Requests routed to each replica so far.
+    pub fn routed(&self) -> &[usize] {
+        &self.routed
+    }
+
+    /// Latest replica clock (the fleet-wide "now").
+    pub fn now(&self) -> f64 {
+        self.replicas.iter().map(|r| r.now()).fold(0.0, f64::max)
+    }
+
+    /// Routing-time snapshot of every replica. `active` costs a scan of
+    /// the replica's request table; everything else is O(1).
+    pub fn views(&self) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaView {
+                now: r.now(),
+                active: r.active_requests(),
+                waiting: r.waiting_len(),
+                running: r.running_len(),
+                kv_utilization: r.kv().utilization(),
+            })
+            .collect()
+    }
+
+    /// Route a request and hand it to its replica (stepping-API ingress).
+    pub fn inject(&mut self, req: Request) {
+        let views = self.views();
+        let i = self.router.route(&req, &views);
+        debug_assert!(
+            i < self.replicas.len(),
+            "router {} returned out-of-range replica {i}",
+            self.router.name()
+        );
+        // release builds clamp rather than skewing onto a panic path
+        let i = i.min(self.replicas.len() - 1);
+        self.routed[i] += 1;
+        self.replicas[i].inject(req);
+    }
+
+    /// Advance every replica clock to `t` (monotone, like
+    /// [`Scheduler::advance_to`]).
+    pub fn advance_to(&mut self, t: f64) {
+        for r in &mut self.replicas {
+            r.advance_to(t);
+        }
+    }
+
+    /// Step every replica once and aggregate: `Executed` if any replica
+    /// executed work (dt = the largest step), otherwise the earliest
+    /// internal wake-up across replicas, `Blocked { None }` when nothing
+    /// can ever run without new input, `Drained` when the whole fleet is
+    /// empty. Also reaps terminal state into the merged report and feeds
+    /// terminal events to the router's ledger.
+    pub fn step(&mut self) -> StepOutcome {
+        let mut executed: Option<f64> = None;
+        let mut next_event: Option<f64> = None;
+        let mut all_drained = true;
+        for i in 0..self.replicas.len() {
+            let out = self.replicas[i].step();
+            self.collect_events(i);
+            match out {
+                StepOutcome::Executed { dt } => {
+                    all_drained = false;
+                    executed = Some(executed.map_or(dt, |m| m.max(dt)));
+                }
+                StepOutcome::Idle { next_event: t } => {
+                    all_drained = false;
+                    next_event = Some(next_event.map_or(t, |m| m.min(t)));
+                }
+                StepOutcome::Blocked { next_event: t } => {
+                    all_drained = false;
+                    if let Some(t) = t {
+                        next_event = Some(next_event.map_or(t, |m| m.min(t)));
+                    }
+                }
+                StepOutcome::Drained => {}
+            }
+        }
+        self.reap_finished();
+        if let Some(dt) = executed {
+            return StepOutcome::Executed { dt };
+        }
+        if all_drained {
+            return StepOutcome::Drained;
+        }
+        match next_event {
+            Some(t) => StepOutcome::Idle { next_event: t },
+            None => StepOutcome::Blocked { next_event: None },
+        }
+    }
+
+    /// Drain the request events emitted since the last call (merged
+    /// across replicas; request ids are cluster-unique).
+    pub fn take_events(&mut self) -> Vec<RequestEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Drop terminally blocked requests on every replica (shutdown /
+    /// batch-drain guard, mirroring [`Scheduler::drop_blocked`]).
+    pub fn drop_blocked(&mut self) {
+        for i in 0..self.replicas.len() {
+            self.replicas[i].drop_blocked();
+            self.collect_events(i);
+        }
+        self.reap_finished();
+    }
+
+    /// Step until the whole fleet is drained, then report — the cluster
+    /// analogue of [`Scheduler::drain`].
+    pub fn drain(&mut self) -> ClusterReport {
+        loop {
+            self.events.clear();
+            match self.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => self.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => self.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => self.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+        }
+        self.events.clear();
+        self.report()
+    }
+
+    /// Run a full trace: requests are routed in arrival order, with every
+    /// replica first advanced to the arrival's timestamp so load-aware
+    /// routers see the fleet state at that moment (a request arriving at
+    /// `t` must not be placed by looking at queues that will only exist
+    /// later).
+    pub fn run(&mut self, trace: Vec<Request>) -> ClusterReport {
+        let mut trace = trace;
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for req in trace {
+            let t = req.arrival;
+            for i in 0..self.replicas.len() {
+                self.advance_replica_to(i, t);
+            }
+            self.reap_finished();
+            self.events.clear();
+            self.inject(req);
+        }
+        self.drain()
+    }
+
+    /// Merged report plus per-replica stats at this moment (reaps any
+    /// not-yet-collected terminal state first).
+    pub fn report(&mut self) -> ClusterReport {
+        self.reap_finished();
+        let mut merged = self.collected.clone();
+        merged.sort_by_id();
+        let makespan = self.now();
+        let per_replica = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaStats {
+                replica: i,
+                routed: self.routed[i],
+                iterations: r.stats.iterations,
+                preemptions: r.stats.preemptions,
+                dropped: r.stats.dropped,
+                busy_time_s: r.stats.busy_time_s,
+                planning_time_s: r.stats.planning_time_s,
+                clock: r.now(),
+            })
+            .collect();
+        ClusterReport { report: merged, per_replica, makespan }
+    }
+
+    /// Per-replica scheduler invariants (property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, r) in self.replicas.iter().enumerate() {
+            r.check_invariants().map_err(|e| format!("replica {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Process replica `i`'s work up to time `t`: execute iterations
+    /// whose inputs are ready, jump across idle gaps, and stop once the
+    /// replica's clock reaches `t` (or it cannot progress without new
+    /// input). Exactly the `drain` loop, bounded by a horizon.
+    fn advance_replica_to(&mut self, i: usize, t: f64) {
+        while self.replicas[i].now() < t {
+            let out = self.replicas[i].step();
+            self.collect_events(i);
+            match out {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event }
+                | StepOutcome::Blocked { next_event: Some(next_event) } => {
+                    if next_event >= t {
+                        self.replicas[i].advance_to(t);
+                        return;
+                    }
+                    self.replicas[i].advance_to(next_event);
+                }
+                StepOutcome::Blocked { next_event: None } | StepOutcome::Drained => {
+                    self.replicas[i].advance_to(t);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Pull replica `i`'s fresh events into the cluster buffer, retiring
+    /// terminal requests from the router's ledger.
+    fn collect_events(&mut self, i: usize) {
+        for ev in self.replicas[i].take_events() {
+            if let RequestEvent::Finished { id, .. } | RequestEvent::Dropped { id, .. } = ev {
+                self.router.on_terminal(id);
+            }
+            self.events.push(ev);
+        }
+    }
+
+    /// Merge every replica's newly terminal outcomes into the cluster
+    /// report, reclaiming replica-side state.
+    fn reap_finished(&mut self) {
+        for r in &mut self.replicas {
+            let part = r.take_finished();
+            if part.total() > 0 {
+                self.collected.merge(part);
+            }
+        }
+    }
+}

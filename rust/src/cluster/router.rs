@@ -1,0 +1,396 @@
+//! Modality-aware request routing across engine replicas.
+//!
+//! A [`Router`] picks the replica for each arriving request before the
+//! per-replica scheduler ever sees it. This is the cluster-level analogue
+//! of the paper's insight: a rock routed onto the replica serving sand
+//! recreates head-of-line blocking one level up, no matter how good the
+//! within-replica scheduler is (ElasticMM, arXiv 2507.10069, makes the
+//! same observation with modality-decoupled instance groups).
+//!
+//! Three policies:
+//! * [`RoundRobinRouter`] — the load-oblivious baseline;
+//! * [`LeastWorkRouter`] — least outstanding *predicted* work, using the
+//!   same [`ImpactEstimator`] the TCM policy classifies with: each routed
+//!   request charges its predicted pre-first-token cost to its replica's
+//!   ledger until the request finishes or is dropped;
+//! * [`ModalityPartitionRouter`] — rocks/pebbles/sand partitioning with
+//!   elastic spillover: replicas are split into sand (text), pebble
+//!   (image) and rock (video) groups; sand may borrow *idle* pebble/rock
+//!   replicas, images may borrow idle rock replicas, but rocks may never
+//!   displace sand — a video is confined to the rock group even when
+//!   every sand replica sits idle, because a single admitted video
+//!   poisons that replica's latency for seconds.
+
+use crate::config::ServeConfig;
+use crate::coordinator::estimator::ImpactEstimator;
+use crate::coordinator::profiler::Profiler;
+use crate::model::ModelProfile;
+use crate::request::{Modality, Request};
+use std::collections::HashMap;
+
+/// Snapshot of one replica at routing time. Index in the slice handed to
+/// [`Router::route`] is the replica id.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// The replica's virtual clock.
+    pub now: f64,
+    /// Requests the replica still owes work (pending arrivals,
+    /// preprocessing, waiting, running). 0 means idle — borrowable.
+    pub active: usize,
+    pub waiting: usize,
+    pub running: usize,
+    /// KV-cache block utilization in `[0, 1]`.
+    pub kv_utilization: f64,
+}
+
+/// Replica-selection policy. Implementations must be deterministic for a
+/// fixed request/view sequence — cluster runs are reproduced bit-for-bit
+/// from the workload seed.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick the replica for `req`. `views` has one entry per replica and
+    /// is never empty; the returned index must be `< views.len()`.
+    fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize;
+
+    /// Terminal notification (request finished or dropped) so stateful
+    /// routers can retire ledger entries. Default: no-op.
+    fn on_terminal(&mut self, _req_id: u64) {}
+}
+
+/// Outstanding predicted work per replica, retired on terminal events.
+#[derive(Debug, Default)]
+struct WorkLedger {
+    outstanding: Vec<f64>,
+    by_req: HashMap<u64, (usize, f64)>,
+}
+
+impl WorkLedger {
+    fn new(replicas: usize) -> WorkLedger {
+        WorkLedger { outstanding: vec![0.0; replicas], by_req: HashMap::new() }
+    }
+
+    fn assign(&mut self, req_id: u64, replica: usize, cost: f64) {
+        if self.outstanding.len() <= replica {
+            self.outstanding.resize(replica + 1, 0.0);
+        }
+        self.outstanding[replica] += cost;
+        self.by_req.insert(req_id, (replica, cost));
+    }
+
+    fn retire(&mut self, req_id: u64) {
+        if let Some((replica, cost)) = self.by_req.remove(&req_id) {
+            // clamp: float cancellation must not leave a ledger negative
+            self.outstanding[replica] = (self.outstanding[replica] - cost).max(0.0);
+        }
+    }
+
+    fn of(&self, replica: usize) -> f64 {
+        self.outstanding.get(replica).copied().unwrap_or(0.0)
+    }
+
+    /// Deterministic argmin over candidate replica ids: least outstanding
+    /// work, ties to the lowest id.
+    fn argmin(&self, candidates: impl Iterator<Item = usize>) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for i in candidates {
+            let w = self.of(i);
+            let better = match best {
+                None => true,
+                Some((bw, bi)) => w < bw || (w == bw && i < bi),
+            };
+            if better {
+                best = Some((w, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+/// Load-oblivious baseline: cycle through replicas in submission order.
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> RoundRobinRouter {
+        RoundRobinRouter { next: 0 }
+    }
+}
+
+impl Default for RoundRobinRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &Request, views: &[ReplicaView]) -> usize {
+        let i = self.next % views.len();
+        self.next = (self.next + 1) % views.len();
+        i
+    }
+}
+
+/// Least outstanding predicted work, measured by the impact estimator's
+/// pre-first-token cost prediction (§3.3).
+pub struct LeastWorkRouter {
+    est: ImpactEstimator,
+    ledger: WorkLedger,
+}
+
+impl LeastWorkRouter {
+    pub fn new(est: ImpactEstimator, replicas: usize) -> LeastWorkRouter {
+        LeastWorkRouter { est, ledger: WorkLedger::new(replicas) }
+    }
+}
+
+impl Router for LeastWorkRouter {
+    fn name(&self) -> &'static str {
+        "least-work"
+    }
+
+    fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        let cost = self.est.estimate(req).prefill_s;
+        let i = self.ledger.argmin(0..views.len()).expect("views non-empty");
+        self.ledger.assign(req.id, i, cost);
+        i
+    }
+
+    fn on_terminal(&mut self, req_id: u64) {
+        self.ledger.retire(req_id);
+    }
+}
+
+/// Split `n` replica ids into (sand, pebble, rock) groups. Small clusters
+/// share: 1 replica serves all three roles, 2 replicas give sand its own
+/// replica and fold pebbles into the rock replica. From 3 replicas on,
+/// groups are sized by *work* share rather than request share — videos
+/// are a minority of requests but the large majority of engine-seconds
+/// under multimodal mixes — so rocks take ~half the fleet, pebbles ~1/5,
+/// sand the rest; every group keeps at least one replica.
+pub fn partition_groups(n: usize) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    match n {
+        0 | 1 => (vec![0], vec![0], vec![0]),
+        2 => (vec![0], vec![1], vec![1]),
+        _ => {
+            let rock_n = (n / 2).max(1);
+            let pebble_n = (n / 5).max(1);
+            let sand_n = n - rock_n - pebble_n;
+            let sand = (0..sand_n).collect();
+            let pebble = (sand_n..sand_n + pebble_n).collect();
+            let rock = (sand_n + pebble_n..n).collect();
+            (sand, pebble, rock)
+        }
+    }
+}
+
+/// Rocks/pebbles/sand partitioning with elastic spillover (asymmetric by
+/// design: light traffic borrows idle heavy replicas, never vice versa).
+pub struct ModalityPartitionRouter {
+    est: ImpactEstimator,
+    ledger: WorkLedger,
+    sand: Vec<usize>,
+    pebble: Vec<usize>,
+    rock: Vec<usize>,
+}
+
+impl ModalityPartitionRouter {
+    pub fn new(est: ImpactEstimator, replicas: usize) -> ModalityPartitionRouter {
+        let (sand, pebble, rock) = partition_groups(replicas.max(1));
+        ModalityPartitionRouter { est, ledger: WorkLedger::new(replicas.max(1)), sand, pebble, rock }
+    }
+}
+
+impl Router for ModalityPartitionRouter {
+    fn name(&self) -> &'static str {
+        "modality-partition"
+    }
+
+    fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        let cost = self.est.estimate(req).prefill_s;
+        let chosen = match req.modality {
+            Modality::Text => {
+                // sand flows through its own group and may borrow any
+                // idle heavier replica
+                let borrowed = self
+                    .pebble
+                    .iter()
+                    .chain(self.rock.iter())
+                    .copied()
+                    .filter(|&i| views[i].active == 0);
+                self.ledger.argmin(self.sand.iter().copied().chain(borrowed))
+            }
+            Modality::Image => {
+                let borrowed = self.rock.iter().copied().filter(|&i| views[i].active == 0);
+                self.ledger.argmin(self.pebble.iter().copied().chain(borrowed))
+            }
+            // rocks may not displace sand: videos stay in the rock group
+            // even when sand replicas are idle
+            Modality::Video => self.ledger.argmin(self.rock.iter().copied()),
+        }
+        .expect("every group holds at least one replica");
+        self.ledger.assign(req.id, chosen, cost);
+        chosen
+    }
+
+    fn on_terminal(&mut self, req_id: u64) {
+        self.ledger.retire(req_id);
+    }
+}
+
+/// Train (if needed) and build the router named in the config. Stateful
+/// routers share the estimator-training recipe with `build_policy`, so a
+/// cluster run stays deterministic in the workload seed.
+pub fn build_router(cfg: &ServeConfig, profile: &ModelProfile) -> Box<dyn Router> {
+    let n = cfg.cluster.replicas.max(1);
+    match cfg.cluster.router.as_str() {
+        "round-robin" => Box::new(RoundRobinRouter::new()),
+        name @ ("least-work" | "modality-partition") => {
+            let data = Profiler::new(profile, cfg.seed ^ 0x7E57_AB1E).run(300);
+            let est = ImpactEstimator::train(&data);
+            if name == "least-work" {
+                Box::new(LeastWorkRouter::new(est, n))
+            } else {
+                Box::new(ModalityPartitionRouter::new(est, n))
+            }
+        }
+        other => panic!("unknown router '{other}' (validate() should have caught this)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    fn estimator() -> ImpactEstimator {
+        let data = Profiler::new(&by_name("llava-7b").unwrap(), 3).run(300);
+        ImpactEstimator::train(&data)
+    }
+
+    fn views(n: usize) -> Vec<ReplicaView> {
+        (0..n)
+            .map(|_| ReplicaView {
+                now: 0.0,
+                active: 0,
+                waiting: 0,
+                running: 0,
+                kv_utilization: 0.0,
+            })
+            .collect()
+    }
+
+    fn req(id: u64, modality: Modality) -> Request {
+        let mm = match modality {
+            Modality::Text => 0,
+            Modality::Image => 729,
+            Modality::Video => 17_000,
+        };
+        Request {
+            id,
+            arrival: 0.0,
+            modality,
+            text_tokens: 40,
+            mm_tokens: mm,
+            video_duration_s: if modality == Modality::Video { 45.0 } else { 0.0 },
+            output_tokens: 64,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobinRouter::new();
+        let v = views(3);
+        let picks: Vec<usize> = (0..7).map(|i| r.route(&req(i, Modality::Text), &v)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn partition_groups_cover_all_replicas_disjointly() {
+        for n in 3..=32 {
+            let (sand, pebble, rock) = partition_groups(n);
+            assert!(!sand.is_empty() && !pebble.is_empty() && !rock.is_empty(), "n={n}");
+            let mut all: Vec<usize> =
+                sand.iter().chain(&pebble).chain(&rock).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+        // shared small clusters
+        assert_eq!(partition_groups(1), (vec![0], vec![0], vec![0]));
+        assert_eq!(partition_groups(2), (vec![0], vec![1], vec![1]));
+    }
+
+    #[test]
+    fn least_work_spreads_before_stacking() {
+        let mut r = LeastWorkRouter::new(estimator(), 3);
+        let v = views(3);
+        // three equal-cost requests with no completions must land on
+        // three distinct replicas
+        let mut picks: Vec<usize> =
+            (0..3).map(|i| r.route(&req(i, Modality::Image), &v)).collect();
+        picks.sort_unstable();
+        assert_eq!(picks, vec![0, 1, 2]);
+        // retiring a request frees its replica for the next arrival
+        r.on_terminal(0);
+        let again = r.route(&req(9, Modality::Image), &v);
+        assert_eq!(again, 0, "retired replica should be least-loaded again");
+    }
+
+    #[test]
+    fn least_work_prefers_light_replica_over_video_loaded_one() {
+        let mut r = LeastWorkRouter::new(estimator(), 2);
+        let v = views(2);
+        assert_eq!(r.route(&req(0, Modality::Video), &v), 0);
+        // the video's predicted cost dwarfs a text request's: everything
+        // light flows to replica 1 until the video retires
+        for i in 1..5 {
+            assert_eq!(r.route(&req(i, Modality::Text), &v), 1);
+        }
+    }
+
+    #[test]
+    fn partition_confines_videos_to_rock_group() {
+        let mut r = ModalityPartitionRouter::new(estimator(), 4);
+        let (sand, _, rock) = partition_groups(4);
+        let v = views(4); // everyone idle: still no video on sand
+        for i in 0..8 {
+            let pick = r.route(&req(i, Modality::Video), &v);
+            assert!(rock.contains(&pick), "video routed to non-rock replica {pick}");
+            assert!(!sand.contains(&pick));
+        }
+    }
+
+    #[test]
+    fn sand_borrows_idle_rock_but_not_busy_rock() {
+        let mut r = ModalityPartitionRouter::new(estimator(), 2); // sand=[0], rock=[1]
+        let mut v = views(2);
+        // rock replica idle: after enough text load on sand, replica 1
+        // (outstanding 0) wins the argmin
+        let first = r.route(&req(0, Modality::Text), &v);
+        assert_eq!(first, 0, "empty ledgers tie-break to the sand replica");
+        let second = r.route(&req(1, Modality::Text), &v);
+        assert_eq!(second, 1, "idle rock replica is borrowed once sand has work");
+        // busy rock replica: no borrowing, everything stays on sand
+        v[1].active = 3;
+        for i in 2..6 {
+            assert_eq!(r.route(&req(i, Modality::Text), &v), 0);
+        }
+    }
+
+    #[test]
+    fn factory_builds_every_router() {
+        let profile = by_name("llava-7b").unwrap();
+        for name in crate::config::ROUTERS {
+            let mut cfg = ServeConfig::default();
+            cfg.cluster.replicas = 2;
+            cfg.cluster.router = name.into();
+            let r = build_router(&cfg, &profile);
+            assert_eq!(r.name(), name);
+        }
+    }
+}

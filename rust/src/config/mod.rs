@@ -78,6 +78,35 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Multi-replica cluster serving knobs (the `[cluster]` TOML section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of independent `Scheduler`+engine replicas. 1 keeps the
+    /// single-engine behavior (a 1-replica round-robin cluster is
+    /// bit-identical to a bare `Scheduler`, see `tests/cluster.rs`).
+    pub replicas: usize,
+    /// Router policy: round-robin | least-work | modality-partition.
+    pub router: String,
+    /// Run each replica's vision encoder concurrently with its
+    /// prefill/decode pass (see `ModelProfile::encode_overlap`).
+    pub encode_overlap: bool,
+    /// Stream-sync penalty charged per overlapped iteration (seconds).
+    pub overlap_penalty_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            router: "round-robin".into(),
+            encode_overlap: false,
+            overlap_penalty_s: 0.0005,
+        }
+    }
+}
+
+pub const ROUTERS: [&str; 3] = ["round-robin", "least-work", "modality-partition"];
+
 /// Top-level experiment/server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -99,6 +128,7 @@ pub struct ServeConfig {
     pub memory_frac: f64,
     pub scheduler: SchedulerConfig,
     pub regulator: RegulatorConfig,
+    pub cluster: ClusterConfig,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +144,7 @@ impl Default for ServeConfig {
             memory_frac: 1.0,
             scheduler: SchedulerConfig::default(),
             regulator: RegulatorConfig::default(),
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -130,11 +161,25 @@ impl std::fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl ServeConfig {
+    /// The engine-side cost profile: the named model profile with the
+    /// cluster's encode-overlap knob applied. Every simulated engine —
+    /// single-scheduler `run_sim` and cluster replicas alike — must be
+    /// built from this so `encode_overlap = true` means the same thing
+    /// at any replica count.
+    pub fn engine_profile(&self) -> crate::model::ModelProfile {
+        let profile = crate::model::by_name(&self.model).expect("validated model name");
+        if self.cluster.encode_overlap {
+            profile.with_encode_overlap(self.cluster.overlap_penalty_s)
+        } else {
+            profile
+        }
+    }
+
     /// Apply a parsed TOML document on top of the current values.
     pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
-            "memory_frac", "scheduler.", "regulator.",
+            "memory_frac", "scheduler.", "regulator.", "cluster.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -187,6 +232,18 @@ impl ServeConfig {
         if let Some(v) = doc.get_bool("scheduler.atomic_prefill") {
             self.scheduler.atomic_prefill = v;
         }
+        if let Some(v) = doc.get_i64("cluster.replicas") {
+            self.cluster.replicas = v as usize;
+        }
+        if let Some(v) = doc.get_str("cluster.router") {
+            self.cluster.router = v.to_string();
+        }
+        if let Some(v) = doc.get_bool("cluster.encode_overlap") {
+            self.cluster.encode_overlap = v;
+        }
+        if let Some(v) = doc.get_f64("cluster.overlap_penalty_s") {
+            self.cluster.overlap_penalty_s = v;
+        }
         if let Some(v) = doc.get_bool("regulator.aging_enabled") {
             self.regulator.aging_enabled = v;
         }
@@ -235,6 +292,15 @@ impl ServeConfig {
         self.scheduler.token_budget =
             args.get_usize("token-budget", self.scheduler.token_budget as usize).map_err(e)?
                 as u32;
+        self.cluster.replicas = args.get_usize("replicas", self.cluster.replicas).map_err(e)?;
+        if let Some(v) = args.get("router") {
+            self.cluster.router = v.to_string();
+        }
+        if args.has_flag("encode-overlap") {
+            self.cluster.encode_overlap = true;
+        }
+        self.cluster.overlap_penalty_s =
+            args.get_f64("overlap-penalty", self.cluster.overlap_penalty_s).map_err(e)?;
         self.validate()
     }
 
@@ -265,6 +331,18 @@ impl ServeConfig {
         }
         if self.scheduler.token_budget == 0 || self.scheduler.kv_block_tokens == 0 {
             return Err(ConfigError("scheduler token sizes must be > 0".into()));
+        }
+        if self.cluster.replicas == 0 || self.cluster.replicas > 256 {
+            return Err(ConfigError("cluster.replicas must be in 1..=256".into()));
+        }
+        if !ROUTERS.contains(&self.cluster.router.as_str()) {
+            return Err(ConfigError(format!(
+                "unknown router '{}' (expected one of {ROUTERS:?})",
+                self.cluster.router
+            )));
+        }
+        if self.cluster.overlap_penalty_s < 0.0 {
+            return Err(ConfigError("cluster.overlap_penalty_s must be >= 0".into()));
         }
         Ok(())
     }
@@ -327,6 +405,32 @@ aging_enabled = false
         assert!(c
             .apply_doc(&Doc::parse("[regulator]\nk = [0.1, 0.2]").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.cluster, ClusterConfig::default());
+        let doc = Doc::parse(
+            r#"
+[cluster]
+replicas = 4
+router = "modality-partition"
+encode_overlap = true
+overlap_penalty_s = 0.001
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.cluster.replicas, 4);
+        assert_eq!(c.cluster.router, "modality-partition");
+        assert!(c.cluster.encode_overlap);
+        assert_eq!(c.cluster.overlap_penalty_s, 0.001);
+
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[cluster]\nrouter = \"nope\"").unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[cluster]\nreplicas = 0").unwrap()).is_err());
     }
 
     #[test]

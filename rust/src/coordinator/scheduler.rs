@@ -130,6 +130,10 @@ pub struct Scheduler {
 
     finished: Vec<u64>,
     failed: Vec<u64>,
+    /// Terminal outcomes already handed out via [`Scheduler::take_finished`]
+    /// (report bookkeeping: `failed.len() + retired_failed == stats.dropped`).
+    retired_finished: usize,
+    retired_failed: usize,
     events: Vec<RequestEvent>,
     pub stats: SchedStats,
 }
@@ -156,6 +160,8 @@ impl Scheduler {
             now: 0.0,
             finished: Vec::new(),
             failed: Vec::new(),
+            retired_finished: 0,
+            retired_failed: 0,
             events: Vec::new(),
             stats: SchedStats::default(),
         }
@@ -183,6 +189,27 @@ impl Scheduler {
 
     pub fn engine_mut(&mut self) -> &mut dyn Engine {
         self.engine.as_mut()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Requests the scheduler still owes work: pending (not yet due)
+    /// arrivals, preprocessing, waiting and running — everything that is
+    /// not terminal. Routers use this to spot idle replicas. O(states),
+    /// called once per replica per routed arrival.
+    pub fn active_requests(&self) -> usize {
+        self.arrivals.len()
+            + self
+                .states
+                .values()
+                .filter(|s| !matches!(s.phase, Phase::Finished | Phase::Dropped))
+                .count()
     }
 
     // -----------------------------------------------------------------
@@ -334,13 +361,43 @@ impl Scheduler {
         self.drain()
     }
 
-    /// Outcomes so far: completed requests plus explicitly dropped ones
-    /// (surfaced as failed outcomes so SLO/goodput accounting sees every
-    /// request).
+    /// Outcomes accumulated since the last [`Scheduler::take_finished`]
+    /// call (or since construction): completed requests plus explicitly
+    /// dropped ones (surfaced as failed outcomes so SLO/goodput
+    /// accounting sees every request). Long-lived callers that retire
+    /// state incrementally merge these partial reports themselves
+    /// ([`Report::merge`]).
     pub fn report(&self) -> Report {
         let outcomes = self.finished.iter().map(|id| self.states[id].to_outcome()).collect();
         let failed = self.failed.iter().map(|id| self.states[id].to_failed_outcome()).collect();
         Report::with_failed(outcomes, failed)
+    }
+
+    /// Retire/compact API (online serving): drain every terminal request
+    /// into a partial [`Report`] and reclaim its scheduler-side state.
+    /// Without this, `states` grows linearly with total requests served —
+    /// a long-lived server calls it after emitting each iteration's
+    /// events and merges the partials into its own running report.
+    pub fn take_finished(&mut self) -> Report {
+        let outcomes: Vec<_> = self
+            .finished
+            .drain(..)
+            .map(|id| self.states.remove(&id).expect("finished state present").to_outcome())
+            .collect();
+        let failed: Vec<_> = self
+            .failed
+            .drain(..)
+            .map(|id| self.states.remove(&id).expect("failed state present").to_failed_outcome())
+            .collect();
+        self.retired_finished += outcomes.len();
+        self.retired_failed += failed.len();
+        Report::with_failed(outcomes, failed)
+    }
+
+    /// Terminal requests retired via [`Scheduler::take_finished`] so far,
+    /// as `(finished, failed)` counts.
+    pub fn retired(&self) -> (usize, usize) {
+        (self.retired_finished, self.retired_failed)
     }
 
     /// Next internal wake-up: the earliest pending arrival or preprocess
@@ -799,10 +856,11 @@ impl Scheduler {
                 return Err(format!("failed req {id} in phase {p:?}"));
             }
         }
-        if self.failed.len() as u64 != self.stats.dropped {
+        if (self.failed.len() + self.retired_failed) as u64 != self.stats.dropped {
             return Err(format!(
-                "drop accounting: {} failed outcomes but stats.dropped={}",
+                "drop accounting: {} failed + {} retired-failed outcomes but stats.dropped={}",
                 self.failed.len(),
+                self.retired_failed,
                 self.stats.dropped
             ));
         }

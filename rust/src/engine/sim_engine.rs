@@ -103,10 +103,29 @@ impl SimEngine {
     }
 }
 
+impl SimEngine {
+    /// Combine component costs into the iteration duration. Serialized
+    /// mode (the default) charges the sum, mirroring a single-stream
+    /// engine. With [`crate::model::ModelProfile::encode_overlap`] set,
+    /// the encoder runs on its own stream concurrent with the LLM pass:
+    /// the iteration costs `max(encode, prefill+decode) + penalty`,
+    /// clamped to never exceed the serialized sum (a real engine
+    /// serializes when overlap is unprofitable).
+    pub fn iteration_time(&self, encode: f64, prefill: f64, decode: f64) -> f64 {
+        let gpu = prefill + decode;
+        let serial = encode + gpu;
+        if self.profile.encode_overlap && encode > 0.0 && gpu > 0.0 {
+            serial.min(encode.max(gpu) + self.profile.encode_overlap_penalty_s)
+        } else {
+            serial
+        }
+    }
+}
+
 impl Engine for SimEngine {
     fn execute(&mut self, plan: &StepPlan) -> f64 {
         let (e, pf, d) = self.plan_cost(plan);
-        let dt = e + pf + d;
+        let dt = self.iteration_time(e, pf, d);
         self.busy_time += dt;
         self.iterations += 1;
         dt
@@ -195,5 +214,51 @@ mod tests {
     #[test]
     fn plan_token_count() {
         assert_eq!(plan().token_count(), 769 + 2);
+    }
+
+    #[test]
+    fn overlap_charges_max_plus_penalty() {
+        let serial_p = by_name("llava-7b").unwrap();
+        let overlap_p = serial_p.clone().with_encode_overlap(0.0005);
+        let mut serial = SimEngine::new(&serial_p);
+        let mut overlap = SimEngine::new(&overlap_p);
+        let (e, pf, d) = serial.plan_cost(&plan());
+        let dt_serial = serial.execute(&plan());
+        let dt_overlap = overlap.execute(&plan());
+        assert!((dt_serial - (e + pf + d)).abs() < 1e-12);
+        let expect = (e + pf + d).min(e.max(pf + d) + 0.0005);
+        assert!((dt_overlap - expect).abs() < 1e-12);
+        assert!(dt_overlap < dt_serial, "{dt_overlap} !< {dt_serial}");
+    }
+
+    #[test]
+    fn overlap_never_exceeds_serialized() {
+        // when the penalty dwarfs the smaller component, fall back to
+        // the serialized sum rather than charging overlap at a loss
+        let p = by_name("llava-7b").unwrap().with_encode_overlap(10.0);
+        let mut overlap = SimEngine::new(&p);
+        let mut serial = SimEngine::new(&by_name("llava-7b").unwrap());
+        assert_eq!(overlap.execute(&plan()), serial.execute(&plan()));
+    }
+
+    #[test]
+    fn overlap_is_noop_for_pure_text_or_pure_encode_iterations() {
+        let p = by_name("llava-7b").unwrap().with_encode_overlap(0.0005);
+        let mut e = SimEngine::new(&p);
+        let text_only = StepPlan {
+            encodes: vec![],
+            prefills: vec![PrefillItem {
+                req_id: 1,
+                ctx_before: 0,
+                chunk_tokens: 100,
+                last_chunk: true,
+                text_tokens: 100,
+                mm_tokens: 0,
+                prefill_total: 100,
+            }],
+            decodes: vec![],
+        };
+        let mut serial = SimEngine::new(&by_name("llava-7b").unwrap());
+        assert_eq!(e.execute(&text_only), serial.execute(&text_only));
     }
 }

@@ -2,6 +2,7 @@
 //! examples run simulations through these helpers so setups are identical
 //! (and reproducible from the seeds recorded in EXPERIMENTS.md).
 
+use crate::cluster::{Cluster, ClusterReport};
 use crate::config::ServeConfig;
 use crate::coordinator::{SchedStats, Scheduler};
 use crate::engine::sim_engine::SimEngine;
@@ -34,13 +35,30 @@ pub fn run_sim(cfg: &ServeConfig) -> RunResult {
 }
 
 /// Run a simulation over an explicit trace (A/B policy comparisons).
+/// The engine honors `cfg.cluster.encode_overlap` even at a single
+/// scheduler, so overlap A/Bs don't silently require a cluster.
 pub fn run_sim_with_trace(cfg: &ServeConfig, trace: Vec<Request>) -> RunResult {
     let profile = crate::model::by_name(&cfg.model).expect("validated model");
     let policy = build_policy(cfg, &profile);
-    let engine = Box::new(SimEngine::new(&profile));
+    let engine = Box::new(SimEngine::new(&cfg.engine_profile()));
     let mut sched = Scheduler::new(cfg.clone(), policy, engine);
     let report = sched.run(trace);
     RunResult { makespan: sched.now(), stats: sched.stats.clone(), report }
+}
+
+/// Run a multi-replica cluster experiment under `cfg` (replica count,
+/// router policy and encode-overlap mode come from `cfg.cluster`). The
+/// trace is identical to the single-engine one for the same seed, so
+/// router policies compete on identical arrival sequences.
+pub fn run_cluster(cfg: &ServeConfig) -> ClusterReport {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model");
+    let trace = make_trace(cfg, &profile);
+    run_cluster_with_trace(cfg, trace)
+}
+
+/// Cluster run over an explicit trace (A/B router comparisons).
+pub fn run_cluster_with_trace(cfg: &ServeConfig, trace: Vec<Request>) -> ClusterReport {
+    Cluster::new(cfg).run(trace)
 }
 
 /// Goodput (Fig 15): the maximum request rate sustaining

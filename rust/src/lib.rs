@@ -25,6 +25,7 @@
 //! [`workload::WorkloadGen`] stream under a [`config::ServeConfig`].
 
 pub mod bench_harness;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

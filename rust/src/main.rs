@@ -34,6 +34,10 @@ fn parser() -> Parser {
         .option("slo-scale", "SLO = scale x isolated e2e latency")
         .option("memory-frac", "fraction of KV capacity available")
         .option("token-budget", "chunked-prefill token budget per iteration")
+        .option("replicas", "engine replicas (cluster serving; 1 = single engine)")
+        .option("router", "round-robin | least-work | modality-partition")
+        .option("overlap-penalty", "encode-overlap sync penalty, seconds")
+        .flag("encode-overlap", "overlap vision encode with prefill/decode")
         .option("out", "output path (trace subcommand)")
         .option("artifacts", "artifacts directory (serve subcommand)")
 }
@@ -92,6 +96,9 @@ fn cmd_simulate(cfg: &ServeConfig) {
         cfg.slo_scale,
         cfg.memory_frac * 100.0
     );
+    if cfg.cluster.replicas > 1 {
+        return cmd_simulate_cluster(cfg);
+    }
     let r = experiments::run_sim(cfg);
     report::header("results by class");
     report::mcto_rows(&cfg.policy, &r.report);
@@ -106,6 +113,38 @@ fn cmd_simulate(cfg: &ServeConfig) {
         r.makespan,
         r.stats.busy_time_s,
         r.stats.planning_time_s * 1e6 / r.stats.iterations.max(1) as f64
+    );
+}
+
+fn cmd_simulate_cluster(cfg: &ServeConfig) {
+    println!(
+        "cluster: replicas={} router={} encode_overlap={}",
+        cfg.cluster.replicas, cfg.cluster.router, cfg.cluster.encode_overlap
+    );
+    let cr = experiments::run_cluster(cfg);
+    report::header("merged results by class");
+    report::mcto_rows(&cfg.policy, &cr.report);
+    report::header("merged results by modality");
+    report::modality_rows(&cfg.policy, &cr.report);
+    report::header("per-replica");
+    for rs in &cr.per_replica {
+        println!(
+            "replica {:<3} routed={:<6} iterations={:<8} preempt={:<6} dropped={:<5} \
+             busy={:>9.1}s util={:>5.1}%",
+            rs.replica,
+            rs.routed,
+            rs.iterations,
+            rs.preemptions,
+            rs.dropped,
+            rs.busy_time_s,
+            cr.utilization(rs.replica) * 100.0
+        );
+    }
+    println!(
+        "\nmakespan={:.1}s imbalance={:.2} (max/mean busy) slo_attainment={:.1}%",
+        cr.makespan,
+        cr.imbalance(),
+        cr.report.slo_attainment() * 100.0
     );
 }
 

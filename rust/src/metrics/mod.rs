@@ -156,6 +156,23 @@ impl Report {
         self.outcomes.len() + self.failed.len()
     }
 
+    /// Absorb another (partial) report: used by incremental retirement
+    /// (`Scheduler::take_finished`) and by the cluster layer merging
+    /// per-replica reports into one global view.
+    pub fn merge(&mut self, other: Report) {
+        self.outcomes.extend(other.outcomes);
+        self.failed.extend(other.failed);
+    }
+
+    /// Canonical ordering for cross-run comparison: merged reports
+    /// accumulate outcomes in completion order, which depends on replica
+    /// interleaving; sorting by request id makes equality checks and
+    /// diffs deterministic.
+    pub fn sort_by_id(&mut self) {
+        self.outcomes.sort_by_key(|o| o.id);
+        self.failed.sort_by_key(|f| f.id);
+    }
+
     /// Fraction of all requests (completed *and* dropped) that met their
     /// SLO; a dropped request counts as a violation.
     pub fn slo_attainment(&self) -> f64 {
@@ -274,6 +291,30 @@ mod tests {
         assert!((r.slo_attainment() - 0.5).abs() < 1e-12, "a drop is a violation");
         // grouped summaries still cover completed outcomes only
         assert_eq!(r.overall().n, 1);
+    }
+
+    #[test]
+    fn merge_and_sort_by_id() {
+        let mut a = Report::new(vec![]);
+        let mut o1 = outcome(0.1, 1.0, 5.0, 10);
+        o1.id = 7;
+        let mut o2 = outcome(0.2, 1.0, 5.0, 10);
+        o2.id = 3;
+        a.merge(Report::new(vec![o1]));
+        a.merge(Report::with_failed(
+            vec![o2],
+            vec![FailedOutcome {
+                id: 5,
+                modality: Modality::Text,
+                class: None,
+                arrival: 0.0,
+                dropped_at: 1.0,
+            }],
+        ));
+        assert_eq!(a.total(), 3);
+        a.sort_by_id();
+        assert_eq!(a.outcomes[0].id, 3);
+        assert_eq!(a.outcomes[1].id, 7);
     }
 
     #[test]

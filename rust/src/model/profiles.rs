@@ -79,6 +79,18 @@ pub struct ModelProfile {
     /// KV-cache capacity in tokens at 100% memory (weights already
     /// subtracted from the 40 GB device).
     pub kv_capacity_tokens: u64,
+
+    // --- encode/prefill overlap (RServe-style, arXiv 2509.24381) ---
+    /// When true the vision encoder runs on its own stream, concurrent
+    /// with the iteration's prefill/decode pass: the engine charges
+    /// `max(encode, prefill + decode) + encode_overlap_penalty_s` instead
+    /// of the serialized sum (and never more than the sum — a real engine
+    /// would fall back to serializing when overlap is unprofitable).
+    /// Default `false`: the serialized cost model stays bit-identical.
+    pub encode_overlap: bool,
+    /// Synchronization/interference cost charged when an encode actually
+    /// overlaps a prefill/decode pass (stream sync + SM contention).
+    pub encode_overlap_penalty_s: f64,
 }
 
 impl ModelProfile {
@@ -131,6 +143,14 @@ impl ModelProfile {
     pub fn isolated_e2e(&self, req: &Request) -> f64 {
         self.isolated_ttft(req) + req.output_tokens as f64 * self.decode_base_s
     }
+
+    /// Enable encode/prefill overlap with the given sync penalty (builder
+    /// for cluster configs; the zoo defaults stay serialized).
+    pub fn with_encode_overlap(mut self, penalty_s: f64) -> ModelProfile {
+        self.encode_overlap = true;
+        self.encode_overlap_penalty_s = penalty_s;
+        self
+    }
 }
 
 /// The evaluation model zoo (paper Table 1).
@@ -158,6 +178,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.010,
             encode_tok_per_s: 10_000.0,
             kv_capacity_tokens: 1_500_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "llava-7b",
@@ -181,6 +203,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.010,
             encode_tok_per_s: 8_000.0,
             kv_capacity_tokens: 400_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "gemma-4b",
@@ -207,6 +231,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.015,
             encode_tok_per_s: 4_000.0,
             kv_capacity_tokens: 700_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "gemma-12b",
@@ -230,6 +256,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.015,
             encode_tok_per_s: 4_000.0,
             kv_capacity_tokens: 250_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "qwen-3b",
@@ -254,6 +282,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.012,
             encode_tok_per_s: 12_000.0,
             kv_capacity_tokens: 800_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "qwen-7b",
@@ -277,6 +307,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.012,
             encode_tok_per_s: 12_000.0,
             kv_capacity_tokens: 400_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
         ModelProfile {
             name: "pixtral-12b",
@@ -302,6 +334,8 @@ pub fn profiles() -> Vec<ModelProfile> {
             encode_base_s: 0.008,
             encode_tok_per_s: 20_000.0,
             kv_capacity_tokens: 250_000,
+            encode_overlap: false,
+            encode_overlap_penalty_s: 0.0005,
         },
     ]
 }
@@ -333,6 +367,8 @@ pub fn tiny_mllm() -> ModelProfile {
         encode_base_s: 0.001,
         encode_tok_per_s: 50_000.0,
         kv_capacity_tokens: 64 * 640,
+        encode_overlap: false,
+        encode_overlap_penalty_s: 0.0005,
     }
 }
 
@@ -493,5 +529,18 @@ mod tests {
     fn tiny_mllm_lookup() {
         assert!(by_name("tiny-mllm").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn zoo_defaults_to_serialized_encode() {
+        // the overlap knob must be opt-in: the calibrated zoo stays
+        // bit-identical to the pre-knob cost model
+        for p in profiles() {
+            assert!(!p.encode_overlap, "{}", p.name);
+        }
+        assert!(!tiny_mllm().encode_overlap);
+        let p = by_name("llava-7b").unwrap().with_encode_overlap(0.001);
+        assert!(p.encode_overlap);
+        assert_eq!(p.encode_overlap_penalty_s, 0.001);
     }
 }

@@ -22,6 +22,7 @@
 //! into the scheduler clock on top of the wall mapping, so event
 //! timestamps run ahead of wall time.
 
+use crate::cluster::Cluster;
 use crate::config::ServeConfig;
 use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
 use crate::engine::Engine;
@@ -81,6 +82,17 @@ impl Server {
         Server { handle: ServerHandle { tx }, join }
     }
 
+    /// Spawn a multi-replica leader: `cfg.cluster.replicas` simulated
+    /// engine replicas behind the configured modality-aware router, all
+    /// driven by one leader thread through the cluster stepping API. The
+    /// replicas are built inside the leader thread (a [`Cluster`] holds
+    /// non-Send trait objects), so only the config crosses the boundary.
+    pub fn spawn_cluster(cfg: ServeConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let join = std::thread::spawn(move || cluster_leader_loop(cfg, rx));
+        Server { handle: ServerHandle { tx }, join }
+    }
+
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
@@ -99,11 +111,34 @@ struct Subscriber {
     output_tokens: u32,
 }
 
+/// Receive the next pending channel message. `block` bounds the wait to
+/// one 25 ms timeout slice (the leader re-checks scheduler state after).
+/// `Err(())` means every handle is gone — treat as shutdown.
+fn recv_msg(rx: &mpsc::Receiver<ServerMsg>, block: bool) -> Result<Option<ServerMsg>, ()> {
+    if block {
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(()),
+        }
+    } else {
+        match rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => Err(()),
+        }
+    }
+}
+
 /// The leader: interleave ingress with scheduler steps. Each loop turn
 /// drains every pending channel message (injecting new requests), maps
-/// wall-clock onto the scheduler clock, runs one iteration, and streams
-/// the iteration's events to subscribers. When there is nothing runnable
-/// it blocks on the channel instead of spinning.
+/// wall-clock onto the scheduler clock, runs one iteration, streams the
+/// iteration's events to subscribers, and retires terminal scheduler
+/// state ([`Scheduler::take_finished`]) so scheduler-side memory stays
+/// flat over an unbounded request stream (the accumulated outcome
+/// history returned at shutdown still grows, a few dozen bytes per
+/// request). When there is nothing runnable it blocks on the channel
+/// instead of spinning.
 fn leader_loop(
     cfg: ServeConfig,
     engine: Box<dyn Engine + Send>,
@@ -115,6 +150,7 @@ fn leader_loop(
 
     let t0 = Instant::now();
     let mut subscribers: HashMap<u64, Subscriber> = HashMap::new();
+    let mut collected = Report::default();
     let mut shutdown = false;
     // Block on the channel (instead of polling) on the next turn; set
     // whenever the scheduler reports nothing can run until new input.
@@ -123,28 +159,10 @@ fn leader_loop(
     loop {
         // 1. ingest: drain everything available; block once when idle
         loop {
-            let msg = if block_for_msg && !shutdown {
-                block_for_msg = false;
-                match rx.recv_timeout(Duration::from_millis(25)) {
-                    Ok(m) => Some(m),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        shutdown = true;
-                        None
-                    }
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(mpsc::TryRecvError::Empty) => None,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        shutdown = true;
-                        None
-                    }
-                }
-            };
-            match msg {
-                Some(ServerMsg::Submit(mut req, tx)) => {
+            let block = block_for_msg && !shutdown;
+            block_for_msg = false;
+            match recv_msg(&rx, block) {
+                Ok(Some(ServerMsg::Submit(mut req, tx))) => {
                     // stamp the true submit time so queueing before the
                     // first iteration is accounted for
                     req.arrival = t0.elapsed().as_secs_f64();
@@ -154,8 +172,12 @@ fn leader_loop(
                     );
                     sched.inject(req);
                 }
-                Some(ServerMsg::Shutdown) => shutdown = true,
-                None => break,
+                Ok(Some(ServerMsg::Shutdown)) => shutdown = true,
+                Ok(None) => break,
+                Err(()) => {
+                    shutdown = true;
+                    break;
+                }
             }
         }
 
@@ -165,10 +187,12 @@ fn leader_loop(
         // 3. one scheduling iteration
         let outcome = sched.step();
 
-        // 4. stream this iteration's events as they happen
+        // 4. stream this iteration's events as they happen, then retire
+        //    the iteration's terminal state into the running report
         for ev in sched.take_events() {
             deliver(&mut subscribers, ev);
         }
+        collected.merge(sched.take_finished());
 
         match outcome {
             StepOutcome::Executed { .. } => {}
@@ -201,7 +225,77 @@ fn leader_loop(
     for ev in sched.take_events() {
         deliver(&mut subscribers, ev);
     }
-    sched.report()
+    collected.merge(sched.take_finished());
+    collected.sort_by_id();
+    collected
+}
+
+/// The multi-replica leader: identical ingress/step/stream topology, but
+/// requests are dispatched through the cluster's router and every
+/// replica advances per turn. The cluster retires terminal replica state
+/// internally, so replica-side memory stays flat; only the merged
+/// outcome history (returned from [`Server::finish`]) grows with
+/// requests served.
+fn cluster_leader_loop(cfg: ServeConfig, rx: mpsc::Receiver<ServerMsg>) -> Report {
+    let mut cluster = Cluster::new(&cfg);
+
+    let t0 = Instant::now();
+    let mut subscribers: HashMap<u64, Subscriber> = HashMap::new();
+    let mut shutdown = false;
+    let mut block_for_msg = false;
+
+    loop {
+        loop {
+            let block = block_for_msg && !shutdown;
+            block_for_msg = false;
+            match recv_msg(&rx, block) {
+                Ok(Some(ServerMsg::Submit(mut req, tx))) => {
+                    req.arrival = t0.elapsed().as_secs_f64();
+                    subscribers.insert(
+                        req.id,
+                        Subscriber { tx, arrival: req.arrival, output_tokens: req.output_tokens },
+                    );
+                    cluster.inject(req);
+                }
+                Ok(Some(ServerMsg::Shutdown)) => shutdown = true,
+                Ok(None) => break,
+                Err(()) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        cluster.advance_to(t0.elapsed().as_secs_f64());
+        let outcome = cluster.step();
+        for ev in cluster.take_events() {
+            deliver(&mut subscribers, ev);
+        }
+
+        match outcome {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => {
+                if shutdown {
+                    cluster.drop_blocked();
+                } else {
+                    block_for_msg = true;
+                }
+            }
+            StepOutcome::Drained => {
+                if shutdown {
+                    break;
+                }
+                block_for_msg = true;
+            }
+        }
+    }
+
+    for ev in cluster.take_events() {
+        deliver(&mut subscribers, ev);
+    }
+    cluster.report().report
 }
 
 /// Route one scheduler event to its subscriber. Terminal events
@@ -268,6 +362,28 @@ mod tests {
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 4);
+        for rx in rxs {
+            let events: Vec<_> = rx.iter().collect();
+            assert_eq!(events.len(), 2);
+            assert!(matches!(events[0], ResponseEvent::FirstToken { .. }));
+            assert!(matches!(events[1], ResponseEvent::Finished { .. }));
+        }
+    }
+
+    #[test]
+    fn cluster_server_roundtrip() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.cluster.replicas = 2;
+        cfg.cluster.router = "round-robin".into();
+        let server = Server::spawn_cluster(cfg);
+        let h = server.handle();
+        let mut rxs = Vec::new();
+        for id in 0..6u64 {
+            rxs.push(h.submit(text_req(id, 64, 4)));
+        }
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 6, "both replicas served their share");
         for rx in rxs {
             let events: Vec<_> = rx.iter().collect();
             assert_eq!(events.len(), 2);

@@ -1,0 +1,247 @@
+//! Cluster-layer contracts: a 1-replica round-robin cluster is
+//! bit-identical to a bare `Scheduler`, cluster runs are deterministic
+//! for a fixed seed under every router policy, rocks/pebbles/sand
+//! partition routing beats round-robin on sand TTFT p99 at ≥2 replicas,
+//! and encode-overlap strictly lowers multimodal TTFT on the same seed.
+
+use tcm_serve::cluster::Cluster;
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::coordinator::{RequestEvent, StepOutcome};
+use tcm_serve::experiments::{
+    make_trace, run_cluster_with_trace, run_sim_with_trace,
+};
+use tcm_serve::metrics::Report;
+use tcm_serve::request::Modality;
+
+fn cluster_cfg(replicas: usize, router: &str) -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = "fcfs".into();
+    c.mix = "MH".into();
+    c.rate = 1.5 * replicas as f64;
+    c.num_requests = 150 * replicas;
+    c.seed = 23;
+    c.cluster.replicas = replicas;
+    c.cluster.router = router.into();
+    c
+}
+
+fn assert_reports_bit_identical(label: &str, a: &Report, b: &Report) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome counts");
+    assert_eq!(a.failed.len(), b.failed.len(), "{label}: failure counts");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: outcome order");
+        assert_eq!(
+            x.first_token.to_bits(),
+            y.first_token.to_bits(),
+            "{label}: req {} first_token",
+            x.id
+        );
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{label}: req {} finish", x.id);
+        assert_eq!(x.preemptions, y.preemptions, "{label}: req {} preemptions", x.id);
+    }
+    for (x, y) in a.failed.iter().zip(&b.failed) {
+        assert_eq!(x.id, y.id, "{label}: failed order");
+        assert_eq!(
+            x.dropped_at.to_bits(),
+            y.dropped_at.to_bits(),
+            "{label}: req {} dropped_at",
+            x.id
+        );
+    }
+}
+
+/// The acceptance regression: one replica behind a round-robin router
+/// reproduces the bare single-`Scheduler` results bit for bit — the
+/// cluster layer adds no timing or ordering artifacts of its own.
+#[test]
+fn single_replica_round_robin_is_bit_identical_to_bare_scheduler() {
+    // overlap=true included: `run_sim` and the cluster build engines from
+    // the same `ServeConfig::engine_profile`, so the knob must not break
+    // the equivalence either
+    for (policy, overlap) in [("fcfs", false), ("tcm", false), ("fcfs", true)] {
+        let mut cfg = cluster_cfg(1, "round-robin");
+        cfg.policy = policy.into();
+        cfg.num_requests = 120;
+        cfg.rate = 2.0;
+        cfg.cluster.encode_overlap = overlap;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let bare = run_sim_with_trace(&cfg, trace.clone());
+        let mut bare_report = bare.report.clone();
+        bare_report.sort_by_id();
+
+        let cr = run_cluster_with_trace(&cfg, trace);
+        assert_reports_bit_identical(policy, &cr.report, &bare_report);
+        assert_eq!(
+            cr.makespan.to_bits(),
+            bare.makespan.to_bits(),
+            "{policy}: makespan diverged"
+        );
+        assert_eq!(cr.per_replica.len(), 1);
+        assert_eq!(cr.per_replica[0].routed, 120);
+    }
+}
+
+/// Bit-identical reruns for a fixed seed under every router policy: the
+/// router interleaving introduces no nondeterminism.
+#[test]
+fn cluster_runs_are_deterministic_per_router() {
+    for router in ROUTERS {
+        let cfg = cluster_cfg(3, router);
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+        let a = run_cluster_with_trace(&cfg, trace.clone());
+        let b = run_cluster_with_trace(&cfg, trace);
+        assert_reports_bit_identical(router, &a.report, &b.report);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{router}: makespan");
+        for (x, y) in a.per_replica.iter().zip(&b.per_replica) {
+            assert_eq!(x.routed, y.routed, "{router}: routing diverged");
+            assert_eq!(x.iterations, y.iterations, "{router}: iteration counts diverged");
+        }
+    }
+}
+
+/// Conservation: every request routed somewhere, every request accounted
+/// for in the merged report, under every router and scale.
+#[test]
+fn every_router_conserves_requests() {
+    for replicas in [2usize, 4] {
+        for router in ROUTERS {
+            let cfg = cluster_cfg(replicas, router);
+            let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+            let trace = make_trace(&cfg, &profile);
+            let n = trace.len();
+            let cr = run_cluster_with_trace(&cfg, trace);
+            assert_eq!(cr.report.total(), n, "{router}/r{replicas}: lost requests");
+            let routed: usize = cr.per_replica.iter().map(|r| r.routed).sum();
+            assert_eq!(routed, n, "{router}/r{replicas}: routing not conservative");
+            if router == "round-robin" {
+                for r in &cr.per_replica {
+                    assert!(r.routed > 0, "round-robin must use every replica");
+                }
+            }
+        }
+    }
+}
+
+/// The tentpole acceptance claim: modality-partition routing beats
+/// round-robin on sand (text) TTFT p99 for a mixed workload at ≥2
+/// replicas — a video routed onto the sand replica recreates rock
+/// head-of-line blocking one level above the scheduler.
+#[test]
+fn partition_beats_round_robin_on_sand_ttft_p99() {
+    for replicas in [2usize, 4] {
+        let cfg_rr = cluster_cfg(replicas, "round-robin");
+        let cfg_part = cluster_cfg(replicas, "modality-partition");
+        let profile = tcm_serve::model::by_name(&cfg_rr.model).unwrap();
+        let trace = make_trace(&cfg_rr, &profile);
+
+        let rr = run_cluster_with_trace(&cfg_rr, trace.clone());
+        let part = run_cluster_with_trace(&cfg_part, trace);
+        let rr_p99 = rr.report.by_modality(Modality::Text).p99_ttft;
+        let part_p99 = part.report.by_modality(Modality::Text).p99_ttft;
+        assert!(
+            part_p99 < rr_p99,
+            "r={replicas}: partition sand p99 {part_p99:.3}s !< round-robin {rr_p99:.3}s"
+        );
+    }
+}
+
+/// Encode/prefill overlap strictly lowers multimodal TTFT on the same
+/// seed and never slows the fleet (per-iteration cost is clamped to the
+/// serialized sum).
+#[test]
+fn encode_overlap_strictly_lowers_multimodal_ttft() {
+    let mean_mm_ttft = |r: &Report| {
+        let mm: Vec<f64> = r
+            .outcomes
+            .iter()
+            .filter(|o| o.modality != Modality::Text)
+            .map(|o| o.ttft())
+            .collect();
+        assert!(!mm.is_empty());
+        mm.iter().sum::<f64>() / mm.len() as f64
+    };
+    for replicas in [1usize, 2] {
+        let base = cluster_cfg(replicas, "round-robin");
+        let profile = tcm_serve::model::by_name(&base.model).unwrap();
+        let trace = make_trace(&base, &profile);
+
+        let serial = run_cluster_with_trace(&base, trace.clone());
+        let mut overlapped_cfg = base.clone();
+        overlapped_cfg.cluster.encode_overlap = true;
+        let overlapped = run_cluster_with_trace(&overlapped_cfg, trace);
+
+        let s = mean_mm_ttft(&serial.report);
+        let o = mean_mm_ttft(&overlapped.report);
+        assert!(
+            o < s,
+            "r={replicas}: overlap multimodal mean ttft {o:.4}s !< serialized {s:.4}s"
+        );
+        // per-iteration cost is clamped to the serialized sum, so the
+        // fleet must not get slower overall (small tolerance: faster
+        // iterations can re-compose plans near the tail)
+        assert!(
+            overlapped.makespan <= serial.makespan * 1.01 + 1e-9,
+            "r={replicas}: overlap makespan {:.3}s vs serialized {:.3}s",
+            overlapped.makespan,
+            serial.makespan
+        );
+    }
+}
+
+/// Drive the cluster through the stepping API directly (inject
+/// everything, step to drained) — the server-leader path — checking
+/// per-replica invariants at every step and event accounting at the end.
+/// For the round-robin router this is bit-identical to `Cluster::run`
+/// (routing ignores replica state, and arrivals are due at their
+/// timestamps regardless of when they were injected).
+#[test]
+fn stepped_cluster_equals_batch_run_for_round_robin() {
+    let cfg = cluster_cfg(2, "round-robin");
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+
+    let batch = run_cluster_with_trace(&cfg, trace.clone());
+
+    let mut cluster = Cluster::new(&cfg);
+    for req in trace {
+        cluster.inject(req);
+    }
+    let mut finished_events = 0usize;
+    let mut dropped_events = 0usize;
+    let mut steps = 0u64;
+    loop {
+        match cluster.step() {
+            StepOutcome::Executed { dt } => assert!(dt >= 0.0),
+            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => cluster.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        for ev in cluster.take_events() {
+            match ev {
+                RequestEvent::Finished { .. } => finished_events += 1,
+                RequestEvent::Dropped { .. } => dropped_events += 1,
+                _ => {}
+            }
+        }
+        cluster.check_invariants().unwrap_or_else(|e| panic!("after step {steps}: {e}"));
+        steps += 1;
+        assert!(steps < 5_000_000, "stepping did not drain");
+    }
+    for ev in cluster.take_events() {
+        match ev {
+            RequestEvent::Finished { .. } => finished_events += 1,
+            RequestEvent::Dropped { .. } => dropped_events += 1,
+            _ => {}
+        }
+    }
+    let stepped = cluster.report();
+    assert_eq!(stepped.report.total(), n);
+    assert_eq!(finished_events, stepped.report.outcomes.len());
+    assert_eq!(dropped_events, stepped.report.failed.len());
+    assert_reports_bit_identical("stepped-vs-batch", &stepped.report, &batch.report);
+}

@@ -1,0 +1,140 @@
+//! Encoder-cache preemption invariant (regression tests for the
+//! encode-overlap refactor): the `encoded` flag is preserved while a
+//! multimodal request stays resident — the engine must see exactly ONE
+//! `EncodeItem` for a request that is never preempted — and is cleared
+//! by preemption-by-recompute, so every preemption is followed by
+//! exactly one re-encode on re-admission. Previously asserted only in
+//! comments (`scheduler.rs`, `preempt`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::engine::{Engine, StepPlan};
+use tcm_serve::experiments::make_trace;
+use tcm_serve::metrics::Report;
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::Modality;
+
+/// Wraps the sim engine and counts executed `EncodeItem`s per request —
+/// the ground truth for what the vision encoder actually ran.
+struct RecordingEngine {
+    inner: SimEngine,
+    encodes: Rc<RefCell<HashMap<u64, u32>>>,
+}
+
+impl Engine for RecordingEngine {
+    fn execute(&mut self, plan: &StepPlan) -> f64 {
+        let mut counts = self.encodes.borrow_mut();
+        for e in &plan.encodes {
+            *counts.entry(e.req_id).or_insert(0) += 1;
+        }
+        drop(counts);
+        self.inner.execute(plan)
+    }
+
+    fn release(&mut self, req_id: u64) {
+        self.inner.release(req_id);
+    }
+
+    fn name(&self) -> &'static str {
+        "recording-sim"
+    }
+}
+
+/// Run one memory-pressured experiment, returning (report, per-request
+/// encode counts, per-request preemption-event counts).
+fn run_recorded(policy: &str, seed: u64) -> (Report, HashMap<u64, u32>, HashMap<u64, u32>) {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = policy.into();
+    cfg.mix = "MH".into();
+    cfg.num_requests = 60;
+    cfg.memory_frac = 0.02;
+    cfg.seed = seed;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let policy = build_policy(&cfg, &profile);
+
+    let encodes = Rc::new(RefCell::new(HashMap::new()));
+    let engine = RecordingEngine { inner: SimEngine::new(&profile), encodes: Rc::clone(&encodes) };
+    let mut sched = Scheduler::new(cfg, policy, Box::new(engine));
+    for req in trace {
+        sched.inject(req);
+    }
+    let mut preempts: HashMap<u64, u32> = HashMap::new();
+    loop {
+        match sched.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        for ev in sched.take_events() {
+            if let RequestEvent::Preempted { id, .. } = ev {
+                *preempts.entry(id).or_insert(0) += 1;
+            }
+        }
+    }
+    let report = sched.report();
+    let encodes = encodes.borrow().clone();
+    (report, encodes, preempts)
+}
+
+/// Every *completed* multimodal request must have been encoded exactly
+/// `1 + preemptions` times: once at first admission, once more after
+/// each preemption-by-recompute (which drops the encoder cache), and
+/// never in between (the cache is preserved while resident). The
+/// scenario is validated to actually preempt multimodal requests, so
+/// the "cleared on preemption" half cannot pass vacuously.
+#[test]
+fn encoded_cleared_on_preemption_and_preserved_while_resident() {
+    let mut saw_preempted_multimodal = false;
+    for policy in ["tcm", "fcfs"] {
+        for seed in [7u64, 11, 13, 23, 42] {
+            let (report, encodes, preempts) = run_recorded(policy, seed);
+            for o in &report.outcomes {
+                if o.modality == Modality::Text {
+                    assert!(
+                        !encodes.contains_key(&o.id),
+                        "{policy}/{seed}: text request {} reached the encoder",
+                        o.id
+                    );
+                    continue;
+                }
+                let enc = encodes.get(&o.id).copied().unwrap_or(0);
+                let pre = preempts.get(&o.id).copied().unwrap_or(0);
+                assert_eq!(
+                    enc,
+                    1 + pre,
+                    "{policy}/{seed}: multimodal request {} encoded {enc}x with {pre} \
+                     preemptions (expected 1 + preemptions)",
+                    o.id
+                );
+                if pre > 0 {
+                    saw_preempted_multimodal = true;
+                }
+            }
+            // dropped requests encode at most once per admission cycle too
+            for f in &report.failed {
+                if f.modality != Modality::Text {
+                    let enc = encodes.get(&f.id).copied().unwrap_or(0);
+                    let pre = preempts.get(&f.id).copied().unwrap_or(0);
+                    assert!(
+                        enc <= 1 + pre,
+                        "{policy}/{seed}: dropped request {} encoded {enc}x with {pre} \
+                         preemptions",
+                        f.id
+                    );
+                }
+            }
+        }
+    }
+    assert!(
+        saw_preempted_multimodal,
+        "no multimodal request was ever preempted — the invariant was never exercised; \
+         tighten memory_frac or change seeds"
+    );
+}

@@ -1,0 +1,106 @@
+//! Retire/compact API contract (`Scheduler::take_finished`): terminal
+//! request state can be drained incrementally by a long-lived server, the
+//! union of the partial reports equals the batch report bit for bit, and
+//! invariants (including drop accounting) hold across retirement.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::{make_trace, run_sim_with_trace};
+use tcm_serve::metrics::Report;
+use tcm_serve::policies::build_policy;
+
+fn new_scheduler(cfg: &ServeConfig) -> Scheduler {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(cfg, &profile);
+    Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&profile)))
+}
+
+#[test]
+fn incremental_retirement_matches_batch_report() {
+    for (policy, memory_frac) in [("fcfs", 1.0), ("tcm", 0.02)] {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 120;
+        cfg.rate = 2.0;
+        cfg.seed = 7;
+        cfg.memory_frac = memory_frac;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let mut batch = run_sim_with_trace(&cfg, trace.clone()).report;
+        batch.sort_by_id();
+
+        let mut sched = new_scheduler(&cfg);
+        for req in trace {
+            sched.inject(req);
+        }
+        let mut collected = Report::default();
+        let mut steps = 0u64;
+        loop {
+            match sched.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+            sched.take_events();
+            // retire every few iterations, like the server leader does
+            if steps % 5 == 0 {
+                collected.merge(sched.take_finished());
+            }
+            sched
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("{policy}: after step {steps}: {e}"));
+            steps += 1;
+            assert!(steps < 5_000_000, "{policy}: did not drain");
+        }
+        collected.merge(sched.take_finished());
+
+        // everything terminal was handed out: the residual report is empty
+        assert_eq!(sched.report().total(), 0, "{policy}: retired state resurfaced");
+        let (fin, fail) = sched.retired();
+        assert_eq!(fin + fail, collected.total(), "{policy}: retirement counters");
+
+        collected.sort_by_id();
+        assert_eq!(collected.total(), 120, "{policy}: lost requests across retirement");
+        assert_eq!(collected.outcomes.len(), batch.outcomes.len(), "{policy}");
+        assert_eq!(collected.failed.len(), batch.failed.len(), "{policy}");
+        for (x, y) in collected.outcomes.iter().zip(&batch.outcomes) {
+            assert_eq!(x.id, y.id, "{policy}");
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits(), "{policy}: req {}", x.id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{policy}: req {}", x.id);
+            assert_eq!(x.preemptions, y.preemptions, "{policy}: req {}", x.id);
+        }
+        for (x, y) in collected.failed.iter().zip(&batch.failed) {
+            assert_eq!(x.id, y.id, "{policy}");
+            assert_eq!(x.dropped_at.to_bits(), y.dropped_at.to_bits(), "{policy}: req {}", x.id);
+        }
+    }
+}
+
+#[test]
+fn take_finished_is_move_semantics_not_copy() {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "fcfs".into();
+    cfg.num_requests = 10;
+    cfg.rate = 4.0;
+    cfg.seed = 3;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let mut sched = new_scheduler(&cfg);
+    let n = trace.len();
+    for req in trace {
+        sched.inject(req);
+    }
+    let full = sched.drain();
+    assert_eq!(full.total(), n, "drain() still reports everything first");
+
+    let first = sched.take_finished();
+    assert_eq!(first.total(), n, "first take hands out every terminal request");
+    let second = sched.take_finished();
+    assert_eq!(second.total(), 0, "second take must be empty — state was reclaimed");
+    assert_eq!(sched.report().total(), 0);
+    sched.check_invariants().unwrap();
+}

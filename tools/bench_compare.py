@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for CI.
+
+Merges the JSONL sink emitted by the Rust bench harness (one object per
+line: name, median_ns, throughput, hot) into a single machine-readable
+results file, then compares hot-path entries against a checked-in
+baseline and fails when any median regresses beyond the threshold.
+
+Usage:
+  python3 tools/bench_compare.py \
+      --results BENCH_PR3.jsonl --baseline BENCH_baseline.json \
+      --out BENCH_PR3.json --max-regress 0.25
+
+Baseline entries with "median_ns": null are placeholders ("no baseline
+recorded yet") and are skipped; refresh the baseline by copying a CI
+run's BENCH_PR3.json artifact over BENCH_baseline.json (see
+rust/README.md).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    benches = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                benches.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                sys.exit(f"{path}:{lineno}: malformed bench record: {e}")
+    if not benches:
+        sys.exit(f"{path}: no bench records — did the bench run emit BENCH_JSON?")
+    return benches
+
+
+def load_baseline(path):
+    with open(path) as f:
+        doc = json.load(f)
+    entries = doc["benches"] if isinstance(doc, dict) else doc
+    return {b["name"]: b for b in entries}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", required=True, help="JSONL sink from the bench run")
+    ap.add_argument("--baseline", required=True, help="checked-in BENCH_baseline.json")
+    ap.add_argument("--out", required=True, help="merged JSON results to write/upload")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.25,
+        help="fail when a hot-path median exceeds baseline by this fraction",
+    )
+    args = ap.parse_args()
+
+    benches = load_results(args.results)
+    with open(args.out, "w") as f:
+        json.dump({"benches": benches}, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(benches)} bench records to {args.out}")
+
+    baseline = load_baseline(args.baseline)
+    failures = []
+    # a hot baseline entry with no matching result means the gate for
+    # that bench was silently disabled (renamed bench, emission bug) —
+    # that must fail, not pass quietly
+    result_names = {b["name"] for b in benches}
+    for name, b in sorted(baseline.items()):
+        if b.get("hot") and b.get("median_ns") is not None and name not in result_names:
+            failures.append((name, b["median_ns"], float("nan"), float("inf")))
+            print(f"  [hot ] {name:<40} MISSING from results (baseline has it)")
+    for b in benches:
+        name, median = b["name"], b["median_ns"]
+        tag = "hot " if b.get("hot") else "info"
+        base = baseline.get(name, {}).get("median_ns")
+        if base is None:
+            print(f"  [{tag}] {name:<40} {median:>14.1f} ns  (no baseline, skipped)")
+            continue
+        ratio = median / base if base > 0 else float("inf")
+        verdict = f"{(ratio - 1):+.1%} vs baseline {base:.1f} ns"
+        print(f"  [{tag}] {name:<40} {median:>14.1f} ns  {verdict}")
+        if b.get("hot") and ratio > 1.0 + args.max_regress:
+            failures.append((name, base, median, ratio))
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} hot-path gate violation(s):")
+        for name, base, median, ratio in failures:
+            if median != median:  # NaN sentinel: bench missing from results
+                print(f"  {name}: baseline {base:.1f} ns but no result was emitted")
+            else:
+                print(f"  {name}: {base:.1f} ns -> {median:.1f} ns ({ratio - 1:+.1%})")
+        sys.exit(1)
+    print("\nbench gate passed")
+
+
+if __name__ == "__main__":
+    main()
