@@ -1,0 +1,67 @@
+//! Encoder-pool serving: the same video-heavy trace served by four
+//! decode replicas with per-replica encoders vs the disaggregated
+//! encoder pool (sand bypasses, pebbles get priority lanes, rocks are
+//! capped with aging; decode replicas are late-bound at encode
+//! completion, with embedding migration charged across hosts).
+//!
+//! Run: `cargo run --release --example encoder_pool`
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::run_cluster;
+use tcm_serve::report;
+use tcm_serve::request::Modality;
+
+fn main() {
+    let mut cfg = ServeConfig::default(); // llava-7b, SLO 5x
+    cfg.policy = "fcfs".into();
+    cfg.mix = "VH".into(); // 40% text, 20% image, 40% video
+    cfg.rate = 3.0;
+    cfg.num_requests = 400;
+    cfg.seed = 61;
+    cfg.cluster.replicas = 4;
+    cfg.cluster.router = "round-robin".into();
+
+    println!(
+        "encoder pool A/B: {} replicas, mix {}, {:.1} req/s, model {}",
+        cfg.cluster.replicas, cfg.mix, cfg.rate, cfg.model
+    );
+
+    for pool in [false, true] {
+        let mut c = cfg.clone();
+        c.pool.enabled = pool;
+        c.pool.slots = 6;
+        let cr = run_cluster(&c);
+        report::header(if pool {
+            "disaggregated encoder pool (6 slots)"
+        } else {
+            "per-replica encoders (PR 3 baseline)"
+        });
+        report::modality_rows(if pool { "pool" } else { "local" }, &cr.report);
+        if let Some(p) = &cr.pool {
+            println!(
+                "pool: encodes={} util={:.1}% rock_wait_max={:.2}s aged_promotions={} \
+                 migrations={} ({:.1} MB)",
+                p.stats.encodes,
+                cr.pool_utilization() * 100.0,
+                p.stats.rock_wait_max_s,
+                p.stats.aged_promotions,
+                p.stats.migrations,
+                p.stats.migrated_bytes as f64 / 1e6
+            );
+        }
+        let sand = cr.report.by_modality(Modality::Text);
+        println!(
+            "sand mean ttft={:.3}s  makespan={:.1}s  slo_attainment={:.1}%",
+            sand.avg_ttft,
+            cr.makespan,
+            cr.report.slo_attainment() * 100.0
+        );
+    }
+
+    println!("\nExpected shape: with per-replica encoders, ~40% videos put 2-3 s of");
+    println!("encode work inside every replica's iteration loop — sand inherits it");
+    println!("through the shared engine. The pool strips encode out of the replicas:");
+    println!("sand mean TTFT collapses, rocks absorb pool queueing instead (bounded");
+    println!("by the aging deadline), and late binding + migration keep the handoff");
+    println!("cost explicit and conserved.");
+}

@@ -1,0 +1,124 @@
+//! fig_encoder_pool — disaggregated encoder pool vs per-replica encoders
+//! at 4 decode replicas under the video-heavy (VH) mix.
+//!
+//! Expected shape: with per-replica encoders, video encode work alone
+//! saturates every replica (rate 0.75 req/s per replica × ~40% videos ×
+//! ~2–3 s of encode each), so sand inherits rock encode time through the
+//! shared engine; the pool strips that work out of the replicas and sand
+//! mean TTFT collapses. Rock TTFT absorbs pool queueing instead (the
+//! design intent: rocks pay, sand flows). Migration cost rises with the
+//! slot/replica mismatch rate; the aging deadline bounds rock encode
+//! starts even when pebbles flood the pool.
+//!
+//! With `BENCH_JSON=path` set, each cell lands in the JSONL sink;
+//! `encoder_pool/sand-mean-ttft/pool-on-s6` is the hot-gated headline
+//! (virtual time → machine-independent and bit-deterministic, so the
+//! >25% CI gate cannot flake).
+
+use tcm_serve::bench_harness::record_named;
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::run_cluster;
+use tcm_serve::request::Modality;
+
+fn cfg(pool_slots: Option<usize>, router: &str) -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = "fcfs".into();
+    c.mix = "VH".into();
+    c.rate = 3.0;
+    c.num_requests = 400;
+    c.seed = 61;
+    c.cluster.replicas = 4;
+    c.cluster.router = router.into();
+    if let Some(slots) = pool_slots {
+        c.pool.enabled = true;
+        c.pool.slots = slots;
+    }
+    c
+}
+
+fn main() {
+    println!(
+        "=== fig_encoder_pool — 4 replicas, VH mix, fcfs in-replica, 3 req/s, llava-7b ==="
+    );
+    println!(
+        "{:<26} {:>10} {:>10} {:>10} {:>8} {:>8} {:>9} {:>10}",
+        "config", "sand avg", "sand p99", "rock p99", "slo%", "pool%", "migrations", "makespan"
+    );
+    let mut sand_means: Vec<(String, f64)> = Vec::new();
+    for router in ["round-robin", "modality-partition"] {
+        for slots in [None, Some(2), Some(6)] {
+            let c = cfg(slots, router);
+            let cr = run_cluster(&c);
+            let sand = cr.report.by_modality(Modality::Text);
+            let rock = cr.report.by_modality(Modality::Video);
+            let name = match slots {
+                None => format!("{router}/pool-off"),
+                Some(s) => format!("{router}/pool-on-s{s}"),
+            };
+            let migrations = cr.pool.as_ref().map_or(0, |p| p.stats.migrations);
+            println!(
+                "{name:<26} {:>9.3}s {:>9.3}s {:>9.3}s {:>7.1}% {:>7.1}% {migrations:>9} {:>9.1}s",
+                sand.avg_ttft,
+                sand.p99_ttft,
+                rock.p99_ttft,
+                cr.report.slo_attainment() * 100.0,
+                cr.pool_utilization() * 100.0,
+                cr.makespan
+            );
+            if router == "round-robin" {
+                // the headline A/B: pool-on-s6 is hot-gated in
+                // BENCH_baseline.json (virtual seconds → deterministic)
+                let tag = match slots {
+                    None => "pool-off".to_string(),
+                    Some(s) => format!("pool-on-s{s}"),
+                };
+                record_named(
+                    &format!("encoder_pool/sand-mean-ttft/{tag}"),
+                    sand.avg_ttft * 1e9,
+                    None,
+                    slots == Some(6),
+                );
+            }
+            sand_means.push((name, sand.avg_ttft));
+        }
+    }
+
+    println!("\n--- pool vs per-replica encoders, sand mean TTFT (lower is better) ---");
+    for router in ["round-robin", "modality-partition"] {
+        let get = |suffix: &str| {
+            sand_means
+                .iter()
+                .find(|(n, _)| *n == format!("{router}/{suffix}"))
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        let off = get("pool-off");
+        let on = get("pool-on-s6");
+        println!(
+            "{router}: pool-off={off:.3}s pool-on-s6={on:.3}s ({})",
+            if on < off { "pool wins" } else { "NO — regression" }
+        );
+    }
+
+    println!("\n=== migration-cost sweep (round-robin, 6 slots) ===");
+    for cost in [0.0, 0.002, 0.02] {
+        let mut c = cfg(Some(6), "round-robin");
+        c.pool.migration_cost_s_per_ktok = cost;
+        let cr = run_cluster(&c);
+        let p = cr.pool.as_ref().unwrap();
+        let mm: Vec<f64> = cr
+            .report
+            .outcomes
+            .iter()
+            .filter(|o| o.modality != Modality::Text)
+            .map(|o| o.ttft())
+            .collect();
+        let mm_mean = mm.iter().sum::<f64>() / mm.len().max(1) as f64;
+        println!(
+            "cost={cost:<6} migrations={} migrated={:.1} MB  multimodal mean ttft={:.3}s",
+            p.stats.migrations,
+            p.stats.migrated_bytes as f64 / 1e6,
+            mm_mean
+        );
+    }
+}

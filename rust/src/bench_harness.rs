@@ -51,8 +51,8 @@ pub fn record_named(name: &str, median_ns: f64, throughput: Option<f64>, hot: bo
 }
 
 /// One machine-readable bench record (`tools/bench_compare.py` merges
-/// the JSONL sink into `BENCH_PR3.json` and gates hot-path regressions
-/// against `BENCH_baseline.json`).
+/// the JSONL sink into the uploaded results artifact and gates hot-path
+/// regressions against `BENCH_baseline.json`).
 pub struct JsonRecord<'a> {
     pub name: &'a str,
     /// Gate metric. Harness benches report the median iteration time;

@@ -25,9 +25,31 @@
 //! encode runs concurrently with the iteration's prefill/decode pass
 //! (RServe, arXiv 2509.24381) — `max(encode, prefill+decode) + penalty`
 //! instead of the serialized sum.
+//!
+//! # Encoder-pool mode (`[pool] enabled = true` / `--encoder-pool`)
+//!
+//! With the disaggregated [`pool::EncoderPool`] enabled, the cluster
+//! becomes a two-stage system. Injection no longer routes immediately:
+//! requests enter a cluster-level ingress timeline; at their arrival
+//! time, sand (text) is routed to a decode replica as before while
+//! multimodal requests are admitted to the shared encoder pool (pebble
+//! priority lanes, rock cap + aging — see `pool.rs`). When an encode
+//! completes, the decode replica is *late-bound* through
+//! [`Router::route_handoff`] using the outstanding-work ledger at that
+//! moment, migration cost is charged if the slot host differs from the
+//! bound replica, and the request is handed to the replica pre-encoded
+//! ([`Scheduler::inject_preencoded`]) — it skips CPU preprocessing and
+//! the local admission encode, and its prefill chunks carry no encoder
+//! work. Preemption-by-recompute re-encodes locally, preserving the
+//! `encodes == 1 + preemptions` invariant across the handoff boundary.
+//! With the pool disabled, none of these paths run: the cluster is
+//! bit-identical to its pre-pool (PR 3) behavior, which
+//! `tests/encoder_pool.rs` pins for every router.
 
+pub mod pool;
 pub mod router;
 
+pub use pool::{EncoderPool, PoolSnapshot, PoolStats};
 pub use router::{build_router, partition_groups, ReplicaView, Router};
 
 use crate::config::ServeConfig;
@@ -36,6 +58,7 @@ use crate::engine::sim_engine::SimEngine;
 use crate::metrics::Report;
 use crate::policies::build_policy;
 use crate::request::Request;
+use crate::sim::EventQueue;
 
 /// Per-replica counters for the merged report (utilization/imbalance).
 #[derive(Debug, Clone)]
@@ -62,6 +85,9 @@ pub struct ClusterReport {
     pub per_replica: Vec<ReplicaStats>,
     /// Largest replica clock — the fleet-wide makespan.
     pub makespan: f64,
+    /// Encoder-pool counters (slots, waits, aging promotions, migration
+    /// count/tokens/bytes); `None` when the pool is disabled.
+    pub pool: Option<PoolSnapshot>,
 }
 
 impl ClusterReport {
@@ -93,6 +119,17 @@ impl ClusterReport {
             max / mean
         }
     }
+
+    /// Fraction of `slots × makespan` the encoder pool spent encoding
+    /// (0.0 when the pool is disabled).
+    pub fn pool_utilization(&self) -> f64 {
+        match &self.pool {
+            Some(p) if self.makespan > 0.0 && p.slots > 0 => {
+                p.stats.busy_time_s / (p.slots as f64 * self.makespan)
+            }
+            _ => 0.0,
+        }
+    }
 }
 
 /// N scheduler+engine replicas behind a router, driven through the same
@@ -106,6 +143,14 @@ pub struct Cluster {
     /// stays bounded regardless of how many requests flow through.
     collected: Report,
     events: Vec<RequestEvent>,
+    /// Disaggregated encoder pool (`None` = PR-3 per-replica encoding;
+    /// every pool-mode code path is gated on this being `Some`).
+    pool: Option<EncoderPool>,
+    /// Pool-mode ingress timeline: injected requests waiting for their
+    /// arrival instant, at which they are routed (sand) or pool-admitted
+    /// (pebbles/rocks) with the fleet advanced to that moment.
+    ingress: EventQueue<Request>,
+    migration_cost_s_per_ktok: f64,
 }
 
 impl Cluster {
@@ -123,13 +168,26 @@ impl Cluster {
             replicas.push(Scheduler::new(cfg.clone(), policy, engine));
         }
         let router = build_router(cfg, &profile);
+        let pool = if cfg.pool.enabled {
+            Some(EncoderPool::new(&profile, cfg.pool.slots, n, cfg.pool.aging_deadline_s))
+        } else {
+            None
+        };
         Cluster {
             replicas,
             router,
             routed: vec![0; n],
             collected: Report::default(),
             events: Vec::new(),
+            pool,
+            ingress: EventQueue::new(),
+            migration_cost_s_per_ktok: cfg.pool.migration_cost_s_per_ktok,
         }
+    }
+
+    /// Encoder-pool mode active?
+    pub fn pool_enabled(&self) -> bool {
+        self.pool.is_some()
     }
 
     pub fn replica_count(&self) -> usize {
@@ -165,27 +223,122 @@ impl Cluster {
             .collect()
     }
 
-    /// Route a request and hand it to its replica (stepping-API ingress).
+    /// Hand a request to the cluster (stepping-API ingress). Without the
+    /// pool it is routed immediately; in pool mode it joins the ingress
+    /// timeline and is dispatched (sand → replica, multimodal → pool)
+    /// when the fleet reaches its arrival instant.
     pub fn inject(&mut self, req: Request) {
-        let views = self.views();
-        let i = self.router.route(&req, &views);
+        if self.pool.is_some() {
+            let due = req.arrival.max(self.ingress.now());
+            self.ingress.schedule(due, req);
+        } else {
+            let views = self.views();
+            let i = self.router.route(&req, &views);
+            self.dispatch_to_replica(i, req);
+        }
+    }
+
+    /// Validate a router's pick: out-of-range is a router bug (debug
+    /// assert); release builds clamp rather than skewing onto a panic
+    /// path. Shared by arrival routing and handoff late binding so both
+    /// paths catch the same bugs.
+    fn checked_replica(&self, i: usize) -> usize {
         debug_assert!(
             i < self.replicas.len(),
             "router {} returned out-of-range replica {i}",
             self.router.name()
         );
-        // release builds clamp rather than skewing onto a panic path
-        let i = i.min(self.replicas.len() - 1);
+        i.min(self.replicas.len() - 1)
+    }
+
+    /// Hand the request to a (validated) replica pick.
+    fn dispatch_to_replica(&mut self, i: usize, req: Request) {
+        let i = self.checked_replica(i);
         self.routed[i] += 1;
         self.replicas[i].inject(req);
     }
 
     /// Advance every replica clock to `t` (monotone, like
-    /// [`Scheduler::advance_to`]).
+    /// [`Scheduler::advance_to`]). In pool mode, ingress and encoder-pool
+    /// events due up to `t` are processed first, in global time order.
     pub fn advance_to(&mut self, t: f64) {
+        if self.pool.is_some() {
+            self.process_due(t);
+        }
         for r in &mut self.replicas {
             r.advance_to(t);
         }
+    }
+
+    /// Pool mode: deliver every ingress arrival and encoder-pool
+    /// completion due at or before `horizon`, in global time order (ties
+    /// go to ingress — an arrival precedes a completion at the same
+    /// instant, mirroring the batch driver's arrival boundaries). Each
+    /// event first advances the whole fleet to its timestamp so routing
+    /// decisions — including late binding at encode completion — observe
+    /// the replicas as they stand at that moment. Returns the number of
+    /// events delivered.
+    fn process_due(&mut self, horizon: f64) -> usize {
+        let mut delivered = 0;
+        loop {
+            let next_ing = self.ingress.peek_time();
+            let next_pool = self.pool.as_ref().and_then(|p| p.next_event_time());
+            let ingress_first = match (next_ing, next_pool) {
+                (Some(ti), _) if ti > horizon => false,
+                (Some(ti), Some(tp)) => ti <= tp,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if ingress_first {
+                let (t, req) = self.ingress.pop().expect("peeked ingress event");
+                for i in 0..self.replicas.len() {
+                    self.advance_replica_to(i, t);
+                }
+                self.reap_finished();
+                if req.mm_tokens == 0 {
+                    // sand bypasses the pool entirely
+                    let views = self.views();
+                    let i = self.router.route(&req, &views);
+                    self.dispatch_to_replica(i, req);
+                } else {
+                    self.pool.as_mut().expect("pool mode").enqueue(req, t);
+                }
+                delivered += 1;
+                continue;
+            }
+            match next_pool {
+                Some(tp) if tp <= horizon => {
+                    for i in 0..self.replicas.len() {
+                        self.advance_replica_to(i, tp);
+                    }
+                    self.reap_finished();
+                    let h = self
+                        .pool
+                        .as_mut()
+                        .expect("pool mode")
+                        .pop_completion()
+                        .expect("completion was due");
+                    // late binding: pick the decode replica NOW, from the
+                    // outstanding-work ledger at encode completion
+                    let views = self.views();
+                    let i = self.checked_replica(self.router.route_handoff(&h.req, &views));
+                    let migration = if i == h.host {
+                        0.0
+                    } else {
+                        self.pool
+                            .as_mut()
+                            .expect("pool mode")
+                            .charge_migration(&h.req, self.migration_cost_s_per_ktok)
+                    };
+                    self.events.push(RequestEvent::Encoded { id: h.req.id, t: h.done_at });
+                    self.routed[i] += 1;
+                    self.replicas[i].inject_preencoded(h.req, h.done_at + migration);
+                    delivered += 1;
+                }
+                _ => break,
+            }
+        }
+        delivered
     }
 
     /// Step every replica once and aggregate: `Executed` if any replica
@@ -195,6 +348,9 @@ impl Cluster {
     /// empty. Also reaps terminal state into the merged report and feeds
     /// terminal events to the router's ledger.
     pub fn step(&mut self) -> StepOutcome {
+        if self.pool.is_some() {
+            self.process_due(self.now());
+        }
         let mut executed: Option<f64> = None;
         let mut next_event: Option<f64> = None;
         let mut all_drained = true;
@@ -220,8 +376,28 @@ impl Cluster {
             }
         }
         self.reap_finished();
+        // Pool mode: replica clocks moved during the step — deliver any
+        // ingress/pool events that became due, and fold the remaining
+        // (strictly future) pool/ingress timeline into the aggregate so
+        // the fleet never reports Drained while encodes are queued or in
+        // flight.
+        let mut delivered_now = 0;
+        if self.pool.is_some() {
+            delivered_now = self.process_due(self.now());
+            let pending =
+                [self.ingress.peek_time(), self.pool.as_ref().and_then(|p| p.next_event_time())];
+            for t in pending.into_iter().flatten() {
+                all_drained = false;
+                next_event = Some(next_event.map_or(t, |m| m.min(t)));
+            }
+        }
         if let Some(dt) = executed {
             return StepOutcome::Executed { dt };
+        }
+        if delivered_now > 0 {
+            // arrivals/handoffs just landed at (or before) the current
+            // clocks: there is runnable work — step again immediately
+            return StepOutcome::Executed { dt: 0.0 };
         }
         if all_drained {
             return StepOutcome::Drained;
@@ -273,6 +449,18 @@ impl Cluster {
     pub fn run(&mut self, trace: Vec<Request>) -> ClusterReport {
         let mut trace = trace;
         trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        if self.pool.is_some() {
+            // Pool mode already dispatches from a global ingress timeline
+            // (every arrival advances the fleet to its instant before
+            // being routed or pool-admitted), so the batch driver is
+            // exactly inject-everything + drain — the same machine the
+            // stepping callers drive, proven bit-identical in
+            // `tests/encoder_pool.rs`.
+            for req in trace {
+                self.inject(req);
+            }
+            return self.drain();
+        }
         for req in trace {
             let t = req.arrival;
             for i in 0..self.replicas.len() {
@@ -307,13 +495,22 @@ impl Cluster {
                 clock: r.now(),
             })
             .collect();
-        ClusterReport { report: merged, per_replica, makespan }
+        ClusterReport {
+            report: merged,
+            per_replica,
+            makespan,
+            pool: self.pool.as_ref().map(|p| p.snapshot()),
+        }
     }
 
-    /// Per-replica scheduler invariants (property tests).
+    /// Per-replica scheduler invariants plus encoder-pool structural
+    /// invariants (property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         for (i, r) in self.replicas.iter().enumerate() {
             r.check_invariants().map_err(|e| format!("replica {i}: {e}"))?;
+        }
+        if let Some(p) = &self.pool {
+            p.check_invariants().map_err(|e| format!("encoder pool: {e}"))?;
         }
         Ok(())
     }

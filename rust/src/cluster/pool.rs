@@ -1,0 +1,462 @@
+//! Disaggregated encoder pool: a shared, elastic pool of vision-encoder
+//! slots detached from the decode replicas (ElasticMM, arXiv 2507.10069;
+//! GPU-internal multi-stage disaggregation, arXiv 2512.17574).
+//!
+//! PR 3's cluster pins one encoder inside each replica engine, so a rock
+//! being encoded on replica k serializes with that replica's sand even
+//! when another replica's encoder sits idle. In pool mode the cluster
+//! admits multimodal requests here first; text (sand) bypasses the pool
+//! entirely and is routed straight to a decode replica.
+//!
+//! Admission rules (modality-aware pool queue):
+//! * **sand** — never enters the pool (no encoder work);
+//! * **pebbles** (images) — priority lane: oldest pebble takes any free
+//!   slot before un-aged rocks;
+//! * **rocks** (videos) — capped to at most ⌈M/2⌉ concurrently encoding
+//!   so a video burst cannot monopolize the pool, with *aging*: a rock
+//!   waiting past `aging_deadline_s` outranks every pebble, so rocks
+//!   never starve under a pebble flood (the bound is
+//!   `wait ≤ deadline + max in-flight encode`, proven in
+//!   `tests/encoder_pool.rs`).
+//!
+//! Each slot is co-hosted with decode replica `slot % N`. When an encode
+//! completes, the cluster *late-binds* the decode replica through the
+//! router ([`super::router::Router::route_handoff`]) using the
+//! outstanding-work ledger at completion time; if the chosen replica is
+//! not the slot's host, the encoded embeddings migrate at a configurable
+//! transfer cost (`migration_cost_s_per_ktok` seconds per 1000 vision
+//! tokens; bytes are reported at [`BYTES_PER_MM_TOKEN`] per token — a
+//! 1024-dim fp16 embedding row).
+//!
+//! The pool is a deterministic discrete-event machine: its only event
+//! source is slot completions (queue admissions happen at enqueue or
+//! completion instants), so for a fixed enqueue sequence the handoff
+//! sequence is bit-reproducible — the property the pool-mode determinism
+//! and stepped-equals-batch tests in `tests/encoder_pool.rs` pin down.
+
+use crate::model::ModelProfile;
+use crate::request::{Modality, Request};
+use std::collections::VecDeque;
+
+/// Accounting bytes per migrated vision token: one 1024-dim fp16
+/// embedding row (2 bytes/element).
+pub const BYTES_PER_MM_TOKEN: u64 = 2048;
+
+/// A completed encode ready to be handed to a decode replica.
+#[derive(Debug, Clone)]
+pub struct Handoff {
+    pub req: Request,
+    /// Pool-clock time the encode finished.
+    pub done_at: f64,
+    /// Replica co-hosted with the slot that ran the encode; migration is
+    /// charged iff the router binds a different replica.
+    pub host: usize,
+}
+
+/// Aggregate pool counters (surfaced in
+/// [`super::ClusterReport::pool`]).
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub enqueued_pebbles: u64,
+    pub enqueued_rocks: u64,
+    /// Encodes completed (== handoffs delivered: the pool never drops).
+    pub encodes: u64,
+    /// Virtual seconds of encode work across all slots.
+    pub busy_time_s: f64,
+    /// Longest single encode started so far (the starvation-bound term).
+    pub max_encode_s: f64,
+    pub pebble_wait_max_s: f64,
+    pub rock_wait_max_s: f64,
+    /// Rocks admitted past the aging deadline while pebbles were still
+    /// waiting — each one is an exercised anti-starvation promotion.
+    pub aged_promotions: u64,
+    pub rock_in_flight_peak: usize,
+    /// Handoffs whose bound replica differed from the slot host.
+    pub migrations: u64,
+    pub migrated_mm_tokens: u64,
+    pub migrated_bytes: u64,
+}
+
+/// Point-in-time pool description embedded in the cluster report.
+#[derive(Debug, Clone)]
+pub struct PoolSnapshot {
+    pub slots: usize,
+    pub rock_cap: usize,
+    pub stats: PoolStats,
+}
+
+#[derive(Debug)]
+struct Queued {
+    req: Request,
+    enqueued: f64,
+}
+
+#[derive(Debug)]
+struct Slot {
+    host: usize,
+    busy_until: f64,
+    /// In-flight request and whether it occupies a rock-cap slot.
+    current: Option<(Request, bool)>,
+}
+
+/// The shared encoder pool: M slots, two modality lanes, rock cap with
+/// aging. Time is virtual and driven by the owning [`super::Cluster`].
+pub struct EncoderPool {
+    profile: ModelProfile,
+    slots: Vec<Slot>,
+    rock_cap: usize,
+    aging_deadline_s: f64,
+    pebbles: VecDeque<Queued>,
+    rocks: VecDeque<Queued>,
+    rocks_in_flight: usize,
+    clock: f64,
+    pub stats: PoolStats,
+}
+
+impl EncoderPool {
+    /// Build a pool of `slots` encoder slots over `replicas` decode
+    /// replicas; slot `i` is co-hosted with replica `i % replicas`.
+    pub fn new(
+        profile: &ModelProfile,
+        slots: usize,
+        replicas: usize,
+        aging_deadline_s: f64,
+    ) -> EncoderPool {
+        let slots = slots.max(1);
+        let replicas = replicas.max(1);
+        EncoderPool {
+            profile: profile.clone(),
+            slots: (0..slots)
+                .map(|i| Slot { host: i % replicas, busy_until: 0.0, current: None })
+                .collect(),
+            rock_cap: slots.div_ceil(2),
+            aging_deadline_s,
+            pebbles: VecDeque::new(),
+            rocks: VecDeque::new(),
+            rocks_in_flight: 0,
+            clock: 0.0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn rock_cap(&self) -> usize {
+        self.rock_cap
+    }
+
+    /// Nothing queued and nothing encoding.
+    pub fn is_idle(&self) -> bool {
+        self.pebbles.is_empty()
+            && self.rocks.is_empty()
+            && self.slots.iter().all(|s| s.current.is_none())
+    }
+
+    /// Earliest in-flight completion, if any. Queued-but-unstarted work
+    /// only starts at enqueue or completion instants, so this is the
+    /// pool's only event source.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.slots
+            .iter()
+            .filter(|s| s.current.is_some())
+            .map(|s| s.busy_until)
+            .fold(None, |m: Option<f64>, t| Some(m.map_or(t, |m| m.min(t))))
+    }
+
+    /// Admit a multimodal request to the pool at time `t`. The owning
+    /// cluster processes completions in global time order, so every
+    /// completion earlier than `t` has already been popped.
+    pub fn enqueue(&mut self, req: Request, t: f64) {
+        debug_assert!(req.mm_tokens > 0, "sand bypasses the pool");
+        debug_assert!(
+            self.next_event_time().map_or(true, |tc| tc >= t - 1e-9),
+            "enqueue at {t} with completion pending at {:?}",
+            self.next_event_time()
+        );
+        if t > self.clock {
+            self.clock = t;
+        }
+        let is_rock = req.modality == Modality::Video;
+        if is_rock {
+            self.stats.enqueued_rocks += 1;
+            self.rocks.push_back(Queued { req, enqueued: t });
+        } else {
+            self.stats.enqueued_pebbles += 1;
+            self.pebbles.push_back(Queued { req, enqueued: t });
+        }
+        self.fill_slots();
+    }
+
+    /// Complete the earliest in-flight encode (ties break to the lowest
+    /// slot index), refill freed capacity from the queues, and return the
+    /// handoff. `None` when nothing is encoding.
+    pub fn pop_completion(&mut self) -> Option<Handoff> {
+        let i = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.current.is_some())
+            .min_by(|(ai, a), (bi, b)| {
+                a.busy_until.partial_cmp(&b.busy_until).unwrap().then(ai.cmp(bi))
+            })
+            .map(|(i, _)| i)?;
+        let done_at = self.slots[i].busy_until;
+        if done_at > self.clock {
+            self.clock = done_at;
+        }
+        let (req, was_rock) = self.slots[i].current.take().expect("selected slot is busy");
+        if was_rock {
+            self.rocks_in_flight -= 1;
+        }
+        self.stats.encodes += 1;
+        let host = self.slots[i].host;
+        self.fill_slots();
+        Some(Handoff { req, done_at, host })
+    }
+
+    /// Record a handoff that actually crossed hosts; returns the transfer
+    /// time for `migration_cost_s_per_ktok` seconds per 1000 vision
+    /// tokens.
+    pub fn charge_migration(&mut self, req: &Request, cost_s_per_ktok: f64) -> f64 {
+        self.stats.migrations += 1;
+        self.stats.migrated_mm_tokens += req.mm_tokens as u64;
+        self.stats.migrated_bytes += req.mm_tokens as u64 * BYTES_PER_MM_TOKEN;
+        cost_s_per_ktok * (req.mm_tokens as f64 / 1000.0)
+    }
+
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            slots: self.slots.len(),
+            rock_cap: self.rock_cap,
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Serialized pool-side encode cost: CPU preprocess (image decode /
+    /// frame extraction) plus the encoder pass. The amortized/overlapped
+    /// charging of replica-local encoding does not apply — a pool slot is
+    /// a dedicated encoder instance.
+    fn encode_duration(&self, req: &Request) -> f64 {
+        self.profile.preprocess_time(req) + self.profile.encode_time(req)
+    }
+
+    /// Start encodes on free slots until no admissible work remains.
+    /// Admission order at time `now`:
+    /// 1. the oldest rock older than the aging deadline (anti-starvation),
+    ///    subject to the rock cap;
+    /// 2. the oldest pebble;
+    /// 3. the oldest rock, subject to the rock cap.
+    fn fill_slots(&mut self) {
+        let now = self.clock;
+        loop {
+            let Some(slot) = self.slots.iter().position(|s| s.current.is_none()) else {
+                break;
+            };
+            let rock_ok = self.rocks_in_flight < self.rock_cap;
+            let rock_aged = rock_ok
+                && self
+                    .rocks
+                    .front()
+                    .is_some_and(|q| now - q.enqueued >= self.aging_deadline_s);
+            let q = if rock_aged {
+                if !self.pebbles.is_empty() {
+                    self.stats.aged_promotions += 1;
+                }
+                self.rocks.pop_front().expect("aged rock present")
+            } else if let Some(q) = self.pebbles.pop_front() {
+                q
+            } else if rock_ok {
+                match self.rocks.pop_front() {
+                    Some(q) => q,
+                    None => break,
+                }
+            } else {
+                break;
+            };
+            let is_rock = q.req.modality == Modality::Video;
+            let wait = (now - q.enqueued).max(0.0);
+            if is_rock {
+                self.rocks_in_flight += 1;
+                self.stats.rock_in_flight_peak =
+                    self.stats.rock_in_flight_peak.max(self.rocks_in_flight);
+                self.stats.rock_wait_max_s = self.stats.rock_wait_max_s.max(wait);
+            } else {
+                self.stats.pebble_wait_max_s = self.stats.pebble_wait_max_s.max(wait);
+            }
+            let dur = self.encode_duration(&q.req);
+            self.stats.busy_time_s += dur;
+            self.stats.max_encode_s = self.stats.max_encode_s.max(dur);
+            self.slots[slot].busy_until = now + dur;
+            self.slots[slot].current = Some((q.req, is_rock));
+        }
+    }
+
+    /// Structural invariants (exercised by the pool property suite).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let in_flight = self.slots.iter().filter(|s| matches!(s.current, Some((_, true)))).count();
+        if in_flight != self.rocks_in_flight {
+            return Err(format!(
+                "rock in-flight counter {} != recount {in_flight}",
+                self.rocks_in_flight
+            ));
+        }
+        if self.rocks_in_flight > self.rock_cap {
+            return Err(format!(
+                "rock cap violated: {} in flight > cap {}",
+                self.rocks_in_flight, self.rock_cap
+            ));
+        }
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.current.is_some() && s.busy_until < self.clock - 1e-9 {
+                return Err(format!(
+                    "slot {i} busy_until {} behind pool clock {}",
+                    s.busy_until, self.clock
+                ));
+            }
+        }
+        // work conservation: a free slot may coexist only with an empty
+        // pebble lane and a rock lane blocked by the cap
+        let free = self.slots.iter().any(|s| s.current.is_none());
+        if free && !self.pebbles.is_empty() {
+            return Err("free slot while pebbles wait".into());
+        }
+        if free && !self.rocks.is_empty() && self.rocks_in_flight < self.rock_cap {
+            return Err("free slot while an admissible rock waits".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    fn image(id: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            modality: Modality::Image,
+            text_tokens: 40,
+            mm_tokens: 729,
+            video_duration_s: 0.0,
+            output_tokens: 8,
+        }
+    }
+
+    fn video(id: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            modality: Modality::Video,
+            text_tokens: 40,
+            mm_tokens: 17_640,
+            video_duration_s: 45.0,
+            output_tokens: 8,
+        }
+    }
+
+    fn pool(slots: usize) -> EncoderPool {
+        EncoderPool::new(&by_name("llava-7b").unwrap(), slots, 2, 1.0)
+    }
+
+    #[test]
+    fn rock_cap_is_half_the_slots_rounded_up() {
+        assert_eq!(pool(1).rock_cap(), 1);
+        assert_eq!(pool(2).rock_cap(), 1);
+        assert_eq!(pool(4).rock_cap(), 2);
+        assert_eq!(pool(5).rock_cap(), 3);
+    }
+
+    #[test]
+    fn completions_pop_in_time_order_and_conserve_requests() {
+        let mut p = pool(2);
+        p.enqueue(image(0), 0.0);
+        p.enqueue(video(1), 0.0);
+        p.enqueue(image(2), 0.0); // queued: both slots busy
+        p.check_invariants().unwrap();
+        let a = p.pop_completion().unwrap();
+        assert_eq!(a.req.id, 0, "image encodes faster than the video");
+        let b = p.pop_completion().unwrap();
+        assert_eq!(b.req.id, 2, "queued pebble started when the image slot freed");
+        let c = p.pop_completion().unwrap();
+        assert_eq!(c.req.id, 1);
+        assert!(a.done_at <= b.done_at && b.done_at <= c.done_at);
+        assert!(p.pop_completion().is_none());
+        assert!(p.is_idle());
+        assert_eq!(p.stats.encodes, 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rocks_capped_while_pebbles_flow() {
+        let mut p = pool(4); // cap 2
+        for id in 0..4 {
+            p.enqueue(video(id), 0.0);
+        }
+        assert_eq!(p.rocks_in_flight, 2, "only ⌈M/2⌉ rocks encode concurrently");
+        p.enqueue(image(10), 0.0);
+        p.enqueue(image(11), 0.0);
+        // pebbles take the two slots the cap reserved away from rocks
+        assert!(p.slots.iter().all(|s| s.current.is_some()));
+        p.check_invariants().unwrap();
+        let mut order = Vec::new();
+        while let Some(h) = p.pop_completion() {
+            order.push(h.req.id);
+        }
+        assert_eq!(order.len(), 6);
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    fn aged_rock_outranks_pebbles() {
+        let mut p = pool(1); // cap 1, deadline 1.0
+        p.enqueue(image(0), 0.0);
+        p.enqueue(video(1), 0.0);
+        for id in 2..10 {
+            p.enqueue(image(id), 0.01);
+        }
+        // image 0 completes ~0.16s: rock not yet aged, next pebble wins
+        let h = p.pop_completion().unwrap();
+        assert_eq!(h.req.id, 0);
+        assert_eq!(p.slots[0].current.as_ref().unwrap().0.id, 2);
+        // keep completing: once the rock's wait crosses 1.0s it must win
+        // the next free slot even though pebbles still queue
+        let mut rock_started_at = None;
+        while let Some(_h) = p.pop_completion() {
+            if let Some((req, _)) = &p.slots[0].current {
+                if req.modality == Modality::Video && rock_started_at.is_none() {
+                    rock_started_at = Some(p.clock);
+                }
+            }
+        }
+        let started = rock_started_at.expect("rock must eventually start");
+        assert!(started >= 1.0, "rock started before aging at {started}");
+        assert!(
+            started <= 1.0 + p.stats.max_encode_s + 1e-9,
+            "rock start {started} exceeds deadline + max encode"
+        );
+        assert!(p.stats.aged_promotions >= 1, "aging was never exercised");
+    }
+
+    #[test]
+    fn migration_accounting_is_token_and_byte_conserving() {
+        let mut p = pool(2);
+        let v = video(0);
+        let dt = p.charge_migration(&v, 0.002);
+        assert!((dt - 0.002 * 17.640).abs() < 1e-12);
+        assert_eq!(p.stats.migrations, 1);
+        assert_eq!(p.stats.migrated_mm_tokens, 17_640);
+        assert_eq!(p.stats.migrated_bytes, 17_640 * BYTES_PER_MM_TOKEN);
+        assert_eq!(p.charge_migration(&v, 0.0), 0.0);
+    }
+
+    #[test]
+    fn hosts_cycle_over_replicas() {
+        let p = EncoderPool::new(&by_name("llava-7b").unwrap(), 4, 3, 1.0);
+        let hosts: Vec<usize> = p.slots.iter().map(|s| s.host).collect();
+        assert_eq!(hosts, vec![0, 1, 2, 0]);
+    }
+}

@@ -53,6 +53,19 @@ pub trait Router: Send {
     /// is never empty; the returned index must be `< views.len()`.
     fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize;
 
+    /// Late-binding hook for encoder-pool handoffs: called at *encode
+    /// completion* time (not arrival) with the fleet views and
+    /// outstanding-work ledger as they stand at that moment, so the
+    /// decode replica is chosen against current load rather than the
+    /// state when the request arrived. Default: the same decision logic
+    /// as [`Router::route`]. Ledger-keeping routers override this to
+    /// charge the handoff an *encode-free* predicted cost (the pool
+    /// already ran the encode); `on_terminal` retires the entry
+    /// whichever path assigned it.
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        self.route(req, views)
+    }
+
     /// Terminal notification (request finished or dropped) so stateful
     /// routers can retire ledger entries. Default: no-op.
     fn on_terminal(&mut self, _req_id: u64) {}
@@ -147,6 +160,12 @@ impl LeastWorkRouter {
     pub fn new(est: ImpactEstimator, replicas: usize) -> LeastWorkRouter {
         LeastWorkRouter { est, ledger: WorkLedger::new(replicas) }
     }
+
+    fn route_with_cost(&mut self, req: &Request, views: &[ReplicaView], cost: f64) -> usize {
+        let i = self.ledger.argmin(0..views.len()).expect("views non-empty");
+        self.ledger.assign(req.id, i, cost);
+        i
+    }
 }
 
 impl Router for LeastWorkRouter {
@@ -156,9 +175,15 @@ impl Router for LeastWorkRouter {
 
     fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
         let cost = self.est.estimate(req).prefill_s;
-        let i = self.ledger.argmin(0..views.len()).expect("views non-empty");
-        self.ledger.assign(req.id, i, cost);
-        i
+        self.route_with_cost(req, views, cost)
+    }
+
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        // the pool already ran the encode: charge the ledger LLM prefill
+        // only, or every video handoff would carry seconds of phantom
+        // encode load until it finishes
+        let cost = self.est.estimate_preencoded(req).prefill_s;
+        self.route_with_cost(req, views, cost)
     }
 
     fn on_terminal(&mut self, req_id: u64) {
@@ -204,15 +229,8 @@ impl ModalityPartitionRouter {
         let (sand, pebble, rock) = partition_groups(replicas.max(1));
         ModalityPartitionRouter { est, ledger: WorkLedger::new(replicas.max(1)), sand, pebble, rock }
     }
-}
 
-impl Router for ModalityPartitionRouter {
-    fn name(&self) -> &'static str {
-        "modality-partition"
-    }
-
-    fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
-        let cost = self.est.estimate(req).prefill_s;
+    fn route_with_cost(&mut self, req: &Request, views: &[ReplicaView], cost: f64) -> usize {
         let chosen = match req.modality {
             Modality::Text => {
                 // sand flows through its own group and may borrow any
@@ -236,6 +254,25 @@ impl Router for ModalityPartitionRouter {
         .expect("every group holds at least one replica");
         self.ledger.assign(req.id, chosen, cost);
         chosen
+    }
+}
+
+impl Router for ModalityPartitionRouter {
+    fn name(&self) -> &'static str {
+        "modality-partition"
+    }
+
+    fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        let cost = self.est.estimate(req).prefill_s;
+        self.route_with_cost(req, views, cost)
+    }
+
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        // pool handoffs owe LLM prefill only (encode already ran); the
+        // group choice is unchanged — a pre-encoded video still carries a
+        // rock-sized prefill and stays in the rock group
+        let cost = self.est.estimate_preencoded(req).prefill_s;
+        self.route_with_cost(req, views, cost)
     }
 
     fn on_terminal(&mut self, req_id: u64) {
@@ -351,6 +388,32 @@ mod tests {
         for i in 1..5 {
             assert_eq!(r.route(&req(i, Modality::Text), &v), 1);
         }
+    }
+
+    /// Pool handoffs must charge the ledger LLM-prefill-only cost: the
+    /// encode already ran in the pool, so a video handed off must not
+    /// look as expensive as a video that still owes its encode.
+    #[test]
+    fn handoff_ledger_charge_excludes_encode() {
+        let est = estimator();
+        let v = req(0, Modality::Video);
+        assert!(
+            est.estimate_preencoded(&v).prefill_s < est.estimate(&v).prefill_s,
+            "pre-encoded estimate must drop the encode component"
+        );
+        // two replicas: a video HANDOFF lands on 0 with its (small)
+        // prefill-only charge, a fresh video ARRIVAL lands on 1 with the
+        // full encode+prefill charge — the next sand request must prefer
+        // the handoff replica, proving the phantom encode is gone
+        let mut r = LeastWorkRouter::new(estimator(), 2);
+        let views = views(2);
+        assert_eq!(r.route_handoff(&req(0, Modality::Video), &views), 0);
+        assert_eq!(r.route(&req(1, Modality::Video), &views), 1);
+        assert_eq!(
+            r.route(&req(2, Modality::Text), &views),
+            0,
+            "replica holding only a pre-encoded video must look lighter"
+        );
     }
 
     #[test]

@@ -107,12 +107,44 @@ impl Default for ClusterConfig {
 
 pub const ROUTERS: [&str; 3] = ["round-robin", "least-work", "modality-partition"];
 
+/// Disaggregated encoder-pool knobs (the `[pool]` TOML section; see
+/// `crate::cluster::pool`). Disabled by default: every pool-mode code
+/// path is gated on `enabled`, keeping the cluster bit-identical to its
+/// pre-pool behavior when off (proven in `tests/encoder_pool.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolConfig {
+    /// Admit multimodal requests to a shared encoder pool instead of
+    /// encoding inside each decode replica (`--encoder-pool`).
+    pub enabled: bool,
+    /// Encoder slots M in the pool (`--pool-slots`). Rocks are capped to
+    /// ⌈M/2⌉ concurrent slots.
+    pub slots: usize,
+    /// A rock waiting longer than this outranks the pebble priority lane
+    /// (`--pool-aging`), bounding rock encode-start delay.
+    pub aging_deadline_s: f64,
+    /// Embedding transfer cost in seconds per 1000 vision tokens, charged
+    /// when the encode slot's host replica is not the late-bound decode
+    /// replica (`--migration-cost`).
+    pub migration_cost_s_per_ktok: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            enabled: false,
+            slots: 2,
+            aging_deadline_s: 2.0,
+            migration_cost_s_per_ktok: 0.002,
+        }
+    }
+}
+
 /// Top-level experiment/server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Model profile name (Table 1) or "tiny-mllm" for the real engine.
     pub model: String,
-    /// Workload mix: T0 | ML | MH.
+    /// Workload mix: T0 | ML | MH | VH.
     pub mix: String,
     /// Poisson arrival rate (requests/second). Paper default: 2.
     pub rate: f64,
@@ -129,6 +161,7 @@ pub struct ServeConfig {
     pub scheduler: SchedulerConfig,
     pub regulator: RegulatorConfig,
     pub cluster: ClusterConfig,
+    pub pool: PoolConfig,
 }
 
 impl Default for ServeConfig {
@@ -145,6 +178,7 @@ impl Default for ServeConfig {
             scheduler: SchedulerConfig::default(),
             regulator: RegulatorConfig::default(),
             cluster: ClusterConfig::default(),
+            pool: PoolConfig::default(),
         }
     }
 }
@@ -179,7 +213,7 @@ impl ServeConfig {
     pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
-            "memory_frac", "scheduler.", "regulator.", "cluster.",
+            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -244,6 +278,18 @@ impl ServeConfig {
         if let Some(v) = doc.get_f64("cluster.overlap_penalty_s") {
             self.cluster.overlap_penalty_s = v;
         }
+        if let Some(v) = doc.get_bool("pool.enabled") {
+            self.pool.enabled = v;
+        }
+        if let Some(v) = doc.get_i64("pool.slots") {
+            self.pool.slots = v as usize;
+        }
+        if let Some(v) = doc.get_f64("pool.aging_deadline_s") {
+            self.pool.aging_deadline_s = v;
+        }
+        if let Some(v) = doc.get_f64("pool.migration_cost_s_per_ktok") {
+            self.pool.migration_cost_s_per_ktok = v;
+        }
         if let Some(v) = doc.get_bool("regulator.aging_enabled") {
             self.regulator.aging_enabled = v;
         }
@@ -301,6 +347,14 @@ impl ServeConfig {
         }
         self.cluster.overlap_penalty_s =
             args.get_f64("overlap-penalty", self.cluster.overlap_penalty_s).map_err(e)?;
+        if args.has_flag("encoder-pool") {
+            self.pool.enabled = true;
+        }
+        self.pool.slots = args.get_usize("pool-slots", self.pool.slots).map_err(e)?;
+        self.pool.aging_deadline_s =
+            args.get_f64("pool-aging", self.pool.aging_deadline_s).map_err(e)?;
+        self.pool.migration_cost_s_per_ktok =
+            args.get_f64("migration-cost", self.pool.migration_cost_s_per_ktok).map_err(e)?;
         self.validate()
     }
 
@@ -313,7 +367,7 @@ impl ServeConfig {
             )));
         }
         if crate::workload::Mix::by_name(&self.mix).is_none() {
-            return Err(ConfigError(format!("unknown mix '{}' (T0|ML|MH)", self.mix)));
+            return Err(ConfigError(format!("unknown mix '{}' (T0|ML|MH|VH)", self.mix)));
         }
         const POLICIES: [&str; 6] =
             ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
@@ -343,6 +397,15 @@ impl ServeConfig {
         }
         if self.cluster.overlap_penalty_s < 0.0 {
             return Err(ConfigError("cluster.overlap_penalty_s must be >= 0".into()));
+        }
+        if self.pool.slots == 0 || self.pool.slots > 256 {
+            return Err(ConfigError("pool.slots must be in 1..=256".into()));
+        }
+        if self.pool.aging_deadline_s < 0.0 {
+            return Err(ConfigError("pool.aging_deadline_s must be >= 0".into()));
+        }
+        if self.pool.migration_cost_s_per_ktok < 0.0 {
+            return Err(ConfigError("pool.migration_cost_s_per_ktok must be >= 0".into()));
         }
         Ok(())
     }
@@ -431,6 +494,37 @@ overlap_penalty_s = 0.001
         assert!(c.apply_doc(&Doc::parse("[cluster]\nrouter = \"nope\"").unwrap()).is_err());
         let mut c = ServeConfig::default();
         assert!(c.apply_doc(&Doc::parse("[cluster]\nreplicas = 0").unwrap()).is_err());
+    }
+
+    #[test]
+    fn pool_section_parses_and_validates() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.pool, PoolConfig::default());
+        assert!(!c.pool.enabled, "the pool must be opt-in");
+        let doc = Doc::parse(
+            r#"
+[pool]
+enabled = true
+slots = 6
+aging_deadline_s = 1.5
+migration_cost_s_per_ktok = 0.004
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.pool.enabled);
+        assert_eq!(c.pool.slots, 6);
+        assert_eq!(c.pool.aging_deadline_s, 1.5);
+        assert_eq!(c.pool.migration_cost_s_per_ktok, 0.004);
+
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[pool]\nslots = 0").unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        assert!(c
+            .apply_doc(&Doc::parse("[pool]\nmigration_cost_s_per_ktok = -1.0").unwrap())
+            .is_err());
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[pool]\naging_deadline_s = -0.1").unwrap()).is_err());
     }
 
     #[test]

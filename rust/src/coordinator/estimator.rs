@@ -70,6 +70,20 @@ impl ImpactEstimator {
         Impact { prefill_s, kv_tokens: tokens + self.median_output }
     }
 
+    /// Predict the impact of a request whose vision encode already ran
+    /// elsewhere (encoder-pool handoff): the replica owes LLM prefill
+    /// only, no encoder time. LLM prefill cost scales with prompt-token
+    /// count regardless of where the tokens came from, so the text fit —
+    /// trained on encode-free samples — is the right model for any
+    /// pre-encoded prompt.
+    pub fn estimate_preencoded(&self, req: &Request) -> Impact {
+        let tokens = req.prefill_tokens() as f64;
+        Impact {
+            prefill_s: self.text_fit.predict(tokens).max(1e-6),
+            kv_tokens: tokens + self.median_output,
+        }
+    }
+
     /// Mean absolute prediction error per modality on a dataset (Fig 7).
     pub fn mae(&self, data: &ProfileData, m: Modality) -> f64 {
         let ss = data.of_modality(m);

@@ -87,6 +87,14 @@ pub enum StepOutcome {
 pub enum RequestEvent {
     /// CPU preprocessing finished; the request is schedulable.
     Ready { id: u64, t: f64 },
+    /// A vision encode ran for this request: emitted by the scheduler
+    /// when it plans a local `EncodeItem` (at the iteration that launches
+    /// it) and by the cluster's encoder pool at handoff. Together with
+    /// `Preempted`, this makes the paper's encode-count invariant
+    /// (`encodes == 1 + preemptions` for finished multimodal requests)
+    /// observable from the event stream alone, across the pool→replica
+    /// boundary (see `tests/pool_properties.rs`).
+    Encoded { id: u64, t: f64 },
     /// The prefill-completing iteration produced the first token (TTFT).
     FirstToken { id: u64, t: f64 },
     /// Preempted-by-recompute and re-queued.
@@ -119,6 +127,9 @@ pub struct Scheduler {
     kv: KvCache,
 
     states: HashMap<u64, ReqState>,
+    /// Requests arriving already encoded (pool handoffs): id → handoff
+    /// time. They skip CPU preprocessing and the admission encode.
+    preencoded: HashMap<u64, f64>,
     waiting: Vec<u64>,
     running: Vec<u64>,
     queues: QueueManager,
@@ -151,6 +162,7 @@ impl Scheduler {
             engine,
             kv,
             states: HashMap::new(),
+            preencoded: HashMap::new(),
             waiting: Vec::new(),
             running: Vec::new(),
             queues: QueueManager::new(),
@@ -221,6 +233,20 @@ impl Scheduler {
     /// already in the past is ingested on the next step.
     pub fn inject(&mut self, req: Request) {
         let due = req.arrival.max(self.arrivals.now());
+        self.arrivals.schedule(due, req);
+    }
+
+    /// Hand over a request whose vision encode already ran elsewhere (the
+    /// cluster's encoder pool). `ready_at` is the handoff time — encode
+    /// completion plus any migration cost; the request becomes
+    /// schedulable then, skipping CPU preprocessing and the local
+    /// admission encode. `req.arrival` keeps the *original* arrival so
+    /// TTFT/SLO accounting still covers pool queueing and encode time.
+    /// A later preemption-by-recompute re-encodes locally, exactly as for
+    /// locally encoded requests.
+    pub fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        let due = ready_at.max(self.arrivals.now());
+        self.preencoded.insert(req.id, ready_at);
         self.arrivals.schedule(due, req);
     }
 
@@ -421,6 +447,17 @@ impl Scheduler {
         let t_pre = self.profile.preprocess_time(&req);
         self.states.insert(id, ReqState::new(req, slo));
 
+        // Pool handoffs arrive preprocessed and encoded: no CPU worker,
+        // schedulable at the handoff time (clamped to the clock, exactly
+        // like a preprocess completion in the past would be).
+        if let Some(ready_at) = self.preencoded.remove(&id) {
+            let st = self.states.get_mut(&id).unwrap();
+            st.encoded = true;
+            st.encoded_externally = true;
+            self.ready_events.schedule(ready_at.max(self.now), id);
+            return;
+        }
+
         // earliest-free CPU worker
         let (w, _) = self
             .preproc_free
@@ -540,7 +577,9 @@ impl Scheduler {
                         chunk_tokens: chunk,
                         last_chunk: st.cached_rows + chunk == st.prefill_target(),
                         text_tokens: st.req.text_tokens,
-                        mm_tokens: st.req.mm_tokens,
+                        // externally encoded (pool handoff): the local
+                        // engine owes no encoder work during prefill
+                        mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
                         prefill_total: st.prefill_target(),
                     });
                     budget -= chunk as u64;
@@ -596,6 +635,8 @@ impl Scheduler {
                         st.preempted_time += now - t0;
                     }
                     let class = st.class;
+                    // `encoded_externally` implies `encoded`, so an
+                    // EncodeItem is only ever planned for a local encode
                     let needs_encode = st.req.mm_tokens > 0 && !st.encoded;
                     if needs_encode {
                         st.encoded = true;
@@ -605,6 +646,8 @@ impl Scheduler {
                             mm_tokens: st.req.mm_tokens,
                             video_duration_s: st.req.video_duration_s,
                         });
+                        // the iteration being planned launches this encode
+                        self.events.push(RequestEvent::Encoded { id, t: now });
                     }
                     let st = &self.states[&id];
                     planned_prefill.insert(id, plan.prefills.len());
@@ -614,7 +657,9 @@ impl Scheduler {
                         chunk_tokens: chunk,
                         last_chunk: st.cached_rows + chunk == st.prefill_target(),
                         text_tokens: st.req.text_tokens,
-                        mm_tokens: st.req.mm_tokens,
+                        // externally encoded (pool handoff): the local
+                        // engine owes no encoder work during prefill
+                        mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
                         prefill_total: st.prefill_target(),
                     });
                     budget -= chunk as u64;
@@ -740,6 +785,7 @@ impl Scheduler {
         st.phase = Phase::Waiting;
         st.cached_rows = 0;
         st.encoded = false; // recompute drops the encoder cache too
+        st.encoded_externally = false; // the re-encode will run locally
         st.preemptions += 1;
         st.preempted_at = Some(now);
         self.stats.preemptions += 1;

@@ -38,6 +38,10 @@ pub struct ReqState {
     /// Vision encode has run. Cleared on preemption-by-recompute (the
     /// recompute path rebuilds everything, encoder output included).
     pub encoded: bool,
+    /// The current encode was produced outside this scheduler (encoder
+    /// pool handoff): prefill charges no local encoder work. Cleared on
+    /// preemption-by-recompute — the re-encode happens locally.
+    pub encoded_externally: bool,
     /// KV rows currently cached for this request: prefill chunks plus one
     /// row per decode step. Resets to 0 on preemption-by-recompute.
     pub cached_rows: u32,
@@ -61,6 +65,7 @@ impl ReqState {
             ready_time: 0.0,
             first_enqueue: 0.0,
             encoded: false,
+            encoded_externally: false,
             cached_rows: 0,
             decoded: 0,
             first_token: None,

@@ -40,11 +40,16 @@ pub struct PrefillItem {
     /// Text tokens of the prompt (the suffix after any vision tokens);
     /// the real engine needs the split to build embeddings.
     pub text_tokens: u32,
-    /// Vision tokens of the whole prompt (0 for text). The simulator
-    /// amortizes the encoder's throughput cost across prefill chunks in
-    /// proportion to `chunk_tokens / prefill_total` — modeling vLLM V1's
-    /// per-iteration encoder budget, which tiles multimodal encoding
-    /// alongside chunked prefill instead of blocking a whole iteration.
+    /// Vision tokens the *local* encoder still owes for this prompt (0
+    /// for text). The simulator amortizes the encoder's throughput cost
+    /// across prefill chunks in proportion to
+    /// `chunk_tokens / prefill_total` — modeling vLLM V1's per-iteration
+    /// encoder budget, which tiles multimodal encoding alongside chunked
+    /// prefill instead of blocking a whole iteration. Requests encoded
+    /// elsewhere (the cluster's encoder pool) carry 0 here even though
+    /// their prompt contains vision rows: the embeddings already exist,
+    /// so prefill charges LLM work only. The scheduler restores the real
+    /// count after a preemption-by-recompute (the re-encode is local).
     pub mm_tokens: u32,
     /// Total prompt tokens (the amortization denominator).
     pub prefill_total: u32,

@@ -241,6 +241,37 @@ mod tests {
         assert_eq!(overlap.execute(&plan()), serial.execute(&plan()));
     }
 
+    /// Pool-mode contract: a prefill item whose encode ran elsewhere
+    /// (`mm_tokens: 0`, no EncodeItem) charges exactly the text-equivalent
+    /// LLM cost — the encoder component is split out of `execute` and
+    /// billed at the pool instead.
+    #[test]
+    fn preencoded_prefill_charges_no_encoder_work() {
+        let p = by_name("llava-7b").unwrap();
+        let item = |mm: u32| StepPlan {
+            encodes: vec![],
+            prefills: vec![PrefillItem {
+                req_id: 1,
+                ctx_before: 0,
+                chunk_tokens: 769,
+                last_chunk: true,
+                text_tokens: 40,
+                mm_tokens: mm,
+                prefill_total: 769,
+            }],
+            decodes: vec![],
+        };
+        let mut e = SimEngine::new(&p);
+        let (enc, pf, _) = e.plan_cost(&item(0));
+        assert_eq!(enc, 0.0, "no encoder charge for a pool-encoded prompt");
+        assert!((pf - p.prefill_chunk_time(0, 769)).abs() < 1e-12);
+        // the same prompt with a live local encode owes the amortized
+        // encoder throughput on top
+        let (enc_local, pf_local, _) = e.plan_cost(&item(729));
+        assert!((enc_local - 729.0 / p.encode_tok_per_s).abs() < 1e-12);
+        assert_eq!(pf, pf_local, "LLM-side prefill cost is identical");
+    }
+
     #[test]
     fn overlap_is_noop_for_pure_text_or_pure_encode_iterations() {
         let p = by_name("llava-7b").unwrap().with_encode_overlap(0.0005);

@@ -26,7 +26,7 @@ fn parser() -> Parser {
         .subcommand("trace", "generate a workload trace file")
         .option("config", "TOML config file")
         .option("model", "model profile (Table 1 name or tiny-mllm)")
-        .option("mix", "workload mix: T0 | ML | MH")
+        .option("mix", "workload mix: T0 | ML | MH | VH")
         .option("policy", "fcfs | edf | naive-class | static-priority | naive-aging | tcm")
         .option("rate", "Poisson arrival rate, req/s")
         .option("requests", "number of requests")
@@ -38,6 +38,10 @@ fn parser() -> Parser {
         .option("router", "round-robin | least-work | modality-partition")
         .option("overlap-penalty", "encode-overlap sync penalty, seconds")
         .flag("encode-overlap", "overlap vision encode with prefill/decode")
+        .flag("encoder-pool", "disaggregated encoder pool (multimodal encodes leave the replicas)")
+        .option("pool-slots", "encoder slots in the pool (rocks capped to half)")
+        .option("pool-aging", "rock aging deadline in the pool queue, seconds")
+        .option("migration-cost", "embedding transfer cost, seconds per 1000 vision tokens")
         .option("out", "output path (trace subcommand)")
         .option("artifacts", "artifacts directory (serve subcommand)")
 }
@@ -96,7 +100,7 @@ fn cmd_simulate(cfg: &ServeConfig) {
         cfg.slo_scale,
         cfg.memory_frac * 100.0
     );
-    if cfg.cluster.replicas > 1 {
+    if cfg.cluster.replicas > 1 || cfg.pool.enabled {
         return cmd_simulate_cluster(cfg);
     }
     let r = experiments::run_sim(cfg);
@@ -118,8 +122,11 @@ fn cmd_simulate(cfg: &ServeConfig) {
 
 fn cmd_simulate_cluster(cfg: &ServeConfig) {
     println!(
-        "cluster: replicas={} router={} encode_overlap={}",
-        cfg.cluster.replicas, cfg.cluster.router, cfg.cluster.encode_overlap
+        "cluster: replicas={} router={} encode_overlap={} encoder_pool={}",
+        cfg.cluster.replicas,
+        cfg.cluster.router,
+        cfg.cluster.encode_overlap,
+        if cfg.pool.enabled { format!("{} slots", cfg.pool.slots) } else { "off".into() }
     );
     let cr = experiments::run_cluster(cfg);
     report::header("merged results by class");
@@ -138,6 +145,26 @@ fn cmd_simulate_cluster(cfg: &ServeConfig) {
             rs.dropped,
             rs.busy_time_s,
             cr.utilization(rs.replica) * 100.0
+        );
+    }
+    if let Some(p) = &cr.pool {
+        report::header("encoder pool");
+        println!(
+            "slots={} rock_cap={} encodes={} util={:.1}% aged_promotions={} \
+             rock_wait_max={:.2}s",
+            p.slots,
+            p.rock_cap,
+            p.stats.encodes,
+            cr.pool_utilization() * 100.0,
+            p.stats.aged_promotions,
+            p.stats.rock_wait_max_s
+        );
+        println!(
+            "migrations={} ({:.1}% of handoffs) migrated={} vision tokens ({:.1} MB)",
+            p.stats.migrations,
+            100.0 * p.stats.migrations as f64 / p.stats.encodes.max(1) as f64,
+            p.stats.migrated_mm_tokens,
+            p.stats.migrated_bytes as f64 / 1e6
         );
     }
     println!(

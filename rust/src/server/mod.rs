@@ -87,6 +87,12 @@ impl Server {
     /// driven by one leader thread through the cluster stepping API. The
     /// replicas are built inside the leader thread (a [`Cluster`] holds
     /// non-Send trait objects), so only the config crosses the boundary.
+    /// With `cfg.pool.enabled` the leader serves through the
+    /// disaggregated encoder pool: multimodal submissions queue at the
+    /// pool and are late-bound to a decode replica at encode completion;
+    /// the cluster stepping verbs hide all of it, so the leader loop is
+    /// unchanged (the fleet never reports `Drained` while encodes are
+    /// queued or in flight, so shutdown still drains every request).
     pub fn spawn_cluster(cfg: ServeConfig) -> Server {
         let (tx, rx) = mpsc::channel::<ServerMsg>();
         let join = std::thread::spawn(move || cluster_leader_loop(cfg, rx));
@@ -325,7 +331,9 @@ fn deliver(subscribers: &mut HashMap<u64, Subscriber>, ev: RequestEvent) {
             }
         }
         // internal lifecycle events, not client-visible
-        RequestEvent::Ready { .. } | RequestEvent::Preempted { .. } => {}
+        RequestEvent::Ready { .. }
+        | RequestEvent::Encoded { .. }
+        | RequestEvent::Preempted { .. } => {}
     }
 }
 
@@ -384,6 +392,39 @@ mod tests {
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 6, "both replicas served their share");
+        for rx in rxs {
+            let events: Vec<_> = rx.iter().collect();
+            assert_eq!(events.len(), 2);
+            assert!(matches!(events[0], ResponseEvent::FirstToken { .. }));
+            assert!(matches!(events[1], ResponseEvent::Finished { .. }));
+        }
+    }
+
+    /// The pool-aware leader: multimodal submissions flow through the
+    /// encoder pool and still come back finished — nothing is stranded in
+    /// the pool at shutdown, and sand streams alongside.
+    #[test]
+    fn cluster_server_roundtrip_with_encoder_pool() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.cluster.replicas = 2;
+        cfg.cluster.router = "round-robin".into();
+        cfg.pool.enabled = true;
+        cfg.pool.slots = 2;
+        let server = Server::spawn_cluster(cfg);
+        let h = server.handle();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            rxs.push(h.submit(text_req(id, 64, 4)));
+        }
+        for id in 3..6u64 {
+            let mut req = text_req(id, 40, 4);
+            req.modality = Modality::Image;
+            req.mm_tokens = 729;
+            rxs.push(h.submit(req));
+        }
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 6, "pool handoffs all completed");
         for rx in rxs {
             let events: Vec<_> = rx.iter().collect();
             assert_eq!(events.len(), 2);

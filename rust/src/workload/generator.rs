@@ -19,6 +19,10 @@ pub const MIX_T0: Mix = Mix { name: "T0", text: 1.0, image: 0.0, video: 0.0 };
 pub const MIX_ML: Mix = Mix { name: "ML", text: 0.90, image: 0.07, video: 0.03 };
 /// Heavy multimodal mix: "significantly increases their share".
 pub const MIX_MH: Mix = Mix { name: "MH", text: 0.55, image: 0.30, video: 0.15 };
+/// Video-heavy mix: rocks dominate the offered work — the stress case
+/// for encoder disaggregation (a per-replica encoder spends most of its
+/// replica's engine time on video encodes under this mix).
+pub const MIX_VH: Mix = Mix { name: "VH", text: 0.40, image: 0.20, video: 0.40 };
 
 impl Mix {
     pub fn by_name(name: &str) -> Option<Mix> {
@@ -26,6 +30,7 @@ impl Mix {
             "T0" => Some(MIX_T0),
             "ML" => Some(MIX_ML),
             "MH" => Some(MIX_MH),
+            "VH" => Some(MIX_VH),
             _ => None,
         }
     }
@@ -249,6 +254,17 @@ mod tests {
         assert!((frac(Modality::Text) - 0.55).abs() < 0.02);
         assert!((frac(Modality::Image) - 0.30).abs() < 0.02);
         assert!((frac(Modality::Video) - 0.15).abs() < 0.02);
+    }
+
+    #[test]
+    fn vh_mix_is_video_dominant_and_named() {
+        assert_eq!(Mix::by_name("vh"), Some(MIX_VH));
+        let reqs = gen(MIX_VH, 12).generate(20_000);
+        let frac = |m: Modality| {
+            reqs.iter().filter(|r| r.modality == m).count() as f64 / reqs.len() as f64
+        };
+        assert!((frac(Modality::Video) - 0.40).abs() < 0.02);
+        assert!((frac(Modality::Text) - 0.40).abs() < 0.02);
     }
 
     #[test]

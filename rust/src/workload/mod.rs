@@ -5,10 +5,11 @@
 //! * LLaVA-Instruct analogue — one image per request, short question;
 //! * LLaVA-Video analogue — one video per request, lognormal duration;
 //! * Poisson arrivals at a configurable rate;
-//! * mixes T0 (text-only), ML (light multimodal), MH (heavy multimodal).
+//! * mixes T0 (text-only), ML (light multimodal), MH (heavy multimodal),
+//!   VH (video-heavy — the encoder-pool stress case).
 
 pub mod generator;
 pub mod trace;
 
-pub use generator::{Mix, WorkloadGen, MIX_MH, MIX_ML, MIX_T0};
+pub use generator::{Mix, WorkloadGen, MIX_MH, MIX_ML, MIX_T0, MIX_VH};
 pub use trace::{load_trace, save_trace};

@@ -4,6 +4,9 @@
 //! partition routing beats round-robin on sand TTFT p99 at ≥2 replicas,
 //! and encode-overlap strictly lowers multimodal TTFT on the same seed.
 
+mod common;
+
+use common::assert_reports_bit_identical;
 use tcm_serve::cluster::Cluster;
 use tcm_serve::config::{ServeConfig, ROUTERS};
 use tcm_serve::coordinator::{RequestEvent, StepOutcome};
@@ -23,31 +26,6 @@ fn cluster_cfg(replicas: usize, router: &str) -> ServeConfig {
     c.cluster.replicas = replicas;
     c.cluster.router = router.into();
     c
-}
-
-fn assert_reports_bit_identical(label: &str, a: &Report, b: &Report) {
-    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome counts");
-    assert_eq!(a.failed.len(), b.failed.len(), "{label}: failure counts");
-    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
-        assert_eq!(x.id, y.id, "{label}: outcome order");
-        assert_eq!(
-            x.first_token.to_bits(),
-            y.first_token.to_bits(),
-            "{label}: req {} first_token",
-            x.id
-        );
-        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{label}: req {} finish", x.id);
-        assert_eq!(x.preemptions, y.preemptions, "{label}: req {} preemptions", x.id);
-    }
-    for (x, y) in a.failed.iter().zip(&b.failed) {
-        assert_eq!(x.id, y.id, "{label}: failed order");
-        assert_eq!(
-            x.dropped_at.to_bits(),
-            y.dropped_at.to_bits(),
-            "{label}: req {} dropped_at",
-            x.id
-        );
-    }
 }
 
 /// The acceptance regression: one replica behind a round-robin router

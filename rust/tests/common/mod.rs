@@ -1,0 +1,33 @@
+//! Helpers shared across the integration-test binaries (`mod common;`).
+
+use tcm_serve::metrics::Report;
+
+/// Assert two reports are bit-for-bit identical: same outcomes in the
+/// same order with bit-equal timestamps and preemption counts, and the
+/// same failures. This is the repo's definition of "bit-identical" for
+/// cluster/pool equivalence claims — one copy, so every suite pins the
+/// same thing.
+pub fn assert_reports_bit_identical(label: &str, a: &Report, b: &Report) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome counts");
+    assert_eq!(a.failed.len(), b.failed.len(), "{label}: failure counts");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: outcome order");
+        assert_eq!(
+            x.first_token.to_bits(),
+            y.first_token.to_bits(),
+            "{label}: req {} first_token",
+            x.id
+        );
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{label}: req {} finish", x.id);
+        assert_eq!(x.preemptions, y.preemptions, "{label}: req {} preemptions", x.id);
+    }
+    for (x, y) in a.failed.iter().zip(&b.failed) {
+        assert_eq!(x.id, y.id, "{label}: failed order");
+        assert_eq!(
+            x.dropped_at.to_bits(),
+            y.dropped_at.to_bits(),
+            "{label}: req {} dropped_at",
+            x.id
+        );
+    }
+}

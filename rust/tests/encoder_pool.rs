@@ -1,0 +1,345 @@
+//! Disaggregated encoder-pool contracts (tentpole acceptance tests):
+//!
+//! * pool **off** is inert — every pool knob is dead config and the
+//!   cluster reproduces its pre-pool (PR 3) results bit for bit, for
+//!   every router (the PR 3 suite in `tests/cluster.rs` additionally
+//!   pins that path against the bare scheduler);
+//! * pool **on** is deterministic per router, conserves every request
+//!   across the pool→replica handoff, and beats per-replica encoders on
+//!   sand mean TTFT at 4 replicas under the video-heavy mix;
+//! * migration cost applies only across hosts, with exact token/byte
+//!   conservation;
+//! * rocks saturated out of the pool by a pebble flood start encoding
+//!   within the aging deadline plus one in-flight encode (and the bound
+//!   is genuinely exercised, not vacuous);
+//! * the stepped pool cluster equals the batch `run`.
+
+mod common;
+
+use common::assert_reports_bit_identical;
+use tcm_serve::cluster::pool::BYTES_PER_MM_TOKEN;
+use tcm_serve::cluster::Cluster;
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::coordinator::{RequestEvent, StepOutcome};
+use tcm_serve::experiments::{make_trace, run_cluster_with_trace};
+use tcm_serve::request::{Modality, Request};
+
+fn pool_cfg(replicas: usize, router: &str, slots: usize) -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = "fcfs".into();
+    c.mix = "MH".into();
+    c.rate = 1.5 * replicas as f64;
+    c.num_requests = 120 * replicas;
+    c.seed = 29;
+    c.cluster.replicas = replicas;
+    c.cluster.router = router.into();
+    c.pool.enabled = true;
+    c.pool.slots = slots;
+    c
+}
+
+fn image(id: u64, arrival: f64) -> Request {
+    Request {
+        id,
+        arrival,
+        modality: Modality::Image,
+        text_tokens: 40,
+        mm_tokens: 729,
+        video_duration_s: 0.0,
+        output_tokens: 4,
+    }
+}
+
+fn video(id: u64, arrival: f64) -> Request {
+    Request {
+        id,
+        arrival,
+        modality: Modality::Video,
+        text_tokens: 40,
+        mm_tokens: 17_640,
+        video_duration_s: 45.0,
+        output_tokens: 4,
+    }
+}
+
+/// Acceptance: `--encoder-pool` off ⇒ bit-identical `ClusterReport`
+/// (including makespan) whatever the pool knobs say, for every router —
+/// the pool's config surface is completely inert until enabled. Together
+/// with `tests/cluster.rs` (which pins the pool-off cluster against the
+/// bare scheduler, stepped-vs-batch, and per-router determinism), this
+/// proves pool-off is exactly the PR 3 behavior.
+#[test]
+fn disabled_pool_is_inert_for_every_router() {
+    for router in ROUTERS {
+        let mut base = pool_cfg(2, router, 2);
+        base.pool.enabled = false;
+        let profile = tcm_serve::model::by_name(&base.model).unwrap();
+        let trace = make_trace(&base, &profile);
+
+        let mut exotic = base.clone();
+        exotic.pool.slots = 7;
+        exotic.pool.aging_deadline_s = 0.01;
+        exotic.pool.migration_cost_s_per_ktok = 9.9;
+
+        let a = run_cluster_with_trace(&base, trace.clone());
+        let b = run_cluster_with_trace(&exotic, trace);
+        assert_reports_bit_identical(router, &a.report, &b.report);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{router}: makespan");
+        assert!(a.pool.is_none() && b.pool.is_none(), "{router}: no pool stats when off");
+    }
+}
+
+/// Bit-identical reruns in pool mode for every router: late binding,
+/// aging and migration introduce no nondeterminism.
+#[test]
+fn pool_mode_is_deterministic_per_router() {
+    for router in ROUTERS {
+        let cfg = pool_cfg(3, router, 3);
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+        let a = run_cluster_with_trace(&cfg, trace.clone());
+        let b = run_cluster_with_trace(&cfg, trace);
+        assert_reports_bit_identical(router, &a.report, &b.report);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{router}: makespan");
+        let (pa, pb) = (a.pool.unwrap(), b.pool.unwrap());
+        assert_eq!(pa.stats.encodes, pb.stats.encodes, "{router}: encode counts");
+        assert_eq!(pa.stats.migrations, pb.stats.migrations, "{router}: migrations");
+        assert_eq!(
+            pa.stats.migrated_mm_tokens, pb.stats.migrated_mm_tokens,
+            "{router}: migrated tokens"
+        );
+    }
+}
+
+/// Conservation across the pool→replica handoff: every request is routed
+/// exactly once, accounted for in the merged report, and every
+/// multimodal request is encoded by the pool exactly once.
+#[test]
+fn pool_conserves_requests_across_routers_and_scales() {
+    for replicas in [1usize, 2, 4] {
+        for router in ROUTERS {
+            let cfg = pool_cfg(replicas, router, 2);
+            let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+            let trace = make_trace(&cfg, &profile);
+            let n = trace.len();
+            let mm = trace.iter().filter(|r| r.mm_tokens > 0).count() as u64;
+            let cr = run_cluster_with_trace(&cfg, trace);
+            assert_eq!(cr.report.total(), n, "{router}/r{replicas}: lost requests");
+            let routed: usize = cr.per_replica.iter().map(|r| r.routed).sum();
+            assert_eq!(routed, n, "{router}/r{replicas}: routing not conservative");
+            let p = cr.pool.as_ref().unwrap();
+            assert_eq!(p.stats.encodes, mm, "{router}/r{replicas}: pool encode count");
+            assert_eq!(
+                p.stats.enqueued_pebbles + p.stats.enqueued_rocks,
+                mm,
+                "{router}/r{replicas}: pool admission count"
+            );
+            let dropped: u64 = cr.per_replica.iter().map(|r| r.dropped).sum();
+            assert_eq!(
+                dropped as usize,
+                cr.report.failed.len(),
+                "{router}/r{replicas}: failed != dropped"
+            );
+        }
+    }
+}
+
+/// The headline acceptance claim: at 4 replicas under the video-heavy
+/// mix, the disaggregated pool beats per-replica encoders on sand (text)
+/// mean TTFT — rock encodes no longer serialize with sand iterations
+/// inside the replica engines (deterministic seed; `fig_encoder_pool`
+/// shows the same A/B).
+#[test]
+fn pool_beats_per_replica_encoders_on_sand_mean_ttft_at_4_replicas() {
+    let mut local = ServeConfig::default();
+    local.policy = "fcfs".into();
+    local.mix = "VH".into();
+    // ~0.75 req/s per replica: with per-replica encoders the video
+    // encode work alone pushes each replica past saturation; with the
+    // pool the same replicas run well under capacity
+    local.rate = 3.0;
+    local.num_requests = 400;
+    local.seed = 61;
+    local.cluster.replicas = 4;
+    local.cluster.router = "round-robin".into();
+    let profile = tcm_serve::model::by_name(&local.model).unwrap();
+    let trace = make_trace(&local, &profile);
+
+    let mut pooled = local.clone();
+    pooled.pool.enabled = true;
+    pooled.pool.slots = 6; // ~1.2 videos/s × ~3.4 s pool work each
+
+    let off = run_cluster_with_trace(&local, trace.clone());
+    let on = run_cluster_with_trace(&pooled, trace);
+
+    let sand_off = off.report.by_modality(Modality::Text).avg_ttft;
+    let sand_on = on.report.by_modality(Modality::Text).avg_ttft;
+    assert!(
+        sand_on < sand_off,
+        "pool sand mean ttft {sand_on:.3}s !< per-replica {sand_off:.3}s"
+    );
+    let p = on.pool.as_ref().unwrap();
+    assert!(p.stats.encodes > 0 && on.pool_utilization() > 0.0, "pool actually worked");
+}
+
+/// Migration cost applies only when the encode slot's host differs from
+/// the late-bound decode replica: with a single decode replica every
+/// slot is co-hosted with it, so the migration knob is provably dead —
+/// runs at cost 0 and at an absurd cost are bit-identical and report
+/// zero migrations.
+#[test]
+fn migration_cost_only_applies_across_hosts() {
+    let mut a = pool_cfg(1, "round-robin", 2);
+    a.pool.migration_cost_s_per_ktok = 0.0;
+    let mut b = a.clone();
+    b.pool.migration_cost_s_per_ktok = 5.0;
+    let profile = tcm_serve::model::by_name(&a.model).unwrap();
+    let trace = make_trace(&a, &profile);
+
+    let ra = run_cluster_with_trace(&a, trace.clone());
+    let rb = run_cluster_with_trace(&b, trace);
+    assert_reports_bit_identical("migration-dead-knob", &ra.report, &rb.report);
+    assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+    assert_eq!(ra.pool.as_ref().unwrap().stats.migrations, 0);
+    assert_eq!(rb.pool.as_ref().unwrap().stats.migrations, 0);
+    assert_eq!(rb.pool.as_ref().unwrap().stats.migrated_bytes, 0);
+}
+
+/// Exact end-to-end migration conservation. One encode slot (host =
+/// replica 0), two decode replicas, a pure-image trace (no sand to
+/// perturb the round-robin counter): handoffs leave the pool in arrival
+/// order and alternate 0, 1, 0, 1, …, so exactly every second handoff
+/// crosses hosts. Token and byte counters must match that to the digit.
+#[test]
+fn migrated_tokens_and_bytes_are_exactly_conserved() {
+    let mut cfg = pool_cfg(2, "round-robin", 1);
+    cfg.pool.migration_cost_s_per_ktok = 0.002;
+    let n = 10u64;
+    let trace: Vec<Request> = (0..n).map(|id| image(id, id as f64)).collect();
+
+    let cr = run_cluster_with_trace(&cfg, trace);
+    assert_eq!(cr.report.total(), n as usize);
+    let p = cr.pool.as_ref().unwrap();
+    assert_eq!(p.stats.encodes, n);
+    // round-robin over 2 replicas with host pinned to 0: handoffs 2, 4,
+    // … land on replica 1 and migrate — exactly n/2 migrations
+    assert_eq!(p.stats.migrations, n / 2, "alternating late binding");
+    assert_eq!(p.stats.migrated_mm_tokens, (n / 2) * 729);
+    assert_eq!(p.stats.migrated_bytes, (n / 2) * 729 * BYTES_PER_MM_TOKEN);
+}
+
+/// Starvation regression: a pebble flood saturates the pool, and rocks
+/// still start encoding within `aging_deadline + max in-flight encode`.
+/// Non-vacuous: the flood is provisioned past pool capacity, so the
+/// rocks *cannot* start before aging promotes them — the run must report
+/// both aged promotions and a max rock wait at or past the deadline.
+#[test]
+fn rock_encode_start_bounded_by_aging_under_pebble_flood() {
+    let mut cfg = pool_cfg(2, "round-robin", 2); // rock cap 1
+    cfg.pool.aging_deadline_s = 1.0;
+    let mut trace = Vec::new();
+    let mut id = 0u64;
+    // 600 images over 30 s: 20 pebbles/s offered vs ~12.4/s of pool
+    // capacity (2 slots / 0.161 s per image encode) — the pebble lane
+    // queue grows for the whole run
+    for k in 0..600u64 {
+        trace.push(image(id, k as f64 * 0.05));
+        id += 1;
+    }
+    // two rocks, spaced so at most one is queued or in flight at a time
+    trace.push(video(id, 2.0));
+    id += 1;
+    trace.push(video(id, 10.0));
+
+    let cr = run_cluster_with_trace(&cfg, trace);
+    let p = cr.pool.as_ref().unwrap();
+    assert_eq!(p.stats.enqueued_rocks, 2);
+    assert_eq!(p.stats.encodes, 602, "nothing starved out entirely");
+    assert_eq!(
+        p.stats.aged_promotions, 2,
+        "both rocks must have been admitted via aging over waiting pebbles"
+    );
+    assert!(
+        p.stats.rock_wait_max_s >= cfg.pool.aging_deadline_s,
+        "bound never exercised: max rock wait {:.3}s under the {:.1}s deadline",
+        p.stats.rock_wait_max_s,
+        cfg.pool.aging_deadline_s
+    );
+    let bound = cfg.pool.aging_deadline_s + p.stats.max_encode_s + 1e-6;
+    assert!(
+        p.stats.rock_wait_max_s <= bound,
+        "rock waited {:.3}s, past the aging bound {bound:.3}s",
+        p.stats.rock_wait_max_s
+    );
+}
+
+/// Pool-mode stepping API == batch `run`: driving the cluster step by
+/// step (the server-leader path), with invariants checked as it goes and
+/// events accounted, lands on the identical report — and the event
+/// stream shows at least one encode per multimodal request flowing
+/// across the handoff boundary.
+#[test]
+fn stepped_pool_cluster_equals_batch_run() {
+    let cfg = pool_cfg(2, "round-robin", 2);
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+    let mm = trace.iter().filter(|r| r.mm_tokens > 0).count();
+
+    let batch = run_cluster_with_trace(&cfg, trace.clone());
+
+    let mut cluster = Cluster::new(&cfg);
+    for req in trace {
+        cluster.inject(req);
+    }
+    let mut finished_events = 0usize;
+    let mut dropped_events = 0usize;
+    let mut encoded_events = 0usize;
+    let mut steps = 0u64;
+    loop {
+        match cluster.step() {
+            StepOutcome::Executed { dt } => assert!(dt >= 0.0),
+            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => cluster.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        for ev in cluster.take_events() {
+            match ev {
+                RequestEvent::Finished { .. } => finished_events += 1,
+                RequestEvent::Dropped { .. } => dropped_events += 1,
+                RequestEvent::Encoded { .. } => encoded_events += 1,
+                _ => {}
+            }
+        }
+        if steps % 64 == 0 {
+            cluster.check_invariants().unwrap_or_else(|e| panic!("after step {steps}: {e}"));
+        }
+        steps += 1;
+        assert!(steps < 5_000_000, "stepping did not drain");
+    }
+    for ev in cluster.take_events() {
+        match ev {
+            RequestEvent::Finished { .. } => finished_events += 1,
+            RequestEvent::Dropped { .. } => dropped_events += 1,
+            RequestEvent::Encoded { .. } => encoded_events += 1,
+            _ => {}
+        }
+    }
+    cluster.check_invariants().unwrap();
+    let stepped = cluster.report();
+    assert_eq!(stepped.report.total(), n);
+    assert_eq!(finished_events, stepped.report.outcomes.len());
+    assert_eq!(dropped_events, stepped.report.failed.len());
+    assert!(
+        encoded_events >= mm,
+        "every multimodal request encodes at least once: {encoded_events} < {mm}"
+    );
+    assert_reports_bit_identical("stepped-vs-batch", &stepped.report, &batch.report);
+    assert_eq!(stepped.makespan.to_bits(), batch.makespan.to_bits(), "makespan");
+    assert_eq!(
+        stepped.pool.as_ref().unwrap().stats.migrations,
+        batch.pool.as_ref().unwrap().stats.migrations,
+        "migration accounting"
+    );
+}

@@ -106,7 +106,7 @@ fn events_consistent(policy: &str, report: &Report, events: &[RequestEvent]) -> 
             RequestEvent::FirstToken { .. } => firsts += 1,
             RequestEvent::Finished { .. } => finishes += 1,
             RequestEvent::Dropped { .. } => drops += 1,
-            RequestEvent::Preempted { .. } => {}
+            RequestEvent::Encoded { .. } | RequestEvent::Preempted { .. } => {}
         }
     }
     if finishes != report.outcomes.len() {
