@@ -13,7 +13,7 @@ fn main() {
     let mut cfg = ServeConfig::default(); // llava-7b, MH, SLO 5x
     cfg.policy = "fcfs".into();
     cfg.rate = 6.0; // 1.5 req/s per replica
-    cfg.num_requests = 600;
+    cfg.num_requests = tcm_serve::util::example_requests(600);
     cfg.seed = 42;
     cfg.cluster.replicas = 4;
 

@@ -16,7 +16,7 @@ fn main() {
     cfg.policy = "fcfs".into();
     cfg.mix = "VH".into(); // 40% text, 20% image, 40% video
     cfg.rate = 3.0;
-    cfg.num_requests = 400;
+    cfg.num_requests = tcm_serve::util::example_requests(400);
     cfg.seed = 61;
     cfg.cluster.replicas = 4;
     cfg.cluster.router = "round-robin".into();

@@ -11,7 +11,7 @@ use tcm_serve::request::Class;
 
 fn main() {
     let mut cfg = ServeConfig::default();
-    cfg.num_requests = 300;
+    cfg.num_requests = tcm_serve::util::example_requests(300);
     cfg.seed = 1234;
     let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
     let trace = make_trace(&cfg, &profile);

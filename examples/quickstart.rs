@@ -10,7 +10,7 @@ use tcm_serve::report;
 
 fn main() {
     let mut cfg = ServeConfig::default(); // llava-7b, MH, 2 req/s, SLO 5x
-    cfg.num_requests = 400;
+    cfg.num_requests = tcm_serve::util::example_requests(400);
     cfg.seed = 42;
 
     let profile = tcm_serve::model::by_name(&cfg.model).unwrap();

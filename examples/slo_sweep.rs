@@ -11,7 +11,7 @@ use tcm_serve::request::Class;
 
 fn main() {
     let mut cfg = ServeConfig::default();
-    cfg.num_requests = 250;
+    cfg.num_requests = tcm_serve::util::example_requests(250);
     cfg.policy = "tcm".into();
     cfg.seed = 99;
 
@@ -37,7 +37,7 @@ fn main() {
     for scale in [2.5, 5.0, 10.0] {
         let mut c = cfg.clone();
         c.slo_scale = scale;
-        let g = goodput(&c, 0.9, 150);
+        let g = goodput(&c, 0.9, tcm_serve::util::example_requests(150));
         println!("slo x{scale:<5} goodput ≈ {g:.2} req/s");
     }
     println!("\nExpected shape (Fig 15): violations/severity fall and goodput rises");

@@ -78,7 +78,7 @@ fn replay_stepped(cfg: &ServeConfig, trace: &[Request]) -> (Report, u64, u64) {
 
 fn main() {
     let mut cfg = ServeConfig::default();
-    cfg.num_requests = 300;
+    cfg.num_requests = tcm_serve::util::example_requests(300);
     cfg.seed = 77;
 
     let trace = match std::env::args().nth(1) {

@@ -22,6 +22,7 @@ fn req(p: &tcm_serve::model::ModelProfile, m: Modality) -> Request {
         mm_tokens: mm,
         video_duration_s: dur,
         output_tokens: 0,
+        ..Request::default()
     }
 }
 

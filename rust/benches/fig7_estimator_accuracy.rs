@@ -34,6 +34,7 @@ fn main() {
                         mm_tokens: if m == Modality::Text { 0 } else { s.prefill_tokens },
                         video_duration_s: 0.0,
                         output_tokens: 0,
+                        ..Request::default()
                     };
                     est.estimate(&r).prefill_s >= s.encode_s + s.prefill_s
                 })

@@ -70,6 +70,7 @@ fn main() {
         mm_tokens: 9000,
         video_duration_s: 45.0,
         output_tokens: 100,
+        ..Request::default()
     };
     let r = bench("impact_estimate_1k", || {
         let mut acc = 0.0;

@@ -1,0 +1,332 @@
+//! The serving-backend abstraction: one stepping contract for every
+//! engine topology.
+//!
+//! [`Scheduler`] (one engine) and [`Cluster`] (N replicas, optionally
+//! behind the disaggregated encoder pool) grew the same verbs across
+//! PR 1–4 — inject, step, advance_to, take_events, take_finished,
+//! drop_blocked, drain — but with no shared trait, so the server carried
+//! two near-duplicate leader loops and every driver branched on
+//! single-vs-cluster at the call site. [`ServeBackend`] captures the
+//! contract once:
+//!
+//! * the **server leader** ([`crate::server::Server::spawn`]) runs one
+//!   generic loop over `Box<dyn ServeBackend>`;
+//! * **drivers** (`main`, `experiments::run_serve`, benches, examples)
+//!   call [`build`] and stop caring which topology the config names;
+//! * the **request lifecycle** (cancellation, deadlines) has one surface:
+//!   [`ServeBackend::cancel`] works identically against both backends,
+//!   and both prove the same conservation invariant
+//!   (`finished + failed + cancelled == submitted`).
+//!
+//! Semantics every implementation must honor:
+//!
+//! * `step` is re-entrant and deterministic for a fixed injection/cancel
+//!   sequence; `advance_to` is monotone.
+//! * `take_events` drains the per-iteration [`RequestEvent`]s; every
+//!   request emits exactly one terminal event (`Finished` xor `Dropped`
+//!   xor `Cancelled`).
+//! * `take_finished` retires terminal state into a partial [`Report`];
+//!   long-lived callers merge partials so backend memory stays flat.
+//! * `cancel` works in any live state and releases KV/encoder resources
+//!   at the cancel instant; cancelling an unknown or already-terminal id
+//!   returns `false` and changes nothing.
+
+use crate::cluster::Cluster;
+use crate::config::ServeConfig;
+use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use crate::engine::sim_engine::SimEngine;
+use crate::engine::Engine;
+use crate::metrics::Report;
+use crate::policies::build_policy;
+use crate::request::Request;
+
+/// The stepping contract shared by [`Scheduler`] and [`Cluster`].
+///
+/// Not `Send` by design: backends may hold non-Send engines, so the
+/// server builds its backend *inside* the leader thread from a Send
+/// factory (see [`crate::server::Server::spawn`]).
+pub trait ServeBackend {
+    /// Topology label ("scheduler" / "cluster") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Hand a request over; it becomes schedulable once the backend
+    /// clock reaches its arrival (cluster backends route it per their
+    /// router/pool configuration).
+    fn inject(&mut self, req: Request);
+
+    /// Admit a request whose vision encode already ran elsewhere, ready
+    /// at `ready_at`. Single-scheduler backends skip CPU preprocessing
+    /// and the local admission encode; the cluster late-binds a decode
+    /// replica with an encode-free ledger charge.
+    fn inject_preencoded(&mut self, req: Request, ready_at: f64);
+
+    /// Cancel a request in any live state (pending, preprocessing,
+    /// pool-queued, waiting, running): resources are released at the
+    /// current clock and [`RequestEvent::Cancelled`] is the request's
+    /// terminal event. `false` when unknown or already terminal.
+    fn cancel(&mut self, id: u64) -> bool;
+
+    /// One scheduling round; see [`StepOutcome`] for the caller's
+    /// follow-up obligations.
+    fn step(&mut self) -> StepOutcome;
+
+    /// Move the backend clock forward (monotone; never rewinds).
+    fn advance_to(&mut self, t: f64);
+
+    /// Drain the request events emitted since the last call.
+    fn take_events(&mut self) -> Vec<RequestEvent>;
+
+    /// Retire terminal request state into a partial [`Report`].
+    fn take_finished(&mut self) -> Report;
+
+    /// Fail every terminally blocked request (shutdown/drain guard).
+    fn drop_blocked(&mut self);
+
+    /// The backend clock (the fleet-wide maximum for clusters).
+    fn now(&self) -> f64;
+
+    /// Requests the backend still owes work (non-terminal, including
+    /// pending arrivals and pool occupancy).
+    fn active_requests(&self) -> usize;
+
+    /// Structural consistency invariants (property tests).
+    fn check_invariants(&self) -> Result<(), String>;
+
+    /// Batch driver: run a whole trace to completion with each backend's
+    /// arrival-faithful semantics (the cluster advances replicas to each
+    /// arrival before routing it, so load-aware routers observe the
+    /// fleet as it stood at that moment) and return the merged report,
+    /// id-sorted. Terminal state already handed out via `take_finished`
+    /// is not re-reported.
+    fn run_trace(&mut self, trace: Vec<Request>) -> Report;
+
+    /// Step to completion through the public verbs and return everything
+    /// that turned terminal, id-sorted — the drain-to-[`Report`] used by
+    /// drivers that injected requests themselves. Events are discarded
+    /// (batch semantics); drive [`ServeBackend::step`] directly to
+    /// observe them.
+    fn drain_report(&mut self) -> Report {
+        let mut collected = Report::default();
+        loop {
+            match self.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => self.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => self.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => self.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+            self.take_events();
+            collected.merge(self.take_finished());
+        }
+        self.take_events();
+        collected.merge(self.take_finished());
+        collected.sort_by_id();
+        collected
+    }
+
+    /// Human-readable backend detail for the CLI (per-replica rows, pool
+    /// counters, iteration/preemption totals) — what `ClusterReport`
+    /// carries structurally, available without downcasting.
+    fn summary_lines(&self) -> Vec<String>;
+}
+
+impl ServeBackend for Scheduler {
+    fn name(&self) -> &'static str {
+        "scheduler"
+    }
+
+    fn inject(&mut self, req: Request) {
+        Scheduler::inject(self, req);
+    }
+
+    fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        Scheduler::inject_preencoded(self, req, ready_at);
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        Scheduler::cancel(self, id)
+    }
+
+    fn step(&mut self) -> StepOutcome {
+        Scheduler::step(self)
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        Scheduler::advance_to(self, t);
+    }
+
+    fn take_events(&mut self) -> Vec<RequestEvent> {
+        Scheduler::take_events(self)
+    }
+
+    fn take_finished(&mut self) -> Report {
+        Scheduler::take_finished(self)
+    }
+
+    fn drop_blocked(&mut self) {
+        Scheduler::drop_blocked(self);
+    }
+
+    fn now(&self) -> f64 {
+        Scheduler::now(self)
+    }
+
+    fn active_requests(&self) -> usize {
+        Scheduler::active_requests(self)
+    }
+
+    fn check_invariants(&self) -> Result<(), String> {
+        Scheduler::check_invariants(self)
+    }
+
+    fn run_trace(&mut self, trace: Vec<Request>) -> Report {
+        // inject + drain — proven bit-identical to the monolithic
+        // `Scheduler::run` in tests/stepping_api.rs and
+        // tests/backend_api.rs (modulo the canonical id sort).
+        let mut trace = trace;
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for req in trace {
+            Scheduler::inject(self, req);
+        }
+        self.drain_report()
+    }
+
+    fn summary_lines(&self) -> Vec<String> {
+        vec![format!(
+            "iterations={} preemptions={} dropped={} cancelled={} makespan={:.1}s \
+             engine_busy={:.1}s planning={:.1}µs/iter",
+            self.stats.iterations,
+            self.stats.preemptions,
+            self.stats.dropped,
+            self.stats.cancelled,
+            Scheduler::now(self),
+            self.stats.busy_time_s,
+            self.stats.planning_time_s * 1e6 / self.stats.iterations.max(1) as f64
+        )]
+    }
+}
+
+impl ServeBackend for Cluster {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn inject(&mut self, req: Request) {
+        Cluster::inject(self, req);
+    }
+
+    fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        Cluster::inject_preencoded(self, req, ready_at);
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        Cluster::cancel(self, id)
+    }
+
+    fn step(&mut self) -> StepOutcome {
+        Cluster::step(self)
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        Cluster::advance_to(self, t);
+    }
+
+    fn take_events(&mut self) -> Vec<RequestEvent> {
+        Cluster::take_events(self)
+    }
+
+    fn take_finished(&mut self) -> Report {
+        Cluster::take_finished(self)
+    }
+
+    fn drop_blocked(&mut self) {
+        Cluster::drop_blocked(self);
+    }
+
+    fn now(&self) -> f64 {
+        Cluster::now(self)
+    }
+
+    fn active_requests(&self) -> usize {
+        Cluster::active_requests(self)
+    }
+
+    fn check_invariants(&self) -> Result<(), String> {
+        Cluster::check_invariants(self)
+    }
+
+    fn run_trace(&mut self, trace: Vec<Request>) -> Report {
+        // the cluster's batch driver advances every replica to each
+        // arrival's timestamp before routing it — load-aware routers
+        // must see the fleet as it stood at that moment
+        Cluster::run(self, trace).report
+    }
+
+    fn summary_lines(&self) -> Vec<String> {
+        let makespan = Cluster::now(self);
+        let mut lines = Vec::new();
+        let mut max_busy = 0.0f64;
+        let mut sum_busy = 0.0f64;
+        for r in self.replica_stats() {
+            max_busy = max_busy.max(r.busy_time_s);
+            sum_busy += r.busy_time_s;
+            lines.push(format!(
+                "replica {:<3} routed={:<6} iterations={:<8} preempt={:<6} \
+                 dropped={:<5} cancelled={:<5} busy={:>9.1}s util={:>5.1}%",
+                r.replica,
+                r.routed,
+                r.iterations,
+                r.preemptions,
+                r.dropped,
+                r.cancelled,
+                r.busy_time_s,
+                if makespan > 0.0 { 100.0 * r.busy_time_s / makespan } else { 0.0 }
+            ));
+        }
+        if let Some(p) = self.pool_snapshot() {
+            lines.push(format!(
+                "pool: slots={} rock_cap={} encodes={} cancelled={} aged_promotions={} \
+                 migrations={} migrated={} tokens ({:.1} MB)",
+                p.slots,
+                p.rock_cap,
+                p.stats.encodes,
+                p.stats.cancelled,
+                p.stats.aged_promotions,
+                p.stats.migrations,
+                p.stats.migrated_mm_tokens,
+                p.stats.migrated_bytes as f64 / 1e6
+            ));
+        }
+        let n = self.replica_count().max(1) as f64;
+        let mean = sum_busy / n;
+        lines.push(format!(
+            "makespan={makespan:.1}s imbalance={:.2} (max/mean busy)",
+            if mean > 0.0 { max_busy / mean } else { 1.0 }
+        ));
+        lines
+    }
+}
+
+/// Build the backend a config describes — a bare [`Scheduler`] over a
+/// simulated engine, or a [`Cluster`] when `cfg.cluster.replicas > 1` or
+/// the encoder pool is enabled. This is the single branch point every
+/// driver shares; a 1-replica no-pool config stays on the scheduler path
+/// (bit-identical to the pre-trait drivers).
+pub fn build(cfg: &ServeConfig) -> Box<dyn ServeBackend> {
+    if cfg.cluster.replicas > 1 || cfg.pool.enabled {
+        Box::new(Cluster::new(cfg))
+    } else {
+        let profile = crate::model::by_name(&cfg.model).expect("validated model name");
+        let policy = build_policy(cfg, &profile);
+        let engine: Box<dyn Engine> = Box::new(SimEngine::new(&cfg.engine_profile()));
+        Box::new(Scheduler::new(cfg.clone(), policy, engine))
+    }
+}
+
+/// Build a single-scheduler backend over an explicit engine (the real
+/// PJRT engine, a test double) — the server's engine-carrying spawn path.
+pub fn scheduler_backend(cfg: &ServeConfig, engine: Box<dyn Engine>) -> Box<dyn ServeBackend> {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model name");
+    let policy = build_policy(cfg, &profile);
+    Box::new(Scheduler::new(cfg.clone(), policy, engine))
+}

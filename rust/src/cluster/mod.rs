@@ -69,6 +69,9 @@ pub struct ReplicaStats {
     pub iterations: u64,
     pub preemptions: u64,
     pub dropped: u64,
+    /// Requests cancelled after being routed to this replica (cluster- or
+    /// pool-level cancellations are not attributed to any replica).
+    pub cancelled: u64,
     /// Virtual seconds the replica's engine was busy.
     pub busy_time_s: f64,
     pub planning_time_s: f64,
@@ -238,6 +241,20 @@ impl Cluster {
         }
     }
 
+    /// Hand the cluster a request whose vision encode already ran
+    /// *outside* the fleet (an upstream encode tier, or a migrating
+    /// peer cluster): a decode replica is late-bound with the ledger as
+    /// it stands, charged the encode-free predicted cost, and admitted
+    /// pre-encoded at `ready_at`. There is no co-hosted slot, so no
+    /// migration-avoidance host preference applies (the out-of-range
+    /// host can never match a candidate).
+    pub fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        let views = self.views();
+        let i = self.checked_replica(self.router.route_handoff(&req, &views, usize::MAX));
+        self.routed[i] += 1;
+        self.replicas[i].inject_preencoded(req, ready_at);
+    }
+
     /// Validate a router's pick: out-of-range is a router bug (debug
     /// assert); release builds clamp rather than skewing onto a panic
     /// path. Shared by arrival routing and handoff late binding so both
@@ -319,9 +336,11 @@ impl Cluster {
                         .pop_completion()
                         .expect("completion was due");
                     // late binding: pick the decode replica NOW, from the
-                    // outstanding-work ledger at encode completion
+                    // outstanding-work ledger at encode completion; the
+                    // slot host wins near-ledger ties when the router's
+                    // pool-aware epsilon is armed (migration avoidance)
                     let views = self.views();
-                    let i = self.checked_replica(self.router.route_handoff(&h.req, &views));
+                    let i = self.checked_replica(self.router.route_handoff(&h.req, &views, h.host));
                     let migration = if i == h.host {
                         0.0
                     } else {
@@ -414,6 +433,91 @@ impl Cluster {
         std::mem::take(&mut self.events)
     }
 
+    /// Cancel a request anywhere in the fleet: still on the pool-mode
+    /// ingress timeline, queued or encoding in the encoder pool, or on
+    /// whichever replica it was routed/bound to. Emits exactly one
+    /// [`RequestEvent::Cancelled`] and records the cancelled outcome;
+    /// requests cancelled before being routed never count in `routed`.
+    /// Returns `false` when the id is unknown or already terminal.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let t = self.now();
+        // not yet dispatched (pool-mode ingress): never routed anywhere
+        if let Some((_, req)) = self.ingress.remove_where(|r| r.id == id) {
+            self.record_cluster_cancel(req, t);
+            return true;
+        }
+        // queued or encoding in the pool: never bound to a replica. The
+        // pool's event contract requires completions due before `t` to
+        // be delivered first — process them exactly like `advance_to`.
+        if self.pool.is_some() {
+            self.process_due(t);
+            if let Some(req) = self.pool.as_mut().expect("pool mode").cancel(id, t) {
+                self.record_cluster_cancel(req, t);
+                return true;
+            }
+        }
+        // Raise every replica clock to the fleet max before trying the
+        // replicas, so a replica-owned cancel is stamped at the same
+        // fleet time the ingress/pool paths use (a lagging replica's
+        // local clock would otherwise under-report `cancelled_at` and
+        // let a Cancelled event time-travel behind already-emitted
+        // events). Clock raise only — due work still runs at its step.
+        for r in &mut self.replicas {
+            r.advance_to(t);
+        }
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].cancel(id) {
+                self.collect_events(i);
+                self.reap_finished();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Record a cancellation that happened before any replica owned the
+    /// request (ingress timeline or encoder pool): the outcome goes
+    /// straight into the merged report with no class (it was never
+    /// classified), and the terminal event is emitted here.
+    fn record_cluster_cancel(&mut self, req: Request, t: f64) {
+        self.collected.cancelled.push(crate::metrics::CancelledOutcome {
+            id: req.id,
+            modality: req.modality,
+            class: None,
+            arrival: req.arrival,
+            cancelled_at: t,
+        });
+        self.events.push(RequestEvent::Cancelled { id: req.id, t });
+    }
+
+    /// Terminal outcomes accumulated since the last call (the merged,
+    /// incrementally-reaped view — the cluster analogue of
+    /// [`Scheduler::take_finished`]). The batch [`Cluster::report`]
+    /// covers only what has not been taken.
+    pub fn take_finished(&mut self) -> Report {
+        self.reap_finished();
+        std::mem::take(&mut self.collected)
+    }
+
+    /// Requests the fleet still owes work: undispatched ingress arrivals,
+    /// pool occupancy, and every replica's active set.
+    pub fn active_requests(&self) -> usize {
+        self.ingress.len()
+            + self.pool.as_ref().map_or(0, |p| p.active())
+            + self.replicas.iter().map(|r| r.active_requests()).sum::<usize>()
+    }
+
+    /// KV blocks currently reserved across the fleet (drain/cancel
+    /// occupancy checks: must return to zero once everything terminal).
+    pub fn kv_blocks_in_use(&self) -> u64 {
+        self.replicas.iter().map(|r| r.kv().used_blocks()).sum()
+    }
+
+    /// Encoder-pool occupancy (0 when the pool is disabled or idle).
+    pub fn pool_active(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.active())
+    }
+
     /// Drop terminally blocked requests on every replica (shutdown /
     /// batch-drain guard, mirroring [`Scheduler::drop_blocked`]).
     pub fn drop_blocked(&mut self) {
@@ -473,15 +577,9 @@ impl Cluster {
         self.drain()
     }
 
-    /// Merged report plus per-replica stats at this moment (reaps any
-    /// not-yet-collected terminal state first).
-    pub fn report(&mut self) -> ClusterReport {
-        self.reap_finished();
-        let mut merged = self.collected.clone();
-        merged.sort_by_id();
-        let makespan = self.now();
-        let per_replica = self
-            .replicas
+    /// Per-replica statistics as they stand (read-only; no reaping).
+    pub fn replica_stats(&self) -> Vec<ReplicaStats> {
+        self.replicas
             .iter()
             .enumerate()
             .map(|(i, r)| ReplicaStats {
@@ -490,16 +588,30 @@ impl Cluster {
                 iterations: r.stats.iterations,
                 preemptions: r.stats.preemptions,
                 dropped: r.stats.dropped,
+                cancelled: r.stats.cancelled,
                 busy_time_s: r.stats.busy_time_s,
                 planning_time_s: r.stats.planning_time_s,
                 clock: r.now(),
             })
-            .collect();
+            .collect()
+    }
+
+    /// Encoder-pool counters (`None` when the pool is disabled).
+    pub fn pool_snapshot(&self) -> Option<PoolSnapshot> {
+        self.pool.as_ref().map(|p| p.snapshot())
+    }
+
+    /// Merged report plus per-replica stats at this moment (reaps any
+    /// not-yet-collected terminal state first).
+    pub fn report(&mut self) -> ClusterReport {
+        self.reap_finished();
+        let mut merged = self.collected.clone();
+        merged.sort_by_id();
         ClusterReport {
             report: merged,
-            per_replica,
-            makespan,
-            pool: self.pool.as_ref().map(|p| p.snapshot()),
+            per_replica: self.replica_stats(),
+            makespan: self.now(),
+            pool: self.pool_snapshot(),
         }
     }
 
@@ -545,7 +657,10 @@ impl Cluster {
     /// terminal requests from the router's ledger.
     fn collect_events(&mut self, i: usize) {
         for ev in self.replicas[i].take_events() {
-            if let RequestEvent::Finished { id, .. } | RequestEvent::Dropped { id, .. } = ev {
+            if let RequestEvent::Finished { id, .. }
+            | RequestEvent::Dropped { id, .. }
+            | RequestEvent::Cancelled { id, .. } = ev
+            {
                 self.router.on_terminal(id);
             }
             self.events.push(ev);

@@ -70,6 +70,8 @@ pub struct PoolStats {
     /// Rocks admitted past the aging deadline while pebbles were still
     /// waiting — each one is an exercised anti-starvation promotion.
     pub aged_promotions: u64,
+    /// Encodes cancelled while queued or in flight ([`EncoderPool::cancel`]).
+    pub cancelled: u64,
     pub rock_in_flight_peak: usize,
     /// Handoffs whose bound replica differed from the slot host.
     pub migrations: u64,
@@ -216,6 +218,49 @@ impl EncoderPool {
         Some(Handoff { req, done_at, host })
     }
 
+    /// Cancel a queued or in-flight encode at pool time `t`. A queued
+    /// entry is removed outright; an in-flight encode frees its slot
+    /// immediately — the unspent tail of the encode is refunded from
+    /// `busy_time_s` and the freed capacity refills from the lanes at
+    /// `max(clock, t)`. Returns the request (so the owning cluster can
+    /// record the cancelled outcome); `None` when `id` is not here. The
+    /// caller must have delivered completions due before `t` first
+    /// (the cluster's `process_due` contract).
+    pub fn cancel(&mut self, id: u64, t: f64) -> Option<Request> {
+        if let Some(pos) = self.pebbles.iter().position(|q| q.req.id == id) {
+            self.stats.cancelled += 1;
+            return self.pebbles.remove(pos).map(|q| q.req);
+        }
+        if let Some(pos) = self.rocks.iter().position(|q| q.req.id == id) {
+            self.stats.cancelled += 1;
+            return self.rocks.remove(pos).map(|q| q.req);
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| matches!(&s.current, Some((r, _)) if r.id == id))?;
+        if t > self.clock {
+            self.clock = t;
+        }
+        let (req, was_rock) = self.slots[slot].current.take().expect("matched in-flight slot");
+        if was_rock {
+            self.rocks_in_flight -= 1;
+        }
+        let refund = (self.slots[slot].busy_until - self.clock).max(0.0);
+        self.stats.busy_time_s -= refund.min(self.stats.busy_time_s);
+        self.stats.cancelled += 1;
+        self.fill_slots();
+        Some(req)
+    }
+
+    /// Requests currently queued or encoding (occupancy view for
+    /// backends and drain checks).
+    pub fn active(&self) -> usize {
+        self.pebbles.len()
+            + self.rocks.len()
+            + self.slots.iter().filter(|s| s.current.is_some()).count()
+    }
+
     /// Record a handoff that actually crossed hosts; returns the transfer
     /// time for `migration_cost_s_per_ktok` seconds per 1000 vision
     /// tokens.
@@ -343,6 +388,7 @@ mod tests {
             mm_tokens: 729,
             video_duration_s: 0.0,
             output_tokens: 8,
+            ..Request::default()
         }
     }
 
@@ -355,6 +401,7 @@ mod tests {
             mm_tokens: 17_640,
             video_duration_s: 45.0,
             output_tokens: 8,
+            ..Request::default()
         }
     }
 
@@ -439,6 +486,37 @@ mod tests {
             "rock start {started} exceeds deadline + max encode"
         );
         assert!(p.stats.aged_promotions >= 1, "aging was never exercised");
+    }
+
+    #[test]
+    fn cancel_frees_queued_and_in_flight_encodes() {
+        let mut p = pool(1);
+        p.enqueue(image(0), 0.0); // takes the slot
+        p.enqueue(image(1), 0.0); // queued behind it
+        p.enqueue(video(2), 0.0); // queued in the rock lane
+        assert_eq!(p.active(), 3);
+
+        // queued cancels remove the entry without touching the slot
+        assert_eq!(p.cancel(1, 0.0).map(|r| r.id), Some(1));
+        assert_eq!(p.cancel(1, 0.0).map(|r| r.id), None, "already gone");
+        assert_eq!(p.active(), 2);
+        p.check_invariants().unwrap();
+
+        // cancelling the in-flight image frees the slot mid-encode: the
+        // queued rock starts immediately and busy time is refunded
+        let busy_before = p.stats.busy_time_s;
+        assert_eq!(p.cancel(0, 0.05).map(|r| r.id), Some(0));
+        assert!(p.stats.busy_time_s < busy_before, "unspent encode tail refunded");
+        let (next, is_rock) = p.slots[0].current.as_ref().expect("rock backfilled the slot");
+        assert_eq!(next.id, 2);
+        assert!(*is_rock);
+        p.check_invariants().unwrap();
+        assert_eq!(p.stats.cancelled, 2);
+
+        let h = p.pop_completion().unwrap();
+        assert_eq!(h.req.id, 2);
+        assert!(p.is_idle());
+        assert_eq!(p.active(), 0, "occupancy returns to zero after cancels + drain");
     }
 
     #[test]

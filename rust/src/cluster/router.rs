@@ -57,12 +57,18 @@ pub trait Router: Send {
     /// completion* time (not arrival) with the fleet views and
     /// outstanding-work ledger as they stand at that moment, so the
     /// decode replica is chosen against current load rather than the
-    /// state when the request arrived. Default: the same decision logic
-    /// as [`Router::route`]. Ledger-keeping routers override this to
+    /// state when the request arrived. `host` is the replica co-hosted
+    /// with the encode slot: binding anywhere else migrates the encoded
+    /// embeddings, so ledger-keeping routers may prefer the host when
+    /// its outstanding work is within their configured epsilon of the
+    /// minimum (pool-aware late binding; epsilon 0 disables the
+    /// preference entirely). Default: the same decision logic as
+    /// [`Router::route`], ignoring `host`. Ledger-keeping routers also
     /// charge the handoff an *encode-free* predicted cost (the pool
     /// already ran the encode); `on_terminal` retires the entry
     /// whichever path assigned it.
-    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView], host: usize) -> usize {
+        let _ = host;
         self.route(req, views)
     }
 
@@ -118,6 +124,29 @@ impl WorkLedger {
         }
         best.map(|(_, i)| i)
     }
+
+    /// Argmin with a migration-aware preference: when `prefer` (the
+    /// encode slot's host) is itself a candidate and its outstanding
+    /// work is within `epsilon` seconds of the minimum, pick it instead
+    /// — the ledger tie is not worth an embedding transfer. `epsilon`
+    /// == 0.0 disables the preference (exact argmin, byte-identical to
+    /// the epsilon-free path).
+    fn argmin_prefer(
+        &self,
+        candidates: impl Iterator<Item = usize> + Clone,
+        prefer: usize,
+        epsilon: f64,
+    ) -> Option<usize> {
+        let best = self.argmin(candidates.clone())?;
+        if epsilon > 0.0
+            && candidates.clone().any(|i| i == prefer)
+            && self.of(prefer) <= self.of(best) + epsilon
+        {
+            Some(prefer)
+        } else {
+            Some(best)
+        }
+    }
 }
 
 /// Load-oblivious baseline: cycle through replicas in submission order.
@@ -154,15 +183,38 @@ impl Router for RoundRobinRouter {
 pub struct LeastWorkRouter {
     est: ImpactEstimator,
     ledger: WorkLedger,
+    /// Pool-aware late binding: prefer the encode slot's host replica on
+    /// handoffs when its ledger is within this many seconds of the
+    /// minimum (0.0 = plain argmin, the pre-epsilon behavior).
+    handoff_epsilon_s: f64,
 }
 
 impl LeastWorkRouter {
     pub fn new(est: ImpactEstimator, replicas: usize) -> LeastWorkRouter {
-        LeastWorkRouter { est, ledger: WorkLedger::new(replicas) }
+        LeastWorkRouter { est, ledger: WorkLedger::new(replicas), handoff_epsilon_s: 0.0 }
     }
 
-    fn route_with_cost(&mut self, req: &Request, views: &[ReplicaView], cost: f64) -> usize {
-        let i = self.ledger.argmin(0..views.len()).expect("views non-empty");
+    /// Builder: set the host-preference epsilon for pool handoffs.
+    pub fn with_handoff_epsilon(mut self, epsilon_s: f64) -> LeastWorkRouter {
+        self.handoff_epsilon_s = epsilon_s;
+        self
+    }
+
+    /// Ledger pick + charge shared by arrival routing and handoff
+    /// binding; `prefer` is `Some(host)` for handoffs (see
+    /// [`WorkLedger::argmin_prefer`]).
+    fn route_with_cost(
+        &mut self,
+        req: &Request,
+        views: &[ReplicaView],
+        cost: f64,
+        prefer: Option<usize>,
+    ) -> usize {
+        let i = match prefer {
+            Some(host) => self.ledger.argmin_prefer(0..views.len(), host, self.handoff_epsilon_s),
+            None => self.ledger.argmin(0..views.len()),
+        }
+        .expect("views non-empty");
         self.ledger.assign(req.id, i, cost);
         i
     }
@@ -175,15 +227,15 @@ impl Router for LeastWorkRouter {
 
     fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
         let cost = self.est.estimate(req).prefill_s;
-        self.route_with_cost(req, views, cost)
+        self.route_with_cost(req, views, cost, None)
     }
 
-    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView], host: usize) -> usize {
         // the pool already ran the encode: charge the ledger LLM prefill
         // only, or every video handoff would carry seconds of phantom
         // encode load until it finishes
         let cost = self.est.estimate_preencoded(req).prefill_s;
-        self.route_with_cost(req, views, cost)
+        self.route_with_cost(req, views, cost, Some(host))
     }
 
     fn on_terminal(&mut self, req_id: u64) {
@@ -222,34 +274,75 @@ pub struct ModalityPartitionRouter {
     sand: Vec<usize>,
     pebble: Vec<usize>,
     rock: Vec<usize>,
+    /// Pool-aware late binding epsilon (see [`LeastWorkRouter`]); the
+    /// host preference only ever applies within the modality's group.
+    handoff_epsilon_s: f64,
 }
 
 impl ModalityPartitionRouter {
     pub fn new(est: ImpactEstimator, replicas: usize) -> ModalityPartitionRouter {
         let (sand, pebble, rock) = partition_groups(replicas.max(1));
-        ModalityPartitionRouter { est, ledger: WorkLedger::new(replicas.max(1)), sand, pebble, rock }
+        ModalityPartitionRouter {
+            est,
+            ledger: WorkLedger::new(replicas.max(1)),
+            sand,
+            pebble,
+            rock,
+            handoff_epsilon_s: 0.0,
+        }
     }
 
-    fn route_with_cost(&mut self, req: &Request, views: &[ReplicaView], cost: f64) -> usize {
-        let chosen = match req.modality {
+    /// Builder: set the host-preference epsilon for pool handoffs.
+    pub fn with_handoff_epsilon(mut self, epsilon_s: f64) -> ModalityPartitionRouter {
+        self.handoff_epsilon_s = epsilon_s;
+        self
+    }
+
+    /// Group selection shared by arrival routing and handoff binding.
+    /// `prefer` is `Some(host)` for handoffs: the host wins near-ledger
+    /// ties *within the group the modality is allowed on* — a rock's
+    /// embeddings never migrate onto a sand replica just because it
+    /// hosted the encode slot.
+    fn route_with_cost(
+        &mut self,
+        req: &Request,
+        views: &[ReplicaView],
+        cost: f64,
+        prefer: Option<usize>,
+    ) -> usize {
+        // Candidate sets are tiny (≤ replicas); materializing keeps the
+        // argmin/preference logic in one place (WorkLedger).
+        let candidates: Vec<usize> = match req.modality {
             Modality::Text => {
                 // sand flows through its own group and may borrow any
                 // idle heavier replica
-                let borrowed = self
-                    .pebble
+                self.sand
                     .iter()
-                    .chain(self.rock.iter())
                     .copied()
-                    .filter(|&i| views[i].active == 0);
-                self.ledger.argmin(self.sand.iter().copied().chain(borrowed))
+                    .chain(
+                        self.pebble
+                            .iter()
+                            .chain(self.rock.iter())
+                            .copied()
+                            .filter(|&i| views[i].active == 0),
+                    )
+                    .collect()
             }
-            Modality::Image => {
-                let borrowed = self.rock.iter().copied().filter(|&i| views[i].active == 0);
-                self.ledger.argmin(self.pebble.iter().copied().chain(borrowed))
-            }
+            Modality::Image => self
+                .pebble
+                .iter()
+                .copied()
+                .chain(self.rock.iter().copied().filter(|&i| views[i].active == 0))
+                .collect(),
             // rocks may not displace sand: videos stay in the rock group
             // even when sand replicas are idle
-            Modality::Video => self.ledger.argmin(self.rock.iter().copied()),
+            Modality::Video => self.rock.clone(),
+        };
+        let chosen = match prefer {
+            Some(host) => self
+                .ledger
+                .argmin_prefer(candidates.iter().copied(), host, self.handoff_epsilon_s),
+            None => self.ledger.argmin(candidates.iter().copied()),
         }
         .expect("every group holds at least one replica");
         self.ledger.assign(req.id, chosen, cost);
@@ -264,15 +357,15 @@ impl Router for ModalityPartitionRouter {
 
     fn route(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
         let cost = self.est.estimate(req).prefill_s;
-        self.route_with_cost(req, views, cost)
+        self.route_with_cost(req, views, cost, None)
     }
 
-    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+    fn route_handoff(&mut self, req: &Request, views: &[ReplicaView], host: usize) -> usize {
         // pool handoffs owe LLM prefill only (encode already ran); the
         // group choice is unchanged — a pre-encoded video still carries a
         // rock-sized prefill and stays in the rock group
         let cost = self.est.estimate_preencoded(req).prefill_s;
-        self.route_with_cost(req, views, cost)
+        self.route_with_cost(req, views, cost, Some(host))
     }
 
     fn on_terminal(&mut self, req_id: u64) {
@@ -290,10 +383,11 @@ pub fn build_router(cfg: &ServeConfig, profile: &ModelProfile) -> Box<dyn Router
         name @ ("least-work" | "modality-partition") => {
             let data = Profiler::new(profile, cfg.seed ^ 0x7E57_AB1E).run(300);
             let est = ImpactEstimator::train(&data);
+            let eps = cfg.pool.late_bind_epsilon_s;
             if name == "least-work" {
-                Box::new(LeastWorkRouter::new(est, n))
+                Box::new(LeastWorkRouter::new(est, n).with_handoff_epsilon(eps))
             } else {
-                Box::new(ModalityPartitionRouter::new(est, n))
+                Box::new(ModalityPartitionRouter::new(est, n).with_handoff_epsilon(eps))
             }
         }
         other => panic!("unknown router '{other}' (validate() should have caught this)"),
@@ -336,6 +430,7 @@ mod tests {
             mm_tokens: mm,
             video_duration_s: if modality == Modality::Video { 45.0 } else { 0.0 },
             output_tokens: 64,
+            ..Request::default()
         }
     }
 
@@ -407,13 +502,50 @@ mod tests {
         // the handoff replica, proving the phantom encode is gone
         let mut r = LeastWorkRouter::new(estimator(), 2);
         let views = views(2);
-        assert_eq!(r.route_handoff(&req(0, Modality::Video), &views), 0);
+        assert_eq!(r.route_handoff(&req(0, Modality::Video), &views, 0), 0);
         assert_eq!(r.route(&req(1, Modality::Video), &views), 1);
         assert_eq!(
             r.route(&req(2, Modality::Text), &views),
             0,
             "replica holding only a pre-encoded video must look lighter"
         );
+    }
+
+    /// Pool-aware late binding: with a non-zero epsilon the slot's host
+    /// wins near-ledger ties (no migration); with epsilon 0 the plain
+    /// argmin runs and a loaded host loses the handoff.
+    #[test]
+    fn handoff_prefers_host_within_epsilon_only() {
+        let v = views(3);
+        // epsilon off: tie at zero ledgers goes to the lowest id, not
+        // the host — bit-compatible with the pre-epsilon router
+        let mut r0 = LeastWorkRouter::new(estimator(), 3);
+        assert_eq!(r0.route_handoff(&req(0, Modality::Image), &v, 2), 0);
+
+        // epsilon on: the same tie now goes to the host
+        let mut r1 = LeastWorkRouter::new(estimator(), 3).with_handoff_epsilon(0.5);
+        assert_eq!(r1.route_handoff(&req(0, Modality::Image), &v, 2), 2);
+
+        // a host further than epsilon behind still loses
+        let mut r2 = LeastWorkRouter::new(estimator(), 3).with_handoff_epsilon(0.5);
+        // load replica 2's ledger well past epsilon with a video arrival
+        for i in 0..3 {
+            // fill replicas in id order so replica 2 ends up heaviest
+            let _ = r2.route(&req(100 + i, Modality::Video), &v);
+        }
+        let _ = r2.route(&req(103, Modality::Video), &v); // replica 0 again
+        assert_ne!(
+            r2.route_handoff(&req(1, Modality::Image), &v, 0),
+            0,
+            "host more than epsilon behind the argmin must not win"
+        );
+
+        // partition router: the host preference never pulls a video out
+        // of the rock group, even when the host is a sand replica
+        let (sand, _, rock) = partition_groups(4);
+        let mut rp = ModalityPartitionRouter::new(estimator(), 4).with_handoff_epsilon(10.0);
+        let pick = rp.route_handoff(&req(2, Modality::Video), &views(4), sand[0]);
+        assert!(rock.contains(&pick), "video handoff bound outside the rock group");
     }
 
     #[test]

@@ -126,6 +126,13 @@ pub struct PoolConfig {
     /// when the encode slot's host replica is not the late-bound decode
     /// replica (`--migration-cost`).
     pub migration_cost_s_per_ktok: f64,
+    /// Pool-aware late binding (`--late-bind-epsilon`): at encode
+    /// completion, ledger routers prefer the encode slot's host replica
+    /// when its outstanding work is within this many seconds of the
+    /// fleet minimum — a near-tie is not worth an embedding migration.
+    /// 0.0 (the default) disables the preference entirely; the handoff
+    /// path is then byte-identical to the plain ledger argmin.
+    pub late_bind_epsilon_s: f64,
 }
 
 impl Default for PoolConfig {
@@ -135,8 +142,20 @@ impl Default for PoolConfig {
             slots: 2,
             aging_deadline_s: 2.0,
             migration_cost_s_per_ktok: 0.002,
+            late_bind_epsilon_s: 0.0,
         }
     }
+}
+
+/// Serving-front-end knobs (the `[server]` TOML section).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServerConfig {
+    /// Bounded admission (`--admission-limit`): the maximum outstanding
+    /// (accepted but not yet terminal) requests the serving leader holds
+    /// before answering new submissions with an immediate
+    /// `ResponseEvent::Rejected` instead of buffering without bound.
+    /// 0 (the default) keeps admission unbounded.
+    pub admission_limit: usize,
 }
 
 /// Top-level experiment/server configuration.
@@ -162,6 +181,7 @@ pub struct ServeConfig {
     pub regulator: RegulatorConfig,
     pub cluster: ClusterConfig,
     pub pool: PoolConfig,
+    pub server: ServerConfig,
 }
 
 impl Default for ServeConfig {
@@ -179,6 +199,7 @@ impl Default for ServeConfig {
             regulator: RegulatorConfig::default(),
             cluster: ClusterConfig::default(),
             pool: PoolConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -213,7 +234,7 @@ impl ServeConfig {
     pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
-            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.",
+            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.", "server.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -290,6 +311,15 @@ impl ServeConfig {
         if let Some(v) = doc.get_f64("pool.migration_cost_s_per_ktok") {
             self.pool.migration_cost_s_per_ktok = v;
         }
+        if let Some(v) = doc.get_f64("pool.late_bind_epsilon_s") {
+            self.pool.late_bind_epsilon_s = v;
+        }
+        if let Some(v) = doc.get_i64("server.admission_limit") {
+            if v < 0 {
+                return Err(ConfigError("server.admission_limit must be >= 0 (0 = off)".into()));
+            }
+            self.server.admission_limit = v as usize;
+        }
         if let Some(v) = doc.get_bool("regulator.aging_enabled") {
             self.regulator.aging_enabled = v;
         }
@@ -355,6 +385,10 @@ impl ServeConfig {
             args.get_f64("pool-aging", self.pool.aging_deadline_s).map_err(e)?;
         self.pool.migration_cost_s_per_ktok =
             args.get_f64("migration-cost", self.pool.migration_cost_s_per_ktok).map_err(e)?;
+        self.pool.late_bind_epsilon_s =
+            args.get_f64("late-bind-epsilon", self.pool.late_bind_epsilon_s).map_err(e)?;
+        self.server.admission_limit =
+            args.get_usize("admission-limit", self.server.admission_limit).map_err(e)?;
         self.validate()
     }
 
@@ -406,6 +440,9 @@ impl ServeConfig {
         }
         if self.pool.migration_cost_s_per_ktok < 0.0 {
             return Err(ConfigError("pool.migration_cost_s_per_ktok must be >= 0".into()));
+        }
+        if !self.pool.late_bind_epsilon_s.is_finite() || self.pool.late_bind_epsilon_s < 0.0 {
+            return Err(ConfigError("pool.late_bind_epsilon_s must be finite and >= 0".into()));
         }
         Ok(())
     }
@@ -525,6 +562,34 @@ migration_cost_s_per_ktok = 0.004
             .is_err());
         let mut c = ServeConfig::default();
         assert!(c.apply_doc(&Doc::parse("[pool]\naging_deadline_s = -0.1").unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[pool]\nlate_bind_epsilon_s = -0.5").unwrap()).is_err());
+    }
+
+    #[test]
+    fn server_section_and_late_bind_epsilon_parse() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.server, ServerConfig::default());
+        assert_eq!(c.server.admission_limit, 0, "admission must default to unbounded");
+        assert_eq!(c.pool.late_bind_epsilon_s, 0.0, "host preference must default off");
+        let doc = Doc::parse(
+            r#"
+[server]
+admission_limit = 128
+[pool]
+late_bind_epsilon_s = 0.25
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.server.admission_limit, 128);
+        assert_eq!(c.pool.late_bind_epsilon_s, 0.25);
+
+        let mut c = ServeConfig::default();
+        assert!(
+            c.apply_doc(&Doc::parse("[server]\nadmission_limit = -1").unwrap()).is_err(),
+            "a negative limit must not wrap to unbounded"
+        );
     }
 
     #[test]

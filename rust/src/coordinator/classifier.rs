@@ -71,6 +71,7 @@ impl SmartClassifier {
                     mm_tokens: if s.modality == Modality::Text { 0 } else { s.prefill_tokens },
                     video_duration_s: 0.0,
                     output_tokens: 0,
+                    ..Request::default()
                 };
                 features(&estimator.estimate(&req))
             })
@@ -130,6 +131,7 @@ mod tests {
             mm_tokens: mm,
             video_duration_s: dur,
             output_tokens: 100,
+            ..Request::default()
         }
     }
 

@@ -129,6 +129,7 @@ mod tests {
             mm_tokens: mm,
             video_duration_s: dur,
             output_tokens: 100,
+            ..Request::default()
         }
     }
 

@@ -104,6 +104,11 @@ pub enum RequestEvent {
     /// Dropped: the request can never be scheduled (prompt exceeds KV
     /// capacity, or terminally blocked at drain).
     Dropped { id: u64, t: f64 },
+    /// Cancelled by the client ([`Scheduler::cancel`]) from any live
+    /// state — pending arrival, preprocessing, waiting, or running. KV
+    /// and engine resources are released at the cancel instant; this is
+    /// the request's terminal event (no `Finished`/`Dropped` follows).
+    Cancelled { id: u64, t: f64 },
 }
 
 /// Aggregate counters for introspection and the perf benches.
@@ -112,6 +117,8 @@ pub struct SchedStats {
     pub iterations: u64,
     pub preemptions: u64,
     pub dropped: u64,
+    /// Requests cancelled by the client ([`Scheduler::cancel`]).
+    pub cancelled: u64,
     /// Wall-clock seconds spent in planning (L3 overhead, §Perf).
     pub planning_time_s: f64,
     /// Virtual/wall seconds the engine was busy.
@@ -141,10 +148,12 @@ pub struct Scheduler {
 
     finished: Vec<u64>,
     failed: Vec<u64>,
+    cancelled: Vec<u64>,
     /// Terminal outcomes already handed out via [`Scheduler::take_finished`]
     /// (report bookkeeping: `failed.len() + retired_failed == stats.dropped`).
     retired_finished: usize,
     retired_failed: usize,
+    retired_cancelled: usize,
     events: Vec<RequestEvent>,
     pub stats: SchedStats,
 }
@@ -172,8 +181,10 @@ impl Scheduler {
             now: 0.0,
             finished: Vec::new(),
             failed: Vec::new(),
+            cancelled: Vec::new(),
             retired_finished: 0,
             retired_failed: 0,
+            retired_cancelled: 0,
             events: Vec::new(),
             stats: SchedStats::default(),
         }
@@ -220,7 +231,7 @@ impl Scheduler {
             + self
                 .states
                 .values()
-                .filter(|s| !matches!(s.phase, Phase::Finished | Phase::Dropped))
+                .filter(|s| !matches!(s.phase, Phase::Finished | Phase::Dropped | Phase::Cancelled))
                 .count()
     }
 
@@ -262,6 +273,62 @@ impl Scheduler {
     /// Drain the request events emitted since the last call.
     pub fn take_events(&mut self) -> Vec<RequestEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    /// Cancel a request in any live state — a pending (not yet due)
+    /// arrival, preprocessing, waiting, or running. Frees its KV
+    /// reservation and engine state at the current clock, records a
+    /// cancelled outcome, and emits [`RequestEvent::Cancelled`] as the
+    /// request's terminal event. Returns `false` when the id is unknown
+    /// or already terminal (finished/dropped/cancelled/retired) — a
+    /// cancel that races completion loses quietly, which is what a
+    /// serving front end wants. Committed preprocessing-worker time is
+    /// not reclaimed (the CPU work is already spent).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let now = self.now;
+        // Known state first (O(1)); only an id the scheduler has never
+        // ingested warrants the O(pending) arrival-heap scan below.
+        let Some(phase) = self.states.get(&id).map(|s| s.phase) else {
+            // Still on the arrival timeline: pull it out before it is due.
+            if let Some((_, req)) = self.arrivals.remove_where(|r| r.id == id) {
+                self.preencoded.remove(&id);
+                let slo = self.effective_slo(&req);
+                let mut st = ReqState::new(req, slo);
+                st.phase = Phase::Cancelled;
+                st.finish = Some(now);
+                self.states.insert(id, st);
+                self.cancelled.push(id);
+                self.stats.cancelled += 1;
+                self.events.push(RequestEvent::Cancelled { id, t: now });
+                return true;
+            }
+            return false;
+        };
+        match phase {
+            Phase::Finished | Phase::Dropped | Phase::Cancelled => return false,
+            Phase::Preprocessing => {
+                // the scheduled ready event stays queued; mark_ready
+                // ignores non-preprocessing ids when it fires
+            }
+            Phase::Waiting => {
+                self.waiting.retain(|&x| x != id);
+            }
+            Phase::Prefilling | Phase::Decoding => {
+                self.running.retain(|&x| x != id);
+                self.kv.free(id);
+                self.engine.release(id);
+            }
+        }
+        let st = self.states.get_mut(&id).unwrap();
+        if let Some(c) = st.class {
+            self.queues.dequeue(c, id, now);
+        }
+        st.phase = Phase::Cancelled;
+        st.finish = Some(now);
+        self.cancelled.push(id);
+        self.stats.cancelled += 1;
+        self.events.push(RequestEvent::Cancelled { id, t: now });
+        true
     }
 
     /// Run one plan/execute/apply iteration, after processing arrivals
@@ -396,7 +463,10 @@ impl Scheduler {
     pub fn report(&self) -> Report {
         let outcomes = self.finished.iter().map(|id| self.states[id].to_outcome()).collect();
         let failed = self.failed.iter().map(|id| self.states[id].to_failed_outcome()).collect();
-        Report::with_failed(outcomes, failed)
+        let mut report = Report::with_failed(outcomes, failed);
+        report.cancelled =
+            self.cancelled.iter().map(|id| self.states[id].to_cancelled_outcome()).collect();
+        report
     }
 
     /// Retire/compact API (online serving): drain every terminal request
@@ -415,15 +485,37 @@ impl Scheduler {
             .drain(..)
             .map(|id| self.states.remove(&id).expect("failed state present").to_failed_outcome())
             .collect();
+        let cancelled: Vec<_> = self
+            .cancelled
+            .drain(..)
+            .map(|id| {
+                self.states.remove(&id).expect("cancelled state present").to_cancelled_outcome()
+            })
+            .collect();
         self.retired_finished += outcomes.len();
         self.retired_failed += failed.len();
-        Report::with_failed(outcomes, failed)
+        self.retired_cancelled += cancelled.len();
+        let mut report = Report::with_failed(outcomes, failed);
+        report.cancelled = cancelled;
+        report
     }
 
     /// Terminal requests retired via [`Scheduler::take_finished`] so far,
     /// as `(finished, failed)` counts.
     pub fn retired(&self) -> (usize, usize) {
         (self.retired_finished, self.retired_failed)
+    }
+
+    /// The request's effective SLO latency: the client deadline when it
+    /// is usable, else the configured `slo_scale` default. A non-finite
+    /// or non-positive deadline is ignored rather than honored — a NaN
+    /// here would poison every order key and panic the planner's sort,
+    /// and clients are untrusted input.
+    fn effective_slo(&self, req: &Request) -> f64 {
+        match req.deadline_s {
+            Some(d) if d.is_finite() && d > 0.0 => d,
+            _ => self.cfg.slo_scale * self.profile.isolated_e2e(req),
+        }
     }
 
     /// Next internal wake-up: the earliest pending arrival or preprocess
@@ -442,7 +534,10 @@ impl Scheduler {
     // -----------------------------------------------------------------
 
     fn start_preprocess(&mut self, req: Request) {
-        let slo = self.cfg.slo_scale * self.profile.isolated_e2e(&req);
+        // A client-attached deadline (SubmitOptions::deadline_s) becomes
+        // the request's SLO latency, so EDF ordering and SLO accounting
+        // honor it; otherwise the configured scale applies.
+        let slo = self.effective_slo(&req);
         let id = req.id;
         let t_pre = self.profile.preprocess_time(&req);
         self.states.insert(id, ReqState::new(req, slo));
@@ -473,6 +568,13 @@ impl Scheduler {
     }
 
     fn mark_ready(&mut self, id: u64, t: f64) {
+        // A ready event can fire for a request cancelled during
+        // preprocessing (the event stays queued; the state may even be
+        // retired already) — ignore anything no longer preprocessing.
+        match self.states.get(&id) {
+            Some(st) if st.phase == Phase::Preprocessing => {}
+            _ => return,
+        }
         let req = self.states[&id].req.clone();
         let (class, impact) = self.policy.admit(&req);
         let st = self.states.get_mut(&id).unwrap();
@@ -901,6 +1003,23 @@ impl Scheduler {
             if p != Phase::Dropped {
                 return Err(format!("failed req {id} in phase {p:?}"));
             }
+        }
+        for id in &self.cancelled {
+            let p = self.states[id].phase;
+            if p != Phase::Cancelled {
+                return Err(format!("cancelled req {id} in phase {p:?}"));
+            }
+            if self.waiting.contains(id) || self.running.contains(id) {
+                return Err(format!("cancelled req {id} still scheduled"));
+            }
+        }
+        if (self.cancelled.len() + self.retired_cancelled) as u64 != self.stats.cancelled {
+            return Err(format!(
+                "cancel accounting: {} cancelled + {} retired-cancelled but stats.cancelled={}",
+                self.cancelled.len(),
+                self.retired_cancelled,
+                self.stats.cancelled
+            ));
         }
         if (self.failed.len() + self.retired_failed) as u64 != self.stats.dropped {
             return Err(format!(

@@ -18,6 +18,10 @@ pub enum Phase {
     /// Dropped without completing (prompt can never fit, or terminally
     /// blocked at drain). Surfaced as a failed outcome, never silent.
     Dropped,
+    /// Cancelled by the client ([`crate::coordinator::Scheduler::cancel`])
+    /// from any live state; KV and engine resources were released at the
+    /// cancel instant. Surfaced as a cancelled outcome.
+    Cancelled,
 }
 
 /// Scheduler-side request state.
@@ -125,6 +129,18 @@ impl ReqState {
         }
     }
 
+    /// Outcome record for a cancelled request (`finish` holds the cancel
+    /// time).
+    pub fn to_cancelled_outcome(&self) -> crate::metrics::CancelledOutcome {
+        crate::metrics::CancelledOutcome {
+            id: self.req.id,
+            modality: self.req.modality,
+            class: self.class,
+            arrival: self.req.arrival,
+            cancelled_at: self.finish.unwrap_or(self.req.arrival),
+        }
+    }
+
     /// Outcome record for a dropped request (`finish` holds the drop
     /// time; there may be no first token).
     pub fn to_failed_outcome(&self) -> crate::metrics::FailedOutcome {
@@ -153,6 +169,7 @@ mod tests {
                 mm_tokens: 729,
                 video_duration_s: 0.0,
                 output_tokens: 50,
+                ..Request::default()
             },
             10.0,
         )

@@ -183,6 +183,7 @@ mod tests {
                 mm_tokens: 729,
                 video_duration_s: 0.0,
                 output_tokens: 0,
+                ..Request::default()
             };
             // fused iteration: encode + prefill chunk + piggybacked decodes
             p.encode_time(&r) + p.prefill_chunk_time(0, 769) + 2.0 * p.decode_per_seq_s

@@ -2,6 +2,7 @@
 //! examples run simulations through these helpers so setups are identical
 //! (and reproducible from the seeds recorded in EXPERIMENTS.md).
 
+use crate::backend::ServeBackend as _;
 use crate::cluster::{Cluster, ClusterReport};
 use crate::config::ServeConfig;
 use crate::coordinator::{SchedStats, Scheduler};
@@ -61,21 +62,40 @@ pub fn run_cluster_with_trace(cfg: &ServeConfig, trace: Vec<Request>) -> Cluster
     Cluster::new(cfg).run(trace)
 }
 
+/// Run whatever backend the config describes — a bare scheduler or a
+/// cluster ([`crate::backend::build`]) — over its generated trace and
+/// return the merged, id-sorted report. This is the de-branched driver:
+/// callers that only need a [`Report`] (goodput search, sweeps, the
+/// CLI's generic paths) stop caring about the topology. Use
+/// [`run_sim`]/[`run_cluster`] when scheduler stats or per-replica
+/// detail are needed.
+pub fn run_serve(cfg: &ServeConfig) -> Report {
+    let profile = crate::model::by_name(&cfg.model).expect("validated model");
+    let trace = make_trace(cfg, &profile);
+    run_serve_with_trace(cfg, trace)
+}
+
+/// Backend-generic run over an explicit trace (see [`run_serve`]).
+pub fn run_serve_with_trace(cfg: &ServeConfig, trace: Vec<Request>) -> Report {
+    crate::backend::build(cfg).run_trace(trace)
+}
+
 /// Goodput (Fig 15): the maximum request rate sustaining
 /// `attainment` SLO compliance (DistServe-style, default 0.9), found by
-/// doubling + bisection over simulated runs.
+/// doubling + bisection over simulated runs. Backend-generic: a cluster
+/// config searches fleet goodput through the same code path.
 pub fn goodput(base: &ServeConfig, attainment: f64, n_requests: usize) -> f64 {
     let meets = |rate: f64| -> bool {
         let mut cfg = base.clone();
         cfg.rate = rate;
         cfg.num_requests = n_requests;
-        let r = run_sim(&cfg);
-        if r.report.outcomes.is_empty() {
+        let report = run_serve(&cfg);
+        if report.outcomes.is_empty() {
             return false;
         }
         // dropped requests surface in `report.failed` and count as
         // violations
-        r.report.slo_attainment() >= attainment
+        report.slo_attainment() >= attainment
     };
 
     // exponential search for an upper bound
@@ -160,6 +180,23 @@ mod tests {
         let s = r.report.overall();
         assert!(s.slo_violation_rate < 0.05, "{}", s.slo_violation_rate);
         assert!(s.avg_ttft < 1.0, "{}", s.avg_ttft);
+    }
+
+    #[test]
+    fn run_serve_matches_run_sim_for_single_replica() {
+        // the de-branched driver must not change single-scheduler results
+        let c = cfg("tcm");
+        let a = run_sim(&c);
+        let mut a_report = a.report.clone();
+        a_report.sort_by_id();
+        let b = run_serve(&c);
+        assert_eq!(a_report.outcomes.len(), b.outcomes.len());
+        assert_eq!(a_report.failed.len(), b.failed.len());
+        for (x, y) in a_report.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
     }
 
     #[test]

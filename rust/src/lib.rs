@@ -24,6 +24,7 @@
 //! (simulated cost-model engine or the PJRT-backed real engine) over a
 //! [`workload::WorkloadGen`] stream under a [`config::ServeConfig`].
 
+pub mod backend;
 pub mod bench_harness;
 pub mod cluster;
 pub mod config;

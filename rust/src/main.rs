@@ -10,6 +10,7 @@
 //!
 //! Config precedence: defaults (paper §4.1) < --config file.toml < flags.
 
+use tcm_serve::backend::ServeBackend as _;
 use tcm_serve::config::ServeConfig;
 use tcm_serve::coordinator::profiler::Profiler;
 use tcm_serve::experiments;
@@ -42,6 +43,11 @@ fn parser() -> Parser {
         .option("pool-slots", "encoder slots in the pool (rocks capped to half)")
         .option("pool-aging", "rock aging deadline in the pool queue, seconds")
         .option("migration-cost", "embedding transfer cost, seconds per 1000 vision tokens")
+        .option(
+            "late-bind-epsilon",
+            "prefer the encode slot's host on handoff within this ledger gap, s (0 = off)",
+        )
+        .option("admission-limit", "max outstanding requests before the server rejects (0 = off)")
         .option("out", "output path (trace subcommand)")
         .option("artifacts", "artifacts directory (serve subcommand)")
 }
@@ -88,6 +94,10 @@ fn main() {
     }
 }
 
+/// The de-branched simulate driver: one code path for every topology.
+/// `backend::build` picks scheduler vs cluster from the config; the
+/// backend's own `summary_lines` carry the per-replica / pool detail the
+/// old cluster-only branch printed.
 fn cmd_simulate(cfg: &ServeConfig) {
     println!(
         "simulate: model={} mix={} policy={} rate={} requests={} seed={} slo={}x mem={:.0}%",
@@ -100,78 +110,31 @@ fn cmd_simulate(cfg: &ServeConfig) {
         cfg.slo_scale,
         cfg.memory_frac * 100.0
     );
-    if cfg.cluster.replicas > 1 || cfg.pool.enabled {
-        return cmd_simulate_cluster(cfg);
-    }
-    let r = experiments::run_sim(cfg);
-    report::header("results by class");
-    report::mcto_rows(&cfg.policy, &r.report);
-    report::header("results by modality");
-    report::modality_rows(&cfg.policy, &r.report);
+    let mut backend = tcm_serve::backend::build(cfg);
     println!(
-        "\niterations={} preemptions={} dropped={} makespan={:.1}s engine_busy={:.1}s \
-         planning={:.1}µs/iter",
-        r.stats.iterations,
-        r.stats.preemptions,
-        r.stats.dropped,
-        r.makespan,
-        r.stats.busy_time_s,
-        r.stats.planning_time_s * 1e6 / r.stats.iterations.max(1) as f64
-    );
-}
-
-fn cmd_simulate_cluster(cfg: &ServeConfig) {
-    println!(
-        "cluster: replicas={} router={} encode_overlap={} encoder_pool={}",
+        "backend: {} (replicas={} router={} encode_overlap={} encoder_pool={})",
+        backend.name(),
         cfg.cluster.replicas,
         cfg.cluster.router,
         cfg.cluster.encode_overlap,
         if cfg.pool.enabled { format!("{} slots", cfg.pool.slots) } else { "off".into() }
     );
-    let cr = experiments::run_cluster(cfg);
-    report::header("merged results by class");
-    report::mcto_rows(&cfg.policy, &cr.report);
-    report::header("merged results by modality");
-    report::modality_rows(&cfg.policy, &cr.report);
-    report::header("per-replica");
-    for rs in &cr.per_replica {
-        println!(
-            "replica {:<3} routed={:<6} iterations={:<8} preempt={:<6} dropped={:<5} \
-             busy={:>9.1}s util={:>5.1}%",
-            rs.replica,
-            rs.routed,
-            rs.iterations,
-            rs.preemptions,
-            rs.dropped,
-            rs.busy_time_s,
-            cr.utilization(rs.replica) * 100.0
-        );
-    }
-    if let Some(p) = &cr.pool {
-        report::header("encoder pool");
-        println!(
-            "slots={} rock_cap={} encodes={} util={:.1}% aged_promotions={} \
-             rock_wait_max={:.2}s",
-            p.slots,
-            p.rock_cap,
-            p.stats.encodes,
-            cr.pool_utilization() * 100.0,
-            p.stats.aged_promotions,
-            p.stats.rock_wait_max_s
-        );
-        println!(
-            "migrations={} ({:.1}% of handoffs) migrated={} vision tokens ({:.1} MB)",
-            p.stats.migrations,
-            100.0 * p.stats.migrations as f64 / p.stats.encodes.max(1) as f64,
-            p.stats.migrated_mm_tokens,
-            p.stats.migrated_bytes as f64 / 1e6
-        );
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = experiments::make_trace(cfg, &profile);
+    let r = backend.run_trace(trace);
+    report::header("results by class");
+    report::mcto_rows(&cfg.policy, &r);
+    report::header("results by modality");
+    report::modality_rows(&cfg.policy, &r);
+    println!();
+    for line in backend.summary_lines() {
+        println!("{line}");
     }
     println!(
-        "\nmakespan={:.1}s imbalance={:.2} (max/mean busy) slo_attainment={:.1}%",
-        cr.makespan,
-        cr.imbalance(),
-        cr.report.slo_attainment() * 100.0
+        "slo_attainment={:.1}% cancelled={} rejected={}",
+        r.slo_attainment() * 100.0,
+        r.cancelled.len(),
+        r.rejected
     );
 }
 

@@ -132,28 +132,54 @@ pub struct FailedOutcome {
     pub dropped_at: f64,
 }
 
+/// A request cancelled by the client before completing (any state:
+/// pending, preprocessing, queued at an encoder pool, waiting, running).
+/// Distinct from [`FailedOutcome`]: a drop is the *scheduler* giving up,
+/// a cancellation is the *client* abandoning — it must not count against
+/// SLO attainment, but conservation still has to see it
+/// (`finished + failed + cancelled == submitted`).
+#[derive(Debug, Clone)]
+pub struct CancelledOutcome {
+    pub id: u64,
+    pub modality: Modality,
+    /// Class at cancellation time (None when cancelled before
+    /// classification — pending, preprocessing, or pool-queued).
+    pub class: Option<Class>,
+    pub arrival: f64,
+    /// Scheduler/cluster time at which the cancel took effect.
+    pub cancelled_at: f64,
+}
+
 /// A full experiment result: all outcomes plus grouped views.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
     pub outcomes: Vec<Outcome>,
     /// Requests dropped without completing. SLO accounting counts these
     /// as violations; conservation holds as
-    /// `outcomes.len() + failed.len() == requests submitted`.
+    /// `outcomes.len() + failed.len() + cancelled.len() == submitted`.
     pub failed: Vec<FailedOutcome>,
+    /// Requests cancelled by the client (see [`CancelledOutcome`]).
+    pub cancelled: Vec<CancelledOutcome>,
+    /// Submissions refused at admission by a bounded serving front end
+    /// (`server.admission_limit`). Rejected requests never reach a
+    /// scheduler, so they are a counter, not outcomes: serving-layer
+    /// conservation is `total() + rejected == submissions offered`.
+    pub rejected: u64,
 }
 
 impl Report {
     pub fn new(outcomes: Vec<Outcome>) -> Report {
-        Report { outcomes, failed: Vec::new() }
+        Report { outcomes, ..Report::default() }
     }
 
     pub fn with_failed(outcomes: Vec<Outcome>, failed: Vec<FailedOutcome>) -> Report {
-        Report { outcomes, failed }
+        Report { outcomes, failed, ..Report::default() }
     }
 
-    /// Every request the scheduler was handed: completed + dropped.
+    /// Every request the scheduler was handed: completed + dropped +
+    /// cancelled (rejected submissions never reached it).
     pub fn total(&self) -> usize {
-        self.outcomes.len() + self.failed.len()
+        self.outcomes.len() + self.failed.len() + self.cancelled.len()
     }
 
     /// Absorb another (partial) report: used by incremental retirement
@@ -162,6 +188,8 @@ impl Report {
     pub fn merge(&mut self, other: Report) {
         self.outcomes.extend(other.outcomes);
         self.failed.extend(other.failed);
+        self.cancelled.extend(other.cancelled);
+        self.rejected += other.rejected;
     }
 
     /// Canonical ordering for cross-run comparison: merged reports
@@ -171,16 +199,20 @@ impl Report {
     pub fn sort_by_id(&mut self) {
         self.outcomes.sort_by_key(|o| o.id);
         self.failed.sort_by_key(|f| f.id);
+        self.cancelled.sort_by_key(|c| c.id);
     }
 
-    /// Fraction of all requests (completed *and* dropped) that met their
-    /// SLO; a dropped request counts as a violation.
+    /// Fraction of completed-or-dropped requests that met their SLO; a
+    /// dropped request counts as a violation. Cancelled requests are
+    /// excluded from both sides — the client walked away, so neither the
+    /// server's success nor its failure can be measured.
     pub fn slo_attainment(&self) -> f64 {
-        if self.total() == 0 {
+        let denom = self.outcomes.len() + self.failed.len();
+        if denom == 0 {
             return 1.0;
         }
         let ok = self.outcomes.iter().filter(|o| !o.violates_slo()).count();
-        ok as f64 / self.total() as f64
+        ok as f64 / denom as f64
     }
 
     pub fn overall(&self) -> Summary {
@@ -315,6 +347,32 @@ mod tests {
         a.sort_by_id();
         assert_eq!(a.outcomes[0].id, 3);
         assert_eq!(a.outcomes[1].id, 7);
+    }
+
+    #[test]
+    fn cancelled_requests_conserve_but_do_not_skew_slo() {
+        let ok = outcome(0.1, 1.0, 5.0, 10); // meets SLO
+        let r = Report {
+            outcomes: vec![ok],
+            failed: vec![],
+            cancelled: vec![CancelledOutcome {
+                id: 4,
+                modality: Modality::Image,
+                class: None,
+                arrival: 0.0,
+                cancelled_at: 2.0,
+            }],
+            rejected: 3,
+        };
+        assert_eq!(r.total(), 2, "cancellations count toward conservation");
+        assert!((r.slo_attainment() - 1.0).abs() < 1e-12, "cancellation is not a violation");
+
+        let mut merged = Report::default();
+        merged.merge(r.clone());
+        merged.merge(r);
+        assert_eq!(merged.total(), 4);
+        assert_eq!(merged.cancelled.len(), 2);
+        assert_eq!(merged.rejected, 6, "rejection counters add up across partials");
     }
 
     #[test]

@@ -398,6 +398,7 @@ mod tests {
             mm_tokens: mm,
             video_duration_s: dur,
             output_tokens: 128,
+            ..Request::default()
         }
     }
 

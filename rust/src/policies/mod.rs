@@ -26,7 +26,26 @@ use crate::coordinator::priority::PriorityRegulator;
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::state::ReqState;
 use crate::model::ModelProfile;
-use crate::request::{Class, Request};
+use crate::request::{Class, Request, SloClass};
+
+/// Score shift applied per client-declared [`SloClass`] tier in the
+/// class-priority family: `ln 4`, i.e. a `Critical` request schedules as
+/// if its regulator priority were 4× (and `BestEffort` as if ×1/4).
+/// Scores are `−log(priority)`, so a constant priority *factor* is a
+/// constant score *shift* — aging dynamics within a tier are unchanged,
+/// and `Standard`/undeclared is bit-identical to the pre-lifecycle score.
+pub const SLO_CLASS_LN_SHIFT: f64 = 1.3862943611198906;
+
+/// The score adjustment for a request's declared SLO class (0.0 for
+/// `Standard`/undeclared — callers on that path stay bit-identical).
+#[inline]
+pub fn slo_class_shift(slo_class: Option<SloClass>) -> f64 {
+    match slo_class {
+        None | Some(SloClass::Standard) => 0.0,
+        Some(SloClass::Critical) => -SLO_CLASS_LN_SHIFT,
+        Some(SloClass::BestEffort) => SLO_CLASS_LN_SHIFT,
+    }
+}
 
 /// Scheduling sort key, compared lexicographically: `(score, tie)` —
 /// the policy's score first, then a tie-break (class policies use the
@@ -209,9 +228,13 @@ impl<C: Classifier + Send> Policy for ClassPriorityPolicy<C> {
         // monotonicity in waiting time. Lexicographic tie-break on ready
         // time keeps equal scores (e.g. static ablation) FCFS without
         // perturbing the score itself — an ε-weighted blend inverts class
-        // order once ready_time grows past the score gaps.
+        // order once ready_time grows past the score gaps. A declared
+        // SLO class shifts the score by a constant (zero for Standard —
+        // that path is bit-identical to an undeclared class).
         let class = rs.class.unwrap_or(Class::Truck);
-        (self.regulator.score(class, rs.waiting_time(now)), rs.ready_time)
+        let score =
+            self.regulator.score(class, rs.waiting_time(now)) + slo_class_shift(rs.req.slo_class);
+        (score, rs.ready_time)
     }
 
     fn victim_key(&self, rs: &ReqState, now: f64) -> VictimKey {
@@ -292,6 +315,7 @@ mod tests {
                 mm_tokens: 0,
                 video_duration_s: 0.0,
                 output_tokens: 10,
+                ..Request::default()
             },
             slo,
         );
@@ -365,6 +389,37 @@ mod tests {
         m3.ready_time = now;
         m3.first_enqueue = m2.first_enqueue; // same waiting time → same score
         assert!(p.order_key(&m2, now) < p.order_key(&m3, now));
+    }
+
+    #[test]
+    fn slo_class_shifts_order_within_and_across_classes() {
+        let profile = by_name("llava-7b").unwrap();
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "tcm".into();
+        let p = build_policy(&cfg, &profile);
+
+        // same class, same wait: Critical < Standard < BestEffort
+        let mut std_m = rs(0.0, 0.0, 5.0);
+        std_m.class = Some(Class::Motorcycle);
+        let mut crit_m = std_m.clone();
+        crit_m.req.slo_class = Some(SloClass::Critical);
+        let mut be_m = std_m.clone();
+        be_m.req.slo_class = Some(SloClass::BestEffort);
+        assert!(p.order_key(&crit_m, 1.0) < p.order_key(&std_m, 1.0));
+        assert!(p.order_key(&std_m, 1.0) < p.order_key(&be_m, 1.0));
+
+        // an undeclared class is bit-identical to Standard
+        let mut none_m = std_m.clone();
+        none_m.req.slo_class = None;
+        std_m.req.slo_class = Some(SloClass::Standard);
+        assert_eq!(p.order_key(&none_m, 1.0), p.order_key(&std_m, 1.0));
+
+        // a critical car outranks a fresh standard motorcycle: the ln 4
+        // boost exceeds the M/C static gap (ln 0.1 − ln 0.05 ≈ 0.69)
+        let mut crit_c = rs(0.0, 0.0, 5.0);
+        crit_c.class = Some(Class::Car);
+        crit_c.req.slo_class = Some(SloClass::Critical);
+        assert!(p.order_key(&crit_c, 0.0) < p.order_key(&none_m, 0.0));
     }
 
     #[test]

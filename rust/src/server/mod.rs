@@ -4,31 +4,49 @@
 //! std threads + mpsc channels — the same topology as vLLM's single-
 //! threaded engine core behind an ingress queue. Clients submit requests
 //! through a [`ServerHandle`] and receive streamed events (first token /
-//! completion / drop) on a per-request channel.
+//! completion / drop / cancel / rejection) on a per-request channel.
+//!
+//! There is exactly **one** leader loop, generic over
+//! [`ServeBackend`](crate::backend::ServeBackend): a bare scheduler and a
+//! multi-replica cluster (with or without the encoder pool) are served by
+//! the same code. Backends may hold non-Send engines, so [`Server::spawn`]
+//! takes a Send *factory* and builds the backend inside the leader thread.
 //!
 //! The leader is *truly online*: it interleaves channel ingress with
-//! scheduler iterations via the stepping API
-//! ([`Scheduler::inject`] / [`Scheduler::step`]) — a request submitted
-//! while others are in flight is scheduled between their iterations, and
-//! its `FirstToken` event is delivered at the iteration that produces it,
-//! not after the batch drains. Wall-clock time maps onto the scheduler
-//! clock continuously ([`Scheduler::advance_to`] with the leader's
-//! elapsed time before every step).
+//! backend iterations via the stepping API — a request submitted while
+//! others are in flight is scheduled between their iterations, and its
+//! `FirstToken` event is delivered at the iteration that produces it,
+//! not after the batch drains. Wall-clock time maps onto the backend
+//! clock continuously (`advance_to` with the leader's elapsed time
+//! before every step).
+//!
+//! # Request lifecycle
+//!
+//! * **Deadlines / SLO classes** — [`ServerHandle::submit_with`] attaches
+//!   [`SubmitOptions`]: an explicit end-to-end deadline (feeds EDF and
+//!   SLO accounting) and/or an [`SloClass`] tier (shifts the
+//!   class-priority score).
+//! * **Cancellation** — [`ServerHandle::cancel`] aborts a request in any
+//!   state; the client receives [`ResponseEvent::Cancelled`] as its
+//!   terminal event and the backend frees KV/encoder resources.
+//! * **Admission backpressure** — with `cfg.server.admission_limit > 0`
+//!   the leader answers over-limit submissions with an immediate
+//!   [`ResponseEvent::Rejected`] instead of buffering without bound; a
+//!   saturated fleet fails fast.
 //!
 //! This front end drives the *real* engine in wall-clock time; pure
 //! virtual-time experiments use [`crate::experiments`] directly. A
 //! simulated engine still works behind the server (the tests do exactly
 //! that), with the caveat that its virtual iteration costs accumulate
-//! into the scheduler clock on top of the wall mapping, so event
+//! into the backend clock on top of the wall mapping, so event
 //! timestamps run ahead of wall time.
 
-use crate::cluster::Cluster;
+use crate::backend::{self, ServeBackend};
 use crate::config::ServeConfig;
-use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use crate::coordinator::{RequestEvent, StepOutcome};
 use crate::engine::Engine;
 use crate::metrics::Report;
-use crate::policies::build_policy;
-use crate::request::Request;
+use crate::request::{Request, SloClass};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -42,10 +60,44 @@ pub enum ResponseEvent {
     /// The scheduler gave up on the request (prompt can never fit, or
     /// terminally blocked at shutdown).
     Dropped { req_id: u64 },
+    /// The request was cancelled via [`ServerHandle::cancel`]; terminal.
+    Cancelled { req_id: u64 },
+    /// Bounded admission refused the request before it reached the
+    /// backend (`cfg.server.admission_limit`); terminal, and the only
+    /// event the request will ever produce. Resubmit later or shed load.
+    Rejected { req_id: u64 },
 }
+
+/// Client-attached lifecycle options for [`ServerHandle::submit_with`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SubmitOptions {
+    /// End-to-end deadline, seconds after submission. Becomes the
+    /// request's SLO latency (EDF orders by it; SLO accounting measures
+    /// against it). `None` = the configured `slo_scale` default; a
+    /// non-finite or non-positive value is treated as `None` (client
+    /// input must not poison scheduler order keys).
+    pub deadline_s: Option<f64>,
+    /// Latency tier; `None` behaves as [`SloClass::Standard`].
+    pub slo_class: Option<SloClass>,
+}
+
+/// The server is gone: the leader thread has exited (shutdown raced the
+/// call) or was never reachable. Submissions and cancels return this
+/// instead of panicking so client threads survive shutdown races.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerGone;
+
+impl std::fmt::Display for ServerGone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("server gone: the leader thread has exited")
+    }
+}
+
+impl std::error::Error for ServerGone {}
 
 enum ServerMsg {
     Submit(Request, mpsc::Sender<ResponseEvent>),
+    Cancel(u64),
     Shutdown,
 }
 
@@ -56,11 +108,33 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a request; events arrive on the returned receiver.
-    pub fn submit(&self, req: Request) -> mpsc::Receiver<ResponseEvent> {
+    /// Submit a request; events arrive on the returned receiver. Errs
+    /// with [`ServerGone`] when the leader has already exited (instead
+    /// of panicking — submission legitimately races shutdown).
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<ResponseEvent>, ServerGone> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(ServerMsg::Submit(req, tx)).expect("server gone");
-        rx
+        self.tx.send(ServerMsg::Submit(req, tx)).map_err(|_| ServerGone)?;
+        Ok(rx)
+    }
+
+    /// Submit with lifecycle options (deadline, SLO class).
+    pub fn submit_with(
+        &self,
+        mut req: Request,
+        opts: SubmitOptions,
+    ) -> Result<mpsc::Receiver<ResponseEvent>, ServerGone> {
+        req.deadline_s = opts.deadline_s;
+        req.slo_class = opts.slo_class;
+        self.submit(req)
+    }
+
+    /// Cancel a previously submitted request. Works in any state (queued
+    /// at an encoder pool, waiting, running); the client's receiver gets
+    /// [`ResponseEvent::Cancelled`] as its terminal event. A cancel that
+    /// races completion loses quietly (the terminal event already sent
+    /// stands). Errs only when the leader has exited.
+    pub fn cancel(&self, req_id: u64) -> Result<(), ServerGone> {
+        self.tx.send(ServerMsg::Cancel(req_id)).map_err(|_| ServerGone)
     }
 
     pub fn shutdown(&self) {
@@ -68,35 +142,41 @@ impl ServerHandle {
     }
 }
 
-/// A serving leader running a scheduler over an engine on its own thread.
+/// A serving leader running a backend on its own thread.
 pub struct Server {
     handle: ServerHandle,
     join: JoinHandle<Report>,
 }
 
 impl Server {
-    /// Spawn the leader thread. The engine must be Send (both engines are).
-    pub fn spawn(cfg: ServeConfig, engine: Box<dyn Engine + Send>) -> Server {
+    /// Spawn the leader thread over any [`ServeBackend`]. The factory
+    /// runs *inside* the leader thread (backends may hold non-Send
+    /// engines — only the factory crosses the boundary), receiving the
+    /// config it should build from.
+    pub fn spawn<F>(cfg: ServeConfig, make_backend: F) -> Server
+    where
+        F: FnOnce(&ServeConfig) -> Box<dyn ServeBackend> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<ServerMsg>();
-        let join = std::thread::spawn(move || leader_loop(cfg, engine, rx));
+        let join = std::thread::spawn(move || {
+            let backend = make_backend(&cfg);
+            leader_loop(&cfg, backend, rx)
+        });
         Server { handle: ServerHandle { tx }, join }
     }
 
-    /// Spawn a multi-replica leader: `cfg.cluster.replicas` simulated
-    /// engine replicas behind the configured modality-aware router, all
-    /// driven by one leader thread through the cluster stepping API. The
-    /// replicas are built inside the leader thread (a [`Cluster`] holds
-    /// non-Send trait objects), so only the config crosses the boundary.
-    /// With `cfg.pool.enabled` the leader serves through the
-    /// disaggregated encoder pool: multimodal submissions queue at the
-    /// pool and are late-bound to a decode replica at encode completion;
-    /// the cluster stepping verbs hide all of it, so the leader loop is
-    /// unchanged (the fleet never reports `Drained` while encodes are
-    /// queued or in flight, so shutdown still drains every request).
-    pub fn spawn_cluster(cfg: ServeConfig) -> Server {
-        let (tx, rx) = mpsc::channel::<ServerMsg>();
-        let join = std::thread::spawn(move || cluster_leader_loop(cfg, rx));
-        Server { handle: ServerHandle { tx }, join }
+    /// Spawn over the backend the config describes — a bare scheduler
+    /// with a simulated engine, or a cluster when `cfg.cluster.replicas
+    /// > 1` / the encoder pool is enabled (see [`backend::build`]).
+    pub fn spawn_sim(cfg: ServeConfig) -> Server {
+        Server::spawn(cfg, backend::build)
+    }
+
+    /// Spawn a single-scheduler server over an explicit engine (the real
+    /// PJRT engine, a throttled test engine). The engine must be Send to
+    /// reach the leader thread; it is boxed into the scheduler there.
+    pub fn spawn_engine(cfg: ServeConfig, engine: Box<dyn Engine + Send>) -> Server {
+        Server::spawn(cfg, move |cfg| backend::scheduler_backend(cfg, engine))
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -118,7 +198,7 @@ struct Subscriber {
 }
 
 /// Receive the next pending channel message. `block` bounds the wait to
-/// one 25 ms timeout slice (the leader re-checks scheduler state after).
+/// one 25 ms timeout slice (the leader re-checks backend state after).
 /// `Err(())` means every handle is gone — treat as shutdown.
 fn recv_msg(rx: &mpsc::Receiver<ServerMsg>, block: bool) -> Result<Option<ServerMsg>, ()> {
     if block {
@@ -136,30 +216,27 @@ fn recv_msg(rx: &mpsc::Receiver<ServerMsg>, block: bool) -> Result<Option<Server
     }
 }
 
-/// The leader: interleave ingress with scheduler steps. Each loop turn
-/// drains every pending channel message (injecting new requests), maps
-/// wall-clock onto the scheduler clock, runs one iteration, streams the
-/// iteration's events to subscribers, and retires terminal scheduler
-/// state ([`Scheduler::take_finished`]) so scheduler-side memory stays
-/// flat over an unbounded request stream (the accumulated outcome
-/// history returned at shutdown still grows, a few dozen bytes per
-/// request). When there is nothing runnable it blocks on the channel
-/// instead of spinning.
+/// The one generic leader: interleave ingress with backend steps. Each
+/// loop turn drains every pending channel message (injecting new
+/// requests, applying cancels, rejecting over-limit submissions), maps
+/// wall-clock onto the backend clock, runs one iteration, streams the
+/// iteration's events to subscribers, and retires terminal backend
+/// state (`take_finished`) so backend-side memory stays flat over an
+/// unbounded request stream (the accumulated outcome history returned
+/// at shutdown still grows, a few dozen bytes per request). When there
+/// is nothing runnable it blocks on the channel instead of spinning.
 fn leader_loop(
-    cfg: ServeConfig,
-    engine: Box<dyn Engine + Send>,
+    cfg: &ServeConfig,
+    mut backend: Box<dyn ServeBackend>,
     rx: mpsc::Receiver<ServerMsg>,
 ) -> Report {
-    let profile = crate::model::by_name(&cfg.model).expect("validated model");
-    let policy = build_policy(&cfg, &profile);
-    let mut sched = Scheduler::new(cfg, policy, engine);
-
+    let admission_limit = cfg.server.admission_limit;
     let t0 = Instant::now();
     let mut subscribers: HashMap<u64, Subscriber> = HashMap::new();
     let mut collected = Report::default();
     let mut shutdown = false;
     // Block on the channel (instead of polling) on the next turn; set
-    // whenever the scheduler reports nothing can run until new input.
+    // whenever the backend reports nothing can run until new input.
     let mut block_for_msg = false;
 
     loop {
@@ -169,6 +246,15 @@ fn leader_loop(
             block_for_msg = false;
             match recv_msg(&rx, block) {
                 Ok(Some(ServerMsg::Submit(mut req, tx))) => {
+                    // bounded admission: outstanding = accepted requests
+                    // whose terminal event has not been delivered yet
+                    if admission_limit > 0 && subscribers.len() >= admission_limit {
+                        collected.rejected += 1;
+                        let _ = tx.send(ResponseEvent::Rejected { req_id: req.id });
+                        // dropping tx closes the client's channel after
+                        // the rejection — its event stream terminates
+                        continue;
+                    }
                     // stamp the true submit time so queueing before the
                     // first iteration is accounted for
                     req.arrival = t0.elapsed().as_secs_f64();
@@ -176,7 +262,12 @@ fn leader_loop(
                         req.id,
                         Subscriber { tx, arrival: req.arrival, output_tokens: req.output_tokens },
                     );
-                    sched.inject(req);
+                    backend.inject(req);
+                }
+                Ok(Some(ServerMsg::Cancel(id))) => {
+                    // the backend emits Cancelled as the terminal event;
+                    // deliver() retires the subscriber when it streams
+                    backend.cancel(id);
                 }
                 Ok(Some(ServerMsg::Shutdown)) => shutdown = true,
                 Ok(None) => break,
@@ -187,33 +278,33 @@ fn leader_loop(
             }
         }
 
-        // 2. wall-clock → scheduler clock (monotone; never rewinds)
-        sched.advance_to(t0.elapsed().as_secs_f64());
+        // 2. wall-clock → backend clock (monotone; never rewinds)
+        backend.advance_to(t0.elapsed().as_secs_f64());
 
         // 3. one scheduling iteration
-        let outcome = sched.step();
+        let outcome = backend.step();
 
         // 4. stream this iteration's events as they happen, then retire
         //    the iteration's terminal state into the running report
-        for ev in sched.take_events() {
+        for ev in backend.take_events() {
             deliver(&mut subscribers, ev);
         }
-        collected.merge(sched.take_finished());
+        collected.merge(backend.take_finished());
 
         match outcome {
             StepOutcome::Executed { .. } => {}
             // Nothing runnable until an internal event (preprocess
-            // completion / pending arrival): jump the scheduler clock to
+            // completion / pending arrival): jump the backend clock to
             // it. For the real engine that time is at/near wall time; for
             // a simulated engine it is virtual and there is no point
             // waiting wall-clock for it.
-            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
-            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Idle { next_event } => backend.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => backend.advance_to(t),
             StepOutcome::Blocked { next_event: None } => {
                 if shutdown {
                     // same terminal guard the batch drain applies: these
                     // can never run; fail them so clients are notified
-                    sched.drop_blocked();
+                    backend.drop_blocked();
                 } else {
                     block_for_msg = true;
                 }
@@ -228,87 +319,19 @@ fn leader_loop(
     }
 
     // deliver anything emitted by a final drop_blocked
-    for ev in sched.take_events() {
+    for ev in backend.take_events() {
         deliver(&mut subscribers, ev);
     }
-    collected.merge(sched.take_finished());
+    collected.merge(backend.take_finished());
     collected.sort_by_id();
     collected
 }
 
-/// The multi-replica leader: identical ingress/step/stream topology, but
-/// requests are dispatched through the cluster's router and every
-/// replica advances per turn. The cluster retires terminal replica state
-/// internally, so replica-side memory stays flat; only the merged
-/// outcome history (returned from [`Server::finish`]) grows with
-/// requests served.
-fn cluster_leader_loop(cfg: ServeConfig, rx: mpsc::Receiver<ServerMsg>) -> Report {
-    let mut cluster = Cluster::new(&cfg);
-
-    let t0 = Instant::now();
-    let mut subscribers: HashMap<u64, Subscriber> = HashMap::new();
-    let mut shutdown = false;
-    let mut block_for_msg = false;
-
-    loop {
-        loop {
-            let block = block_for_msg && !shutdown;
-            block_for_msg = false;
-            match recv_msg(&rx, block) {
-                Ok(Some(ServerMsg::Submit(mut req, tx))) => {
-                    req.arrival = t0.elapsed().as_secs_f64();
-                    subscribers.insert(
-                        req.id,
-                        Subscriber { tx, arrival: req.arrival, output_tokens: req.output_tokens },
-                    );
-                    cluster.inject(req);
-                }
-                Ok(Some(ServerMsg::Shutdown)) => shutdown = true,
-                Ok(None) => break,
-                Err(()) => {
-                    shutdown = true;
-                    break;
-                }
-            }
-        }
-
-        cluster.advance_to(t0.elapsed().as_secs_f64());
-        let outcome = cluster.step();
-        for ev in cluster.take_events() {
-            deliver(&mut subscribers, ev);
-        }
-
-        match outcome {
-            StepOutcome::Executed { .. } => {}
-            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
-            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
-            StepOutcome::Blocked { next_event: None } => {
-                if shutdown {
-                    cluster.drop_blocked();
-                } else {
-                    block_for_msg = true;
-                }
-            }
-            StepOutcome::Drained => {
-                if shutdown {
-                    break;
-                }
-                block_for_msg = true;
-            }
-        }
-    }
-
-    for ev in cluster.take_events() {
-        deliver(&mut subscribers, ev);
-    }
-    cluster.report().report
-}
-
-/// Route one scheduler event to its subscriber. Terminal events
-/// (`Finished`/`Dropped`) retire the subscriber entry — the map must not
-/// grow with total requests served, and dropping the retained `Sender`
-/// closes the per-request channel so clients iterating their receiver
-/// terminate without waiting for server shutdown.
+/// Route one backend event to its subscriber. Terminal events
+/// (`Finished`/`Dropped`/`Cancelled`) retire the subscriber entry — the
+/// map must not grow with total requests served, and dropping the
+/// retained `Sender` closes the per-request channel so clients iterating
+/// their receiver terminate without waiting for server shutdown.
 fn deliver(subscribers: &mut HashMap<u64, Subscriber>, ev: RequestEvent) {
     match ev {
         RequestEvent::FirstToken { id, t } => {
@@ -330,6 +353,11 @@ fn deliver(subscribers: &mut HashMap<u64, Subscriber>, ev: RequestEvent) {
                 let _ = s.tx.send(ResponseEvent::Dropped { req_id: id });
             }
         }
+        RequestEvent::Cancelled { id, .. } => {
+            if let Some(s) = subscribers.remove(&id) {
+                let _ = s.tx.send(ResponseEvent::Cancelled { req_id: id });
+            }
+        }
         // internal lifecycle events, not client-visible
         RequestEvent::Ready { .. }
         | RequestEvent::Encoded { .. }
@@ -345,15 +373,7 @@ mod tests {
     use crate::request::Modality;
 
     fn text_req(id: u64, text_tokens: u32, output_tokens: u32) -> Request {
-        Request {
-            id,
-            arrival: 0.0,
-            modality: Modality::Text,
-            text_tokens,
-            mm_tokens: 0,
-            video_duration_s: 0.0,
-            output_tokens,
-        }
+        Request { id, text_tokens, output_tokens, ..Request::default() }
     }
 
     #[test]
@@ -362,11 +382,11 @@ mod tests {
         cfg.policy = "fcfs".into();
         cfg.num_requests = 4;
         let profile = crate::model::by_name(&cfg.model).unwrap();
-        let server = Server::spawn(cfg, Box::new(SimEngine::new(&profile)));
+        let server = Server::spawn_engine(cfg, Box::new(SimEngine::new(&profile)));
         let h = server.handle();
         let mut rxs = Vec::new();
         for id in 0..4u64 {
-            rxs.push(h.submit(text_req(id, 64, 4)));
+            rxs.push(h.submit(text_req(id, 64, 4)).unwrap());
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 4);
@@ -384,11 +404,11 @@ mod tests {
         cfg.policy = "fcfs".into();
         cfg.cluster.replicas = 2;
         cfg.cluster.router = "round-robin".into();
-        let server = Server::spawn_cluster(cfg);
+        let server = Server::spawn_sim(cfg);
         let h = server.handle();
         let mut rxs = Vec::new();
         for id in 0..6u64 {
-            rxs.push(h.submit(text_req(id, 64, 4)));
+            rxs.push(h.submit(text_req(id, 64, 4)).unwrap());
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 6, "both replicas served their share");
@@ -402,7 +422,8 @@ mod tests {
 
     /// The pool-aware leader: multimodal submissions flow through the
     /// encoder pool and still come back finished — nothing is stranded in
-    /// the pool at shutdown, and sand streams alongside.
+    /// the pool at shutdown, and sand streams alongside. The generic
+    /// leader never branches: the cluster backend hides the pool.
     #[test]
     fn cluster_server_roundtrip_with_encoder_pool() {
         let mut cfg = ServeConfig::default();
@@ -411,17 +432,17 @@ mod tests {
         cfg.cluster.router = "round-robin".into();
         cfg.pool.enabled = true;
         cfg.pool.slots = 2;
-        let server = Server::spawn_cluster(cfg);
+        let server = Server::spawn_sim(cfg);
         let h = server.handle();
         let mut rxs = Vec::new();
         for id in 0..3u64 {
-            rxs.push(h.submit(text_req(id, 64, 4)));
+            rxs.push(h.submit(text_req(id, 64, 4)).unwrap());
         }
         for id in 3..6u64 {
             let mut req = text_req(id, 40, 4);
             req.modality = Modality::Image;
             req.mm_tokens = 729;
-            rxs.push(h.submit(req));
+            rxs.push(h.submit(req).unwrap());
         }
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 6, "pool handoffs all completed");
@@ -455,6 +476,14 @@ mod tests {
         }
     }
 
+    fn throttled(cfg: &ServeConfig, delay_ms: u64) -> Box<dyn Engine + Send> {
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        Box::new(ThrottledEngine {
+            inner: SimEngine::new(&profile),
+            delay: Duration::from_millis(delay_ms),
+        })
+    }
+
     /// The online-serving acceptance test: a request submitted first gets
     /// its FirstToken event while a later-submitted request is still
     /// unfinished — events stream per iteration, not batch-then-flush at
@@ -464,19 +493,15 @@ mod tests {
     fn first_token_streams_while_later_request_in_flight() {
         let mut cfg = ServeConfig::default();
         cfg.policy = "fcfs".into();
-        let profile = crate::model::by_name(&cfg.model).unwrap();
-        let engine = ThrottledEngine {
-            inner: SimEngine::new(&profile),
-            delay: Duration::from_millis(2),
-        };
-        let server = Server::spawn(cfg, Box::new(engine));
+        let engine = throttled(&cfg, 2);
+        let server = Server::spawn_engine(cfg, engine);
         let h = server.handle();
 
         // A: tiny prompt — first token within the first few iterations.
-        let rx_a = h.submit(text_req(0, 32, 8));
+        let rx_a = h.submit(text_req(0, 32, 8)).unwrap();
         // B: giant prompt — ~100 chunked-prefill iterations (≈200 ms at
         // 2 ms per iteration) before ITS first token.
-        let rx_b = h.submit(text_req(1, 50_000, 4));
+        let rx_b = h.submit(text_req(1, 50_000, 4)).unwrap();
 
         // No shutdown has been sent: a FirstToken arriving here proves
         // per-iteration streaming (the old leader would block forever
@@ -514,18 +539,14 @@ mod tests {
     fn late_submission_joins_running_schedule() {
         let mut cfg = ServeConfig::default();
         cfg.policy = "fcfs".into();
-        let profile = crate::model::by_name(&cfg.model).unwrap();
-        let engine = ThrottledEngine {
-            inner: SimEngine::new(&profile),
-            delay: Duration::from_millis(2),
-        };
-        let server = Server::spawn(cfg, Box::new(engine));
+        let engine = throttled(&cfg, 2);
+        let server = Server::spawn_engine(cfg, engine);
         let h = server.handle();
 
-        let rx_long = h.submit(text_req(0, 20_000, 4));
+        let rx_long = h.submit(text_req(0, 20_000, 4)).unwrap();
         // wait until the long request is demonstrably being worked on
         std::thread::sleep(Duration::from_millis(20));
-        let rx_late = h.submit(text_req(1, 16, 2));
+        let rx_late = h.submit(text_req(1, 16, 2)).unwrap();
         let ev = rx_late
             .recv_timeout(Duration::from_secs(30))
             .expect("late request must be scheduled while the first still runs");
@@ -534,5 +555,122 @@ mod tests {
         let report = server.finish();
         assert_eq!(report.outcomes.len(), 2);
         let _ = rx_long.iter().count(); // drain
+    }
+
+    /// Satellite regression: submitting after the leader exited must
+    /// return Err(ServerGone), not panic the client thread.
+    #[test]
+    fn submit_after_shutdown_returns_err_instead_of_panicking() {
+        let cfg = ServeConfig::default();
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        let server = Server::spawn_engine(cfg, Box::new(SimEngine::new(&profile)));
+        let h = server.handle();
+        let _ = server.finish(); // leader exits; rx dropped
+        assert_eq!(h.submit(text_req(9, 16, 2)).unwrap_err(), ServerGone);
+        assert_eq!(h.cancel(9).unwrap_err(), ServerGone);
+    }
+
+    /// Cancel mid-stream: a long request is cancelled while running; the
+    /// client receives Cancelled as its terminal event and the final
+    /// report conserves (finished + cancelled == submitted).
+    #[test]
+    fn cancel_mid_stream_terminates_the_request() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        let engine = throttled(&cfg, 2);
+        let server = Server::spawn_engine(cfg, engine);
+        let h = server.handle();
+
+        // long request: ~40 chunked-prefill iterations before its first
+        // token, then thousands of decode steps
+        let rx_long = h.submit(text_req(0, 20_000, 5_000)).unwrap();
+        let rx_short = h.submit(text_req(1, 16, 2)).unwrap();
+        // wait until the short one finished — the long one is mid-flight
+        let short_events: Vec<_> = rx_short.iter().take(2).collect();
+        assert!(matches!(short_events[1], ResponseEvent::Finished { req_id: 1, .. }));
+
+        h.cancel(0).unwrap();
+        let terminal = rx_long
+            .iter()
+            .find(|ev| {
+                matches!(
+                    ev,
+                    ResponseEvent::Cancelled { .. }
+                        | ResponseEvent::Finished { .. }
+                        | ResponseEvent::Dropped { .. }
+                )
+            })
+            .expect("cancelled request must get a terminal event");
+        assert!(
+            matches!(terminal, ResponseEvent::Cancelled { req_id: 0 }),
+            "expected Cancelled, got {terminal:?}"
+        );
+
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.cancelled.len(), 1);
+        assert_eq!(report.cancelled[0].id, 0);
+        assert_eq!(report.total(), 2, "finished + cancelled == submitted");
+    }
+
+    /// Bounded admission: with admission_limit = 2 and a slow engine, a
+    /// third concurrent submission is rejected immediately — no
+    /// unbounded buffering — and the final report counts it.
+    #[test]
+    fn over_limit_submission_is_rejected_immediately() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.server.admission_limit = 2;
+        let engine = throttled(&cfg, 5);
+        let server = Server::spawn_engine(cfg, engine);
+        let h = server.handle();
+
+        // two big requests occupy the leader's outstanding budget
+        let rx_a = h.submit(text_req(0, 30_000, 2_000)).unwrap();
+        let rx_b = h.submit(text_req(1, 30_000, 2_000)).unwrap();
+        let rx_c = h.submit(text_req(2, 16, 2)).unwrap();
+        let ev = rx_c
+            .recv_timeout(Duration::from_secs(30))
+            .expect("over-limit submission must be answered, not buffered");
+        assert_eq!(ev, ResponseEvent::Rejected { req_id: 2 });
+        assert!(
+            rx_c.iter().next().is_none(),
+            "a rejected request's stream terminates after the rejection"
+        );
+
+        // free capacity by cancelling both giants, then resubmit: accepted
+        h.cancel(0).unwrap();
+        h.cancel(1).unwrap();
+        assert!(rx_a.iter().any(|e| matches!(e, ResponseEvent::Cancelled { .. })));
+        assert!(rx_b.iter().any(|e| matches!(e, ResponseEvent::Cancelled { .. })));
+        let rx_d = h.submit(text_req(3, 16, 2)).unwrap();
+        let events_d: Vec<_> = rx_d.iter().collect();
+        assert!(
+            matches!(events_d.last(), Some(ResponseEvent::Finished { req_id: 3, .. })),
+            "capacity freed by cancels must admit new work, got {events_d:?}"
+        );
+
+        let report = server.finish();
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.cancelled.len(), 2);
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.total() as u64 + report.rejected, 4, "serving-layer conservation");
+    }
+
+    /// Deadlines attach end-to-end: an explicit tight deadline makes the
+    /// outcome's SLO latency exactly the requested budget.
+    #[test]
+    fn submit_with_deadline_feeds_slo_accounting() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "edf".into();
+        let profile = crate::model::by_name(&cfg.model).unwrap();
+        let server = Server::spawn_engine(cfg, Box::new(SimEngine::new(&profile)));
+        let h = server.handle();
+        let opts = SubmitOptions { deadline_s: Some(0.75), slo_class: Some(SloClass::Critical) };
+        let rx = h.submit_with(text_req(0, 64, 4), opts).unwrap();
+        let report = server.finish();
+        let _ = rx.iter().count();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.outcomes[0].slo_latency, 0.75, "deadline plumbed into the outcome");
     }
 }

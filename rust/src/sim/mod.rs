@@ -96,6 +96,31 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Remove and return the earliest-scheduled event whose payload
+    /// matches `pred`. O(n) heap rebuild — used by rare control-plane
+    /// operations (request cancellation), never on the hot path.
+    pub fn remove_where(&mut self, mut pred: impl FnMut(&T) -> bool) -> Option<(f64, T)> {
+        let mut found: Option<Event<T>> = None;
+        let mut rest = Vec::with_capacity(self.heap.len());
+        for e in std::mem::take(&mut self.heap).into_vec() {
+            if pred(&e.payload) {
+                // keep the earliest match; (time, seq) orders duplicates
+                match &found {
+                    Some(f) if (f.time, f.seq) <= (e.time, e.seq) => rest.push(e),
+                    _ => {
+                        if let Some(prev) = found.replace(e) {
+                            rest.push(prev);
+                        }
+                    }
+                }
+            } else {
+                rest.push(e);
+            }
+        }
+        self.heap = BinaryHeap::from(rest);
+        found.map(|e| (e.time, e.payload))
+    }
+
     /// Manually advance the clock (iteration-driven progress).
     pub fn advance_to(&mut self, time: f64) {
         if time > self.now {
@@ -156,6 +181,19 @@ mod tests {
         assert_eq!(q.pop_until(5.0), Some((1.0, "a")));
         assert_eq!(q.pop_until(5.0), None);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn remove_where_pulls_one_event_and_preserves_order() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 10u64);
+        q.schedule(2.0, 20);
+        q.schedule(3.0, 10);
+        assert_eq!(q.remove_where(|&x| x == 10), Some((1.0, 10)), "earliest match wins");
+        assert_eq!(q.remove_where(|&x| x == 99), None);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((2.0, 20)));
+        assert_eq!(q.pop(), Some((3.0, 10)));
     }
 
     #[test]

@@ -5,3 +5,15 @@ pub mod cli;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;
+
+/// Request-count knob for the examples: `TCM_EXAMPLE_REQUESTS` overrides
+/// each example's default so the CI smoke job can execute every example
+/// end-to-end in seconds (they are the de-facto API docs — compiling is
+/// not the same as running). Unset or unparsable values keep `default`.
+pub fn example_requests(default: usize) -> usize {
+    std::env::var("TCM_EXAMPLE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}

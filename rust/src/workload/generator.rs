@@ -178,6 +178,7 @@ impl WorkloadGen {
                 mm_tokens: 0,
                 video_duration_s: 0.0,
                 output_tokens,
+                ..Request::default()
             },
             Modality::Image => {
                 let tok = &self.profile.tokenizer;
@@ -200,6 +201,7 @@ impl WorkloadGen {
                     mm_tokens: mm,
                     video_duration_s: 0.0,
                     output_tokens,
+                    ..Request::default()
                 }
             }
             Modality::Video => {
@@ -218,6 +220,7 @@ impl WorkloadGen {
                     mm_tokens: self.profile.tokenizer.video_tokens(dur),
                     video_duration_s: dur,
                     output_tokens,
+                    ..Request::default()
                 }
             }
         }

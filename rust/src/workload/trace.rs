@@ -58,6 +58,7 @@ pub fn load_trace(path: &Path) -> std::io::Result<Vec<Request>> {
             mm_tokens: fields[4].parse().map_err(|_| err("bad mm_tokens"))?,
             video_duration_s: fields[5].parse().map_err(|_| err("bad video_dur"))?,
             output_tokens: fields[6].parse().map_err(|_| err("bad output_tokens"))?,
+            ..Request::default()
         });
     }
     Ok(out)

@@ -1,0 +1,215 @@
+//! The `ServeBackend` contract: driving either backend through the
+//! trait is bit-identical to driving it through its concrete API — the
+//! unification adds no timing, ordering, or accounting artifacts. This
+//! is the equivalence proof behind collapsing the two leader loops: the
+//! generic leader issues exactly the trait verbs, so trait == concrete
+//! (here, deterministic virtual time) plus the unchanged leader topology
+//! (tests in `server::tests`) pins server behavior to pre-refactor
+//! semantics on a no-cancel, no-deadline trace.
+
+mod common;
+
+use common::assert_reports_bit_identical;
+use tcm_serve::backend::{self, ServeBackend};
+use tcm_serve::cluster::Cluster;
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::coordinator::{Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::make_trace;
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::{Modality, Request};
+
+const POLICIES: [&str; 6] =
+    ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
+
+fn bare_scheduler(cfg: &ServeConfig) -> Scheduler {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(cfg, &profile);
+    Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&cfg.engine_profile())))
+}
+
+/// `backend::build` on a 1-replica no-pool config yields a scheduler
+/// backend whose `run_trace` is bit-identical to the monolithic
+/// `Scheduler::run` (modulo the canonical id sort), for every policy.
+#[test]
+fn scheduler_backend_run_trace_is_bit_identical_to_concrete_run() {
+    for policy in POLICIES {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 120;
+        cfg.rate = 2.0;
+        cfg.seed = 7;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let mut concrete = bare_scheduler(&cfg).run(trace.clone());
+        concrete.sort_by_id();
+
+        let mut backend = backend::build(&cfg);
+        assert_eq!(backend.name(), "scheduler", "{policy}: 1-replica config must stay bare");
+        let via_trait = backend.run_trace(trace);
+        assert_reports_bit_identical(policy, &via_trait, &concrete);
+    }
+}
+
+/// The cluster backend's `run_trace` delegates to the arrival-faithful
+/// batch driver: bit-identical to `Cluster::run` for every router, with
+/// and without the encoder pool.
+#[test]
+fn cluster_backend_run_trace_is_bit_identical_to_concrete_run() {
+    for router in ROUTERS {
+        for pool in [false, true] {
+            let mut cfg = ServeConfig::default();
+            cfg.policy = "fcfs".into();
+            cfg.num_requests = 200;
+            cfg.rate = 3.0;
+            cfg.seed = 23;
+            cfg.cluster.replicas = 3;
+            cfg.cluster.router = router.into();
+            cfg.pool.enabled = pool;
+            let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+            let trace = make_trace(&cfg, &profile);
+
+            let concrete = Cluster::new(&cfg).run(trace.clone()).report;
+
+            let mut backend = backend::build(&cfg);
+            assert_eq!(backend.name(), "cluster");
+            let via_trait = backend.run_trace(trace);
+            assert_reports_bit_identical(&format!("{router}/pool={pool}"), &via_trait, &concrete);
+        }
+    }
+}
+
+/// The generic leader's actual verb sequence — inject everything, then
+/// step/advance/drop_blocked with incremental `take_finished` retirement
+/// (`drain_report`) — reproduces the batch run bit for bit on backends
+/// where injection order is time-free (bare scheduler; round-robin
+/// cluster; any pool-mode cluster, whose ingress timeline makes
+/// dispatch arrival-faithful regardless of injection time).
+#[test]
+fn stepping_verbs_with_retirement_match_batch() {
+    // scheduler
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "tcm".into();
+    cfg.num_requests = 100;
+    cfg.seed = 11;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let mut batch = bare_scheduler(&cfg).run(trace.clone());
+    batch.sort_by_id();
+    let mut b = backend::build(&cfg);
+    for req in trace {
+        b.inject(req);
+    }
+    let stepped = b.drain_report();
+    assert_reports_bit_identical("scheduler-drain", &stepped, &batch);
+
+    // pool-mode cluster
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "fcfs".into();
+    cfg.num_requests = 120;
+    cfg.rate = 3.0;
+    cfg.seed = 13;
+    cfg.cluster.replicas = 2;
+    cfg.pool.enabled = true;
+    cfg.pool.slots = 2;
+    let trace = make_trace(&cfg, &profile);
+    let batch = Cluster::new(&cfg).run(trace.clone()).report;
+    let mut b = backend::build(&cfg);
+    for req in trace {
+        b.inject(req);
+    }
+    let stepped = b.drain_report();
+    assert_reports_bit_identical("pool-cluster-drain", &stepped, &batch);
+}
+
+/// Cancellation through the trait behaves identically against both
+/// backends: same verb, same conservation, same terminal accounting —
+/// and is deterministic.
+#[test]
+fn cancel_through_the_trait_conserves_on_both_backends() {
+    let run = |mut backend: Box<dyn ServeBackend>, trace: Vec<Request>| {
+        let n = trace.len();
+        let cancel_ids: Vec<u64> = trace.iter().map(|r| r.id).filter(|id| id % 3 == 0).collect();
+        for req in trace {
+            backend.inject(req);
+        }
+        // cancel a third of the ids after a handful of steps
+        let mut steps = 0;
+        let mut cancelled_accepted = 0usize;
+        loop {
+            match backend.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => backend.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => backend.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => backend.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+            if steps == 5 {
+                for &id in &cancel_ids {
+                    if backend.cancel(id) {
+                        cancelled_accepted += 1;
+                    }
+                }
+            }
+            backend.check_invariants().unwrap();
+            steps += 1;
+            assert!(steps < 1_000_000, "did not drain");
+        }
+        let mut report = backend.take_finished();
+        report.sort_by_id();
+        assert_eq!(report.total(), n, "conservation: finished + failed + cancelled == submitted");
+        assert_eq!(report.cancelled.len(), cancelled_accepted);
+        assert_eq!(backend.active_requests(), 0);
+        report
+    };
+
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "tcm".into();
+    cfg.num_requests = 60;
+    cfg.seed = 29;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+    let sched_a = run(backend::build(&cfg), trace.clone());
+    let sched_b = run(backend::build(&cfg), trace.clone());
+    assert_reports_bit_identical("sched-cancel-determinism", &sched_a, &sched_b);
+    assert!(!sched_a.cancelled.is_empty(), "the schedule must exercise cancellation");
+
+    let mut ccfg = cfg.clone();
+    ccfg.cluster.replicas = 2;
+    ccfg.pool.enabled = true;
+    let cluster_a = run(backend::build(&ccfg), trace.clone());
+    let cluster_b = run(backend::build(&ccfg), trace);
+    assert_reports_bit_identical("cluster-cancel-determinism", &cluster_a, &cluster_b);
+    assert!(!cluster_a.cancelled.is_empty());
+}
+
+/// `inject_preencoded` through the trait: both backends admit an
+/// externally encoded request without charging local encoder work, and
+/// account for it exactly once.
+#[test]
+fn inject_preencoded_through_the_trait() {
+    let image = Request {
+        id: 0,
+        modality: Modality::Image,
+        text_tokens: 40,
+        mm_tokens: 729,
+        output_tokens: 8,
+        ..Request::default()
+    };
+
+    let cfg = ServeConfig::default();
+    let mut sched = backend::build(&cfg);
+    sched.inject_preencoded(image.clone(), 0.5);
+    let report = sched.drain_report();
+    assert_eq!(report.outcomes.len(), 1);
+    assert!(report.outcomes[0].first_token >= 0.5, "schedulable only from the handoff time");
+
+    let mut ccfg = ServeConfig::default();
+    ccfg.cluster.replicas = 2;
+    ccfg.cluster.router = "least-work".into();
+    let mut cluster = backend::build(&ccfg);
+    cluster.inject_preencoded(image, 0.5);
+    let report = cluster.drain_report();
+    assert_eq!(report.outcomes.len(), 1);
+}

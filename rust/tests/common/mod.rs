@@ -30,4 +30,14 @@ pub fn assert_reports_bit_identical(label: &str, a: &Report, b: &Report) {
             x.id
         );
     }
+    assert_eq!(a.cancelled.len(), b.cancelled.len(), "{label}: cancellation counts");
+    for (x, y) in a.cancelled.iter().zip(&b.cancelled) {
+        assert_eq!(x.id, y.id, "{label}: cancelled order");
+        assert_eq!(
+            x.cancelled_at.to_bits(),
+            y.cancelled_at.to_bits(),
+            "{label}: req {} cancelled_at",
+            x.id
+        );
+    }
 }

@@ -47,6 +47,7 @@ fn image(id: u64, arrival: f64) -> Request {
         mm_tokens: 729,
         video_duration_s: 0.0,
         output_tokens: 4,
+        ..Request::default()
     }
 }
 
@@ -59,6 +60,7 @@ fn video(id: u64, arrival: f64) -> Request {
         mm_tokens: 17_640,
         video_duration_s: 45.0,
         output_tokens: 4,
+        ..Request::default()
     }
 }
 
@@ -341,5 +343,62 @@ fn stepped_pool_cluster_equals_batch_run() {
         stepped.pool.as_ref().unwrap().stats.migrations,
         batch.pool.as_ref().unwrap().stats.migrations,
         "migration accounting"
+    );
+}
+
+/// Pool-aware late binding (ROADMAP item): on a tied-ledger trace, a
+/// non-zero `pool.late_bind_epsilon_s` binds handoffs to the encode
+/// slot's host replica and the migration byte count drops; epsilon 0
+/// keeps the plain argmin (which migrates) — and both modes conserve
+/// every request.
+#[test]
+fn late_bind_epsilon_cuts_migration_bytes_on_tied_ledger_trace() {
+    // 2 replicas, least-work router, ONE pool slot co-hosted with
+    // replica 0. Three identical long-decode text requests land 2-on-0,
+    // 1-on-1 (ledger ties break to the lowest id), so at encode
+    // completion replica 1 is the strict argmin while the slot's host
+    // (replica 0) is within a small epsilon: the baseline migrates the
+    // video's embeddings, the epsilon build keeps them on the host.
+    let mut base = ServeConfig::default();
+    base.policy = "fcfs".into();
+    base.cluster.replicas = 2;
+    base.cluster.router = "least-work".into();
+    base.pool.enabled = true;
+    base.pool.slots = 1;
+    let mut trace = Vec::new();
+    for id in 0..3u64 {
+        trace.push(Request {
+            id,
+            modality: Modality::Text,
+            text_tokens: 64,
+            output_tokens: 3_000, // still decoding when the encode completes
+            ..Request::default()
+        });
+    }
+    trace.push(video(99, 0.0));
+
+    let run = |epsilon: f64| {
+        let mut cfg = base.clone();
+        cfg.pool.late_bind_epsilon_s = epsilon;
+        run_cluster_with_trace(&cfg, trace.clone())
+    };
+
+    let plain = run(0.0);
+    let prefer_host = run(10.0);
+    for (label, cr) in [("epsilon=0", &plain), ("epsilon=10", &prefer_host)] {
+        assert_eq!(cr.report.total(), 4, "{label}: conservation");
+        assert_eq!(cr.report.outcomes.len(), 4, "{label}: all four complete");
+    }
+
+    let p0 = plain.pool.as_ref().unwrap();
+    let p1 = prefer_host.pool.as_ref().unwrap();
+    assert_eq!(p0.stats.migrations, 1, "baseline must migrate the handoff off the host");
+    assert_eq!(p0.stats.migrated_bytes, 17_640 * BYTES_PER_MM_TOKEN);
+    assert_eq!(p1.stats.migrations, 0, "epsilon binds the near-tied handoff to the host");
+    assert!(
+        p1.stats.migrated_bytes < p0.stats.migrated_bytes,
+        "migration bytes must drop: {} !< {}",
+        p1.stats.migrated_bytes,
+        p0.stats.migrated_bytes
     );
 }

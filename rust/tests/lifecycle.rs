@@ -1,0 +1,306 @@
+//! Request-lifecycle contracts at the scheduler level: cancellation from
+//! every live state, client deadlines, and SLO classes — the primitives
+//! the serving front end's cancel/deadline/backpressure API sits on.
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::{Modality, Request, SloClass};
+
+fn scheduler(policy: &str) -> Scheduler {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = policy.into();
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let pol = build_policy(&cfg, &profile);
+    Scheduler::new(cfg, pol, Box::new(SimEngine::new(&profile)))
+}
+
+fn text(id: u64, arrival: f64, text_tokens: u32, output_tokens: u32) -> Request {
+    Request { id, arrival, text_tokens, output_tokens, ..Request::default() }
+}
+
+fn image(id: u64, arrival: f64) -> Request {
+    Request {
+        id,
+        arrival,
+        modality: Modality::Image,
+        text_tokens: 40,
+        mm_tokens: 729,
+        output_tokens: 16,
+        ..Request::default()
+    }
+}
+
+fn drain(sched: &mut Scheduler) -> Vec<RequestEvent> {
+    let mut events = Vec::new();
+    let mut steps = 0;
+    loop {
+        match sched.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        events.extend(sched.take_events());
+        sched.check_invariants().unwrap();
+        steps += 1;
+        assert!(steps < 1_000_000);
+    }
+    events.extend(sched.take_events());
+    events
+}
+
+fn terminal_events(events: &[RequestEvent], id: u64) -> Vec<&RequestEvent> {
+    events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                RequestEvent::Finished { id: i, .. }
+                | RequestEvent::Dropped { id: i, .. }
+                | RequestEvent::Cancelled { id: i, .. } if *i == id
+            )
+        })
+        .collect()
+}
+
+/// Cancel while the request is still a pending (not yet due) arrival:
+/// it never preprocesses, never becomes Ready, and still conserves.
+#[test]
+fn cancel_pending_arrival() {
+    let mut s = scheduler("fcfs");
+    s.inject(text(0, 5.0, 64, 4));
+    assert!(s.cancel(0), "pending arrival must be cancellable");
+    assert!(!s.cancel(0), "second cancel is a no-op");
+    let events = s.take_events();
+    assert!(matches!(events.as_slice(), [RequestEvent::Cancelled { id: 0, .. }]));
+    let events = drain(&mut s);
+    assert!(events.is_empty(), "nothing further happens: {events:?}");
+    let report = s.report();
+    assert_eq!(report.cancelled.len(), 1);
+    assert_eq!(report.total(), 1);
+    assert_eq!(s.active_requests(), 0);
+}
+
+/// Cancel during CPU preprocessing: the queued ready event fires later
+/// and must be ignored; exactly one terminal event.
+#[test]
+fn cancel_during_preprocessing() {
+    let mut s = scheduler("fcfs");
+    s.inject(image(0, 0.0));
+    // first step ingests the arrival and starts preprocessing (image
+    // preprocess takes 60 ms of virtual time, so it is not ready yet)
+    match s.step() {
+        StepOutcome::Idle { .. } => {}
+        other => panic!("expected Idle while preprocessing, got {other:?}"),
+    }
+    assert!(s.cancel(0));
+    let mut events = s.take_events();
+    events.extend(drain(&mut s));
+    assert_eq!(terminal_events(&events, 0).len(), 1);
+    assert!(
+        !events.iter().any(|e| matches!(e, RequestEvent::Ready { .. })),
+        "a cancelled request must not become ready: {events:?}"
+    );
+    assert_eq!(s.report().cancelled.len(), 1);
+    assert_eq!(s.kv().used_blocks(), 0);
+}
+
+/// Cancel a running (mid-prefill) request: KV is freed immediately and
+/// later requests proceed unaffected.
+#[test]
+fn cancel_running_frees_kv() {
+    let mut s = scheduler("fcfs");
+    s.inject(text(0, 0.0, 50_000, 1_000)); // ~98 prefill iterations
+    s.inject(text(1, 0.0, 64, 4));
+    // run a few iterations so request 0 holds KV rows
+    let mut executed = 0;
+    while executed < 4 {
+        match s.step() {
+            StepOutcome::Executed { .. } => executed += 1,
+            StepOutcome::Idle { next_event } => s.advance_to(next_event),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(s.kv().used_blocks() > 0, "request 0 must hold KV before the cancel");
+    assert!(s.cancel(0));
+    let events = drain(&mut s);
+    let report = s.report();
+    assert_eq!(report.outcomes.len(), 1, "request 1 completes");
+    assert_eq!(report.cancelled.len(), 1);
+    assert_eq!(report.total(), 2);
+    assert_eq!(s.kv().used_blocks(), 0, "all KV returned at drain");
+    assert_eq!(terminal_events(&events, 0).len(), 1);
+    assert!(s.queue_manager().is_empty());
+}
+
+/// Cancel after completion loses quietly: no Cancelled event, the
+/// Finished outcome stands, stats untouched.
+#[test]
+fn cancel_after_finish_is_refused() {
+    let mut s = scheduler("fcfs");
+    s.inject(text(0, 0.0, 64, 4));
+    let events = drain(&mut s);
+    assert!(events.iter().any(|e| matches!(e, RequestEvent::Finished { id: 0, .. })));
+    assert!(!s.cancel(0));
+    assert!(!s.cancel(42), "unknown ids are refused too");
+    assert_eq!(s.stats.cancelled, 0);
+    assert_eq!(s.report().outcomes.len(), 1);
+}
+
+/// Cancelled outcomes flow through the retire/compact API exactly like
+/// finished ones: take_finished reclaims their state.
+#[test]
+fn take_finished_retires_cancelled_state() {
+    let mut s = scheduler("fcfs");
+    s.inject(text(0, 5.0, 64, 4));
+    s.inject(text(1, 0.0, 64, 4));
+    assert!(s.cancel(0));
+    let part = s.take_finished();
+    assert_eq!(part.cancelled.len(), 1);
+    assert_eq!(part.outcomes.len(), 0);
+    let _ = drain(&mut s);
+    let rest = s.take_finished();
+    assert_eq!(rest.outcomes.len(), 1);
+    assert_eq!(rest.cancelled.len(), 0, "already retired");
+    s.check_invariants().unwrap();
+    assert_eq!(s.active_requests(), 0);
+}
+
+/// A client deadline overrides the slo_scale default end-to-end: the
+/// outcome's SLO latency is the requested budget, and EDF schedules an
+/// urgent-deadline request ahead of an earlier, laxer one.
+#[test]
+fn deadline_overrides_slo_and_orders_edf() {
+    // outcome accounting
+    let mut s = scheduler("fcfs");
+    let mut req = text(0, 0.0, 64, 4);
+    req.deadline_s = Some(0.25);
+    s.inject(req);
+    let _ = drain(&mut s);
+    let report = s.report();
+    assert_eq!(report.outcomes[0].slo_latency, 0.25);
+
+    // EDF ordering: two requests become ready together; the one with
+    // the tight explicit deadline goes first despite the later id
+    let mut s = scheduler("edf");
+    let mut lax = text(0, 0.0, 2_000, 4);
+    lax.deadline_s = Some(500.0);
+    let mut tight = text(1, 0.0, 2_000, 4);
+    tight.deadline_s = Some(1.0);
+    s.inject(lax);
+    s.inject(tight);
+    let events = drain(&mut s);
+    let first_token_order: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::FirstToken { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(first_token_order, vec![1, 0], "tight deadline must outrank earlier arrival");
+}
+
+/// Hostile deadline inputs (NaN, infinities, non-positive) are ignored
+/// — they must not poison order keys and panic the planner's sort; the
+/// request falls back to the configured SLO default.
+#[test]
+fn non_finite_deadlines_fall_back_to_default_slo() {
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -3.0] {
+        let mut s = scheduler("edf");
+        let mut req = text(0, 64, 4);
+        req.deadline_s = Some(bad);
+        s.inject(req);
+        let _ = drain(&mut s); // must not panic in the order-key sort
+        let report = s.report();
+        assert_eq!(report.outcomes.len(), 1, "deadline {bad} broke scheduling");
+        assert!(
+            report.outcomes[0].slo_latency.is_finite() && report.outcomes[0].slo_latency > 0.0,
+            "deadline {bad} leaked into SLO accounting: {}",
+            report.outcomes[0].slo_latency
+        );
+    }
+}
+
+/// SLO classes shift the class-priority schedule: a BestEffort flood
+/// does not delay a Critical request, and the Critical request beats
+/// identical Standard peers to its first token.
+#[test]
+fn critical_class_outranks_standard_peers() {
+    let mut s = scheduler("tcm");
+    // identical requests, same arrival: the Critical one must win TTFT
+    for id in 0..6u64 {
+        let mut r = text(id, 0.0, 4_000, 8);
+        r.slo_class = match id {
+            5 => Some(SloClass::Critical),
+            0 | 1 => Some(SloClass::BestEffort),
+            _ => None,
+        };
+        s.inject(r);
+    }
+    let events = drain(&mut s);
+    let first: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::FirstToken { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(first.first(), Some(&5), "critical request must reach its token first: {first:?}");
+    let be_positions: Vec<usize> = first
+        .iter()
+        .enumerate()
+        .filter(|(_, id)| **id <= 1)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(
+        be_positions.iter().all(|&i| i >= first.len() - 2),
+        "best-effort requests must trail: {first:?}"
+    );
+}
+
+/// Conservation under a cancel storm: cancel every other request at
+/// assorted moments; finished + cancelled == submitted, zero KV at
+/// drain, one terminal event each.
+#[test]
+fn cancel_storm_conserves() {
+    let mut s = scheduler("tcm");
+    let n = 40u64;
+    for id in 0..n {
+        s.inject(text(id, id as f64 * 0.05, 512, 16));
+    }
+    let mut events = Vec::new();
+    let mut cancelled = Vec::new();
+    let mut steps = 0u64;
+    loop {
+        match s.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => s.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => s.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => s.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        if steps % 3 == 0 {
+            let id = (steps / 3) * 2;
+            if id < n && s.cancel(id) {
+                cancelled.push(id);
+            }
+        }
+        events.extend(s.take_events());
+        s.check_invariants().unwrap();
+        steps += 1;
+        assert!(steps < 1_000_000);
+    }
+    events.extend(s.take_events());
+    assert!(!cancelled.is_empty(), "the storm must land some cancels");
+    let report = s.report();
+    assert_eq!(report.total(), n as usize);
+    assert_eq!(report.cancelled.len(), cancelled.len());
+    for id in 0..n {
+        assert_eq!(terminal_events(&events, id).len(), 1, "request {id}");
+    }
+    assert_eq!(s.kv().used_blocks(), 0);
+    assert_eq!(s.active_requests(), 0);
+}

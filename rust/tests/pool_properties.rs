@@ -39,6 +39,7 @@ struct EventCounts {
     first_token: u32,
     finished: u32,
     dropped: u32,
+    cancelled: u32,
 }
 
 fn random_pool_cfg(g: &mut pt::Gen) -> ServeConfig {
@@ -80,6 +81,7 @@ fn run_stepped(
             RequestEvent::FirstToken { id, .. } => (id, |c| &mut c.first_token),
             RequestEvent::Finished { id, .. } => (id, |c| &mut c.finished),
             RequestEvent::Dropped { id, .. } => (id, |c| &mut c.dropped),
+            RequestEvent::Cancelled { id, .. } => (id, |c| &mut c.cancelled),
         };
         *field(counts.entry(id).or_default()) += 1;
     }
@@ -241,5 +243,183 @@ fn seeds_to_run() -> Vec<u64> {
 fn pool_conservation_and_determinism_sweep() {
     for seed in seeds_to_run() {
         pt::run_seeded(seed, 12, check_case);
+    }
+}
+
+/// Report, per-request event counts, and accepted-cancel ids from one
+/// cancellation-schedule run.
+type CancelRun = (tcm_serve::cluster::ClusterReport, HashMap<u64, EventCounts>, Vec<u64>);
+
+/// Drive a cluster step by step while applying a pre-generated
+/// cancellation schedule (`(step, id)` pairs — cancels fire between
+/// steps, the only place the serving leader can issue them). Returns the
+/// report, per-request event counts, and the ids whose cancel was
+/// accepted (returned `true`).
+fn run_stepped_with_cancels(
+    cfg: &ServeConfig,
+    trace: Vec<Request>,
+    schedule: &[(u64, u64)],
+) -> Result<CancelRun, String> {
+    let mut cluster = Cluster::new(cfg);
+    for req in trace {
+        cluster.inject(req);
+    }
+    let mut counts: HashMap<u64, EventCounts> = HashMap::new();
+    let mut record = |ev: RequestEvent| {
+        let (id, field): (u64, fn(&mut EventCounts) -> &mut u32) = match ev {
+            RequestEvent::Ready { id, .. } => (id, |c| &mut c.ready),
+            RequestEvent::Encoded { id, .. } => (id, |c| &mut c.encoded),
+            RequestEvent::Preempted { id, .. } => (id, |c| &mut c.preempted),
+            RequestEvent::FirstToken { id, .. } => (id, |c| &mut c.first_token),
+            RequestEvent::Finished { id, .. } => (id, |c| &mut c.finished),
+            RequestEvent::Dropped { id, .. } => (id, |c| &mut c.dropped),
+            RequestEvent::Cancelled { id, .. } => (id, |c| &mut c.cancelled),
+        };
+        *field(counts.entry(id).or_default()) += 1;
+    };
+    let mut accepted = Vec::new();
+    let mut next_cancel = 0usize;
+    let mut steps = 0u64;
+    loop {
+        while next_cancel < schedule.len() && schedule[next_cancel].0 <= steps {
+            let id = schedule[next_cancel].1;
+            if cluster.cancel(id) {
+                accepted.push(id);
+            }
+            next_cancel += 1;
+        }
+        let out = cluster.step();
+        for ev in cluster.take_events() {
+            record(ev);
+        }
+        match out {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => cluster.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        if steps % 32 == 0 {
+            cluster.check_invariants().map_err(|e| format!("step {steps}: {e}"))?;
+        }
+        steps += 1;
+        if steps >= 5_000_000 {
+            return Err("stepping did not drain".into());
+        }
+    }
+    for ev in cluster.take_events() {
+        record(ev);
+    }
+    cluster.check_invariants().map_err(|e| format!("at drain: {e}"))?;
+    // occupancy must return to zero: cancellation released every KV
+    // block and encoder slot it touched
+    if cluster.kv_blocks_in_use() != 0 {
+        return Err(format!("{} KV blocks still reserved at drain", cluster.kv_blocks_in_use()));
+    }
+    if cluster.pool_active() != 0 {
+        return Err(format!("{} encodes still occupy the pool at drain", cluster.pool_active()));
+    }
+    if cluster.active_requests() != 0 {
+        return Err(format!("{} requests still active at drain", cluster.active_requests()));
+    }
+    Ok((cluster.report(), counts, accepted))
+}
+
+/// Random cancellation injection (the lifecycle satellite): across seeds
+/// × routers × pool modes, every accepted cancel yields exactly one
+/// terminal event (`Cancelled`, no `Finished`/`Dropped`), occupancy
+/// returns to zero at drain, and the report conserves
+/// `finished + failed + cancelled == submitted` — deterministically.
+fn check_cancellation_case(g: &mut pt::Gen) -> Result<(), String> {
+    let cfg = random_pool_cfg(g);
+    let profile = tcm_serve::model::by_name(&cfg.model).expect("default model");
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+    let label = format!(
+        "cancel/{}/{}/r{}/pool={}x{}",
+        cfg.policy, cfg.cluster.router, cfg.cluster.replicas, cfg.pool.enabled, cfg.pool.slots
+    );
+    // Pre-generate the schedule so runs are reproducible: ~40% of ids,
+    // each cancelled at a small step index (early cancels hit pending
+    // arrivals and pool queues; later ones hit waiting/running state).
+    let mut schedule: Vec<(u64, u64)> = trace
+        .iter()
+        .filter(|_| g.rng.bool(0.4))
+        .map(|r| (g.u64_in(0, 80), r.id))
+        .collect();
+    schedule.sort_unstable();
+
+    let (cr, counts, accepted) = run_stepped_with_cancels(&cfg, trace.clone(), &schedule)?;
+
+    // conservation across all three terminal kinds
+    if cr.report.total() != n {
+        return Err(format!(
+            "{label}: {} outcomes + {} failed + {} cancelled for {n} submitted",
+            cr.report.outcomes.len(),
+            cr.report.failed.len(),
+            cr.report.cancelled.len()
+        ));
+    }
+    if cr.report.cancelled.len() != accepted.len() {
+        return Err(format!(
+            "{label}: {} cancelled outcomes for {} accepted cancels",
+            cr.report.cancelled.len(),
+            accepted.len()
+        ));
+    }
+    for (id, c) in &counts {
+        let terminals = c.finished + c.dropped + c.cancelled;
+        if terminals != 1 {
+            return Err(format!(
+                "{label}: req {id} terminal events: {} finished + {} dropped + {} cancelled",
+                c.finished, c.dropped, c.cancelled
+            ));
+        }
+    }
+    for id in &accepted {
+        let c = counts
+            .get(id)
+            .ok_or_else(|| format!("{label}: accepted cancel of {id} left no events"))?;
+        if c.cancelled != 1 || c.finished != 0 || c.dropped != 0 {
+            return Err(format!(
+                "{label}: cancelled req {id} events: {} cancelled / {} finished / {} dropped",
+                c.cancelled, c.finished, c.dropped
+            ));
+        }
+    }
+    // ids whose cancel was rejected must have completed or dropped
+    for (step_id, id) in &schedule {
+        let _ = step_id;
+        if !accepted.contains(id) {
+            let c = &counts[id];
+            if c.cancelled != 0 {
+                return Err(format!("{label}: rejected cancel of {id} still emitted Cancelled"));
+            }
+        }
+    }
+    if counts.len() != n {
+        return Err(format!("{label}: events cover {} of {n} requests", counts.len()));
+    }
+
+    // determinism: identical trace + schedule reproduce bit-for-bit
+    let (cr2, _, accepted2) = run_stepped_with_cancels(&cfg, trace, &schedule)?;
+    if accepted2 != accepted {
+        return Err(format!("{label}: accepted-cancel set diverged between identical runs"));
+    }
+    if cr2.makespan.to_bits() != cr.makespan.to_bits() {
+        return Err(format!("{label}: makespan diverged between identical runs"));
+    }
+    for (x, y) in cr.report.cancelled.iter().zip(&cr2.report.cancelled) {
+        if x.id != y.id || x.cancelled_at.to_bits() != y.cancelled_at.to_bits() {
+            return Err(format!("{label}: cancelled outcome {} diverged", x.id));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn cancellation_conservation_sweep() {
+    for seed in seeds_to_run() {
+        pt::run_seeded(seed ^ 0xCA9C_E1, 10, check_cancellation_case);
     }
 }

@@ -26,6 +26,7 @@ fn req(id: u64, arrival: f64, m: Modality, text: u32, mm: u32, out: u32) -> Requ
         mm_tokens: mm,
         video_duration_s: if m == Modality::Video { 30.0 } else { 0.0 },
         output_tokens: out,
+        ..Request::default()
     }
 }
 

@@ -123,6 +123,7 @@ fn adversarial_traces_never_wedge() {
                 mm_tokens: mm,
                 video_duration_s: dur,
                 output_tokens: g.u64_in(1, 600) as u32,
+                ..Request::default()
             });
         }
         let r = run_sim_with_trace(&cfg, trace);

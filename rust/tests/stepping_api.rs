@@ -106,7 +106,9 @@ fn events_consistent(policy: &str, report: &Report, events: &[RequestEvent]) -> 
             RequestEvent::FirstToken { .. } => firsts += 1,
             RequestEvent::Finished { .. } => finishes += 1,
             RequestEvent::Dropped { .. } => drops += 1,
-            RequestEvent::Encoded { .. } | RequestEvent::Preempted { .. } => {}
+            RequestEvent::Encoded { .. }
+            | RequestEvent::Preempted { .. }
+            | RequestEvent::Cancelled { .. } => {}
         }
     }
     if finishes != report.outcomes.len() {
@@ -247,6 +249,7 @@ fn injection_between_steps_is_scheduled() {
         mm_tokens: 0,
         video_duration_s: 0.0,
         output_tokens: 8,
+        ..Request::default()
     };
 
     sched.inject(req(0, 0.0));
