@@ -75,13 +75,13 @@ mod real {
         let total_tokens: u64 = rep.outcomes.iter().map(|o| o.output_tokens as u64).sum();
         println!(
             "\ncompleted {}/{} requests | wall {:.1}s | engine iterations {} | \
-             decode throughput {:.1} tok/s | scheduler planning {:.1} ms total",
+             decode throughput {:.1} tok/s | scheduler planning {} key evals",
             rep.outcomes.len(),
             n,
             wall,
             sched.stats.iterations,
             total_tokens as f64 / wall,
-            sched.stats.planning_time_s * 1e3,
+            sched.stats.planning_evals,
         );
         sched.check_invariants().expect("invariants");
         println!("OK — three layers composed: Pallas kernel -> TinyMLLM HLO -> PJRT -> coordinator");

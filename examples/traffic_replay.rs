@@ -32,7 +32,7 @@ fn replay_stepped(cfg: &ServeConfig, trace: &[Request]) -> (Report, u64, u64) {
     let mut sched = Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&profile)));
 
     let mut pending = trace.to_vec();
-    pending.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    pending.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     let mut iter = pending.into_iter();
     let mut next = iter.next();
     let mut first_tokens = 0u64;

@@ -1,10 +1,11 @@
 //! §Perf — L3 hot-path microbenchmarks: the coordinator must never be the
-//! bottleneck (target: planning ≪ iteration execution; < 50 µs/iteration
-//! at realistic queue depths).
+//! bottleneck (target: planning ≪ iteration execution at realistic queue
+//! depths).
 //!
-//! Measures (a) end-to-end planning overhead per iteration from a full
-//! simulated run, (b) the scoring/classification/KV primitives that
-//! dominate planning.
+//! Measures (a) planning *work* per iteration (key evaluations — a
+//! deterministic counter; the sim core never reads a wall clock), (b) the
+//! scoring/classification/KV primitives that dominate planning, timed
+//! here in the bench harness where wall time belongs.
 
 use tcm_serve::bench_harness::{bench, record_named};
 use tcm_serve::config::{RegulatorConfig, ServeConfig};
@@ -13,7 +14,7 @@ use tcm_serve::coordinator::priority::PriorityRegulator;
 use tcm_serve::coordinator::profiler::Profiler;
 use tcm_serve::engine::kv_cache::KvCache;
 use tcm_serve::experiments::run_sim;
-use tcm_serve::request::Class;
+use tcm_serve::request::{Class, Request};
 
 fn main() {
     println!("=== L3 scheduler hot-path perf ===\n");
@@ -27,19 +28,20 @@ fn main() {
         cfg.seed = 99;
         let r = run_sim(&cfg);
         println!(
-            "{policy:>6}: {:>7} iterations, planning {:>8.1} µs/iter (total {:.1} ms), \
+            "{policy:>6}: {:>7} iterations, planning {:>8.1} evals/iter (total {} evals), \
              virtual busy {:.0} s",
             r.stats.iterations,
-            r.stats.planning_time_s * 1e6 / r.stats.iterations as f64,
-            r.stats.planning_time_s * 1e3,
+            r.stats.planning_evals as f64 / r.stats.iterations.max(1) as f64,
+            r.stats.planning_evals,
             r.stats.busy_time_s
         );
-        // informational (hot=false): this is a single-run mean, not a
-        // harness median — one OS descheduling spike would make it flaky
-        // as a CI gate; the primitive benches below carry the hot gate
+        // informational (hot=false): a deterministic work count, not a
+        // timing — the sim core never reads a wall clock, so planning
+        // cost is tracked as key evaluations per iteration; the primitive
+        // benches below carry the hot timing gate
         record_named(
-            &format!("planning_per_iter/{policy}"),
-            r.stats.planning_time_s * 1e9 / r.stats.iterations.max(1) as f64,
+            &format!("planning_evals_per_iter/{policy}"),
+            r.stats.planning_evals as f64 / r.stats.iterations.max(1) as f64,
             None,
             false,
         );

@@ -1,0 +1,270 @@
+//! Minimal Rust lexer for simlint: produces a *masked* copy of the source
+//! in which comments and string/char literals are blanked to spaces
+//! (newlines preserved), plus the list of comments for `simlint: allow`
+//! marker parsing.
+//!
+//! Masking rather than full tokenization keeps byte offsets stable: a
+//! finding's offset into the masked text is its offset into the original
+//! source, so line numbers and excerpts come straight from the input.
+//!
+//! Handled: line comments, nested block comments, plain strings with
+//! escapes, raw strings `r"…"`/`r#"…"#` (any hash count), byte strings
+//! `b"…"`/`br#"…"#`, char literals (including escapes and the quote char
+//! `'"'`), and lifetimes/loop labels (left untouched — `'a` is code, not
+//! a literal).
+
+/// Masked source. `code` has the same byte length as the input.
+pub struct Masked {
+    /// The source with comments and literals blanked to spaces.
+    pub code: String,
+    /// `(byte offset, full comment text including delimiters)`.
+    pub comments: Vec<(usize, String)>,
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Blank `out[from..to]` to spaces, preserving newlines so line numbers
+/// survive masking.
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for slot in out[from..to].iter_mut() {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Consume a plain (escaped) string literal starting at the opening `"`.
+/// Returns the index just past the closing quote; blanks the whole span.
+fn mask_string(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let len = b.len();
+    let mut i = start + 1;
+    while i < len {
+        match b[i] {
+            b'\\' => i = (i + 2).min(len),
+            b'"' => {
+                i += 1;
+                break;
+            }
+            _ => i += 1,
+        }
+    }
+    blank(out, start, i);
+    i
+}
+
+/// Consume a raw string starting at its opening quote, with `hashes`
+/// trailing `#`s required to close. Blanks from the quote (the `r#`
+/// prefix is inert for every rule, so it can stay).
+fn mask_raw_string(b: &[u8], out: &mut [u8], quote: usize, hashes: usize) -> usize {
+    let len = b.len();
+    let mut i = quote + 1;
+    while i < len {
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            let mut seen = 0;
+            while seen < hashes && j < len && b[j] == b'#' {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                i = j;
+                break;
+            }
+        }
+        i += 1;
+    }
+    blank(out, quote, i);
+    i
+}
+
+/// Consume a char (or byte-char) literal starting at the opening `'`.
+fn mask_char(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let len = b.len();
+    let mut i = start + 1;
+    while i < len {
+        match b[i] {
+            b'\\' => i = (i + 2).min(len),
+            b'\'' => {
+                i += 1;
+                break;
+            }
+            _ => i += 1,
+        }
+    }
+    blank(out, start, i);
+    i
+}
+
+/// Mask comments and literals out of `src`.
+pub fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let len = b.len();
+    let mut out = b.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+
+    while i < len {
+        let c = b[i];
+        if c == b'/' && i + 1 < len && (b[i + 1] == b'/' || b[i + 1] == b'*') {
+            let start = i;
+            if b[i + 1] == b'/' {
+                while i < len && b[i] != b'\n' {
+                    i += 1;
+                }
+            } else {
+                let mut depth = 1u32;
+                i += 2;
+                while i < len && depth > 0 {
+                    if b[i] == b'/' && i + 1 < len && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < len && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            comments.push((start, src[start..i].to_string()));
+            blank(&mut out, start, i);
+            continue;
+        }
+        if is_ident(c) {
+            // Scan the whole identifier so string prefixes (`r`, `b`,
+            // `br`) are recognized exactly and `format!("{r}")`-style
+            // names never misparse.
+            let start = i;
+            while i < len && is_ident(b[i]) {
+                i += 1;
+            }
+            let word = &src[start..i];
+            if i < len {
+                match (word, b[i]) {
+                    ("r", b'"') | ("br", b'"') => i = mask_raw_string(b, &mut out, i, 0),
+                    ("r", b'#') | ("br", b'#') => {
+                        let mut j = i;
+                        let mut hashes = 0;
+                        while j < len && b[j] == b'#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < len && b[j] == b'"' {
+                            i = mask_raw_string(b, &mut out, j, hashes);
+                        }
+                    }
+                    ("b", b'"') => i = mask_string(b, &mut out, i),
+                    ("b", b'\'') => i = mask_char(b, &mut out, i),
+                    _ => {}
+                }
+            }
+            continue;
+        }
+        if c == b'"' {
+            i = mask_string(b, &mut out, i);
+            continue;
+        }
+        if c == b'\'' {
+            if i + 1 < len && b[i + 1] == b'\\' {
+                i = mask_char(b, &mut out, i);
+                continue;
+            }
+            // `'x'` (x possibly multibyte) is a char literal; `'a` with no
+            // closing quote is a lifetime or loop label — plain code.
+            let chlen = utf8_len(b.get(i + 1).copied().unwrap_or(0));
+            if i + 1 + chlen < len && b[i + 1 + chlen] == b'\'' && b[i + 1] != b'\'' {
+                blank(&mut out, i, i + 2 + chlen);
+                i += 2 + chlen;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+
+    let code = String::from_utf8(out).expect("masking only writes ASCII spaces");
+    Masked { code, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_blank_but_keep_newlines() {
+        let m = mask("let x = 1; // HashMap here\nlet y = 2;\n");
+        assert!(!m.code.contains("HashMap"));
+        assert_eq!(m.code.matches('\n').count(), 2);
+        assert_eq!(m.comments.len(), 1);
+        assert!(m.comments[0].1.contains("HashMap"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let m = mask("a /* outer /* HashMap */ still comment */ b");
+        assert!(!m.code.contains("HashMap"));
+        assert!(!m.code.contains("still"));
+        assert!(m.code.contains('a') && m.code.contains('b'));
+        assert_eq!(m.comments.len(), 1);
+    }
+
+    #[test]
+    fn strings_blank_including_escapes() {
+        let m = mask(r#"let s = "Instant::now \" HashMap"; let t = 1;"#);
+        assert!(!m.code.contains("Instant"));
+        assert!(!m.code.contains("HashMap"));
+        assert!(m.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let m = mask(r###"let a = r#"HashMap " still"#; let b = br"SystemTime"; let c = b"x";"###);
+        assert!(!m.code.contains("HashMap"));
+        assert!(!m.code.contains("still"));
+        assert!(!m.code.contains("SystemTime"));
+        assert!(m.code.contains("let b ="));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let m = mask(r"fn f<'a>(x: &'a str) -> char { let q = '\''; let z = '\u{41}'; 'x' }");
+        assert!(m.code.contains("<'a>"), "lifetime must survive: {}", m.code);
+        assert!(m.code.contains("&'a str"));
+        assert!(!m.code.contains(r"\u{41}"));
+        assert!(!m.code.contains("'x'"));
+    }
+
+    #[test]
+    fn quote_char_literal_does_not_open_a_string() {
+        let m = mask("let q = '\"'; let h = HashMapLike;");
+        assert!(m.code.contains("HashMapLike"));
+        assert!(!m.code.contains('"'));
+    }
+
+    #[test]
+    fn masked_length_equals_input() {
+        let src = "let s = \"héllo\"; // déjà\nlet x = 'é';\n";
+        let m = mask(src);
+        assert_eq!(m.code.len(), src.len());
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_structure() {
+        let m = mask("let s = \"one\ntwo\nthree\";\nlet x = 1;");
+        assert_eq!(m.code.matches('\n').count(), 3);
+        assert!(m.code.contains("let x = 1;"));
+        assert!(!m.code.contains("two"));
+    }
+}

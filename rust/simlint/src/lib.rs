@@ -1,0 +1,548 @@
+//! simlint: a determinism & panic-safety static-analysis pass over the
+//! tcm-serve sim core.
+//!
+//! The repo's headline guarantee — bit-identical stepped==batch,
+//! trait==concrete, pool-off==baseline equivalence — is only as strong as
+//! the source tree's discipline: one `HashMap` iteration on a scheduling
+//! path, one wall-clock read inside the virtual-time loop, or one
+//! `partial_cmp().unwrap()` on an adversarial NaN breaks it. simlint
+//! makes that discipline machine-checked:
+//!
+//! | rule                 | hazard                                        | scope                                   |
+//! |----------------------|-----------------------------------------------|-----------------------------------------|
+//! | `hash-container`     | `HashMap`/`HashSet` (iteration-order entropy) | sim core¹                               |
+//! | `wall-clock`         | `Instant`/`SystemTime`                        | everywhere but `server/`, `bench_harness.rs`, `main.rs` |
+//! | `partial-cmp-unwrap` | `partial_cmp(…).unwrap()`/`.expect()`         | all of `rust/src`                       |
+//! | `entropy`            | `thread_rng`/`RandomState`/`rand::`/…         | everywhere but `util/rng.rs`            |
+//! | `config-panic`       | `.unwrap()`/`.expect()` on parse paths        | `config/`                               |
+//!
+//! ¹ sim core = `coordinator/`, `cluster/`, `engine/`, `sim/`,
+//! `backend.rs`, `request.rs`, `report.rs`.
+//!
+//! `#[cfg(test)]` / `#[test]` regions are skipped for every rule (tests
+//! construct hazards on purpose). A justified exception is annotated
+//! inline — `// simlint: allow(<rule>) — <reason>` on the offending line
+//! or the line above — and is counted and printed, never silent.
+
+pub mod lexer;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+pub const RULE_HASH: &str = "hash-container";
+pub const RULE_CLOCK: &str = "wall-clock";
+pub const RULE_PARTIAL_CMP: &str = "partial-cmp-unwrap";
+pub const RULE_ENTROPY: &str = "entropy";
+pub const RULE_CONFIG_PANIC: &str = "config-panic";
+
+/// Every rule id, in report order.
+pub const RULES: [&str; 5] =
+    [RULE_HASH, RULE_CLOCK, RULE_PARTIAL_CMP, RULE_ENTROPY, RULE_CONFIG_PANIC];
+
+/// One hazard the pass found (after allow-marker suppression).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// One `simlint: allow(...)` marker encountered in the tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowUse {
+    pub file: String,
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    /// Did the marker actually suppress a finding? Unused markers are
+    /// reported so stale annotations surface.
+    pub used: bool,
+}
+
+impl fmt::Display for AllowUse {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: allow({}) — {}{}",
+            self.file,
+            self.line,
+            self.rules.join(", "),
+            if self.reason.is_empty() { "(no reason)" } else { &self.reason },
+            if self.used { "" } else { " [unused]" }
+        )
+    }
+}
+
+/// The pass result over a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowUse>,
+    pub files_scanned: usize,
+}
+
+/// Which rules apply to a file, by its root-relative path.
+#[derive(Debug, Clone, Copy)]
+struct Scope {
+    hash: bool,
+    clock: bool,
+    partial_cmp: bool,
+    entropy: bool,
+    config_panic: bool,
+}
+
+fn scope_for(rel: &str) -> Scope {
+    let sim_core = rel.starts_with("coordinator/")
+        || rel.starts_with("cluster/")
+        || rel.starts_with("engine/")
+        || rel.starts_with("sim/")
+        || rel == "backend.rs"
+        || rel == "request.rs"
+        || rel == "report.rs";
+    Scope {
+        hash: sim_core,
+        clock: !(rel.starts_with("server/") || rel == "bench_harness.rs" || rel == "main.rs"),
+        partial_cmp: true,
+        entropy: rel != "util/rng.rs",
+        config_panic: rel.starts_with("config/"),
+    }
+}
+
+/// A token over masked code: a word (`[A-Za-z0-9_]+`) or one punct char.
+struct Tok<'a> {
+    text: &'a str,
+    off: usize,
+    word: bool,
+}
+
+fn tokenize(code: &str) -> Vec<Tok<'_>> {
+    let b = code.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'_' || c.is_ascii_alphanumeric() {
+            let start = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            toks.push(Tok { text: &code[start..i], off: start, word: true });
+        } else {
+            let chlen = match c {
+                0x00..=0x7F => 1,
+                0xC0..=0xDF => 2,
+                0xE0..=0xEF => 3,
+                _ => 4,
+            };
+            toks.push(Tok { text: &code[i..i + chlen], off: i, word: false });
+            i += chlen;
+        }
+    }
+    toks
+}
+
+fn tok_text<'a>(toks: &'a [Tok], k: usize) -> &'a str {
+    toks.get(k).map(|t| t.text).unwrap_or("")
+}
+
+/// Index of the `)` closing the `(` at `open`, by token-level balance.
+fn close_paren(toks: &[Tok], open: usize) -> Option<usize> {
+    if tok_text(toks, open) != "(" {
+        return None;
+    }
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.text {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Byte ranges covered by `#[cfg(test)]` / `#[test]` items (the attribute
+/// through the end of the annotated item). Rules skip these: tests build
+/// hazards on purpose (NaN injection, wall-clock sanity checks).
+fn test_regions(toks: &[Tok], code_len: usize) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut k = 0;
+    while k < toks.len() {
+        let is_attr = tok_text(toks, k) == "#" && tok_text(toks, k + 1) == "[";
+        if is_attr {
+            let (matched, attr_end) = if tok_text(toks, k + 2) == "test"
+                && tok_text(toks, k + 3) == "]"
+            {
+                (true, k + 4)
+            } else if tok_text(toks, k + 2) == "cfg"
+                && tok_text(toks, k + 3) == "("
+                && tok_text(toks, k + 4) == "test"
+                && tok_text(toks, k + 5) == ")"
+                && tok_text(toks, k + 6) == "]"
+            {
+                (true, k + 7)
+            } else {
+                (false, k)
+            };
+            if matched {
+                let start = toks[k].off;
+                let mut j = attr_end;
+                let mut depth = 0i32;
+                let mut end = code_len;
+                while j < toks.len() {
+                    match tok_text(toks, j) {
+                        "{" => depth += 1,
+                        "}" if depth > 0 => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = toks[j].off + 1;
+                                break;
+                            }
+                        }
+                        ";" if depth == 0 => {
+                            end = toks[j].off + 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                regions.push((start, end));
+                k = j + 1;
+                continue;
+            }
+        }
+        k += 1;
+    }
+    regions
+}
+
+/// Run every in-scope rule over the token stream. Returns raw hits as
+/// `(byte offset, rule)` — suppression and test-region filtering happen
+/// in [`lint_source`].
+fn scan(toks: &[Tok], sc: &Scope) -> Vec<(usize, &'static str)> {
+    let mut hits = Vec::new();
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if !t.word {
+            continue;
+        }
+        let prev_dot = k > 0 && toks[k - 1].text == ".";
+        match t.text {
+            "HashMap" | "HashSet" if sc.hash => hits.push((t.off, RULE_HASH)),
+            "Instant" | "SystemTime" if sc.clock => hits.push((t.off, RULE_CLOCK)),
+            "thread_rng" | "from_entropy" | "getrandom" | "RandomState" if sc.entropy => {
+                hits.push((t.off, RULE_ENTROPY))
+            }
+            "rand" if sc.entropy => {
+                if tok_text(toks, k + 1) == ":" && tok_text(toks, k + 2) == ":" {
+                    hits.push((t.off, RULE_ENTROPY));
+                }
+            }
+            "partial_cmp" if sc.partial_cmp && prev_dot => {
+                if let Some(close) = close_paren(toks, k + 1) {
+                    if tok_text(toks, close + 1) == "."
+                        && matches!(tok_text(toks, close + 2), "unwrap" | "expect")
+                    {
+                        hits.push((t.off, RULE_PARTIAL_CMP));
+                    }
+                }
+            }
+            "unwrap" | "expect" if sc.config_panic && prev_dot => {
+                hits.push((t.off, RULE_CONFIG_PANIC))
+            }
+            _ => {}
+        }
+    }
+    hits
+}
+
+fn parse_allow(comment: &str) -> Option<(Vec<String>, String)> {
+    let idx = comment.find("simlint: allow(")?;
+    let rest = &comment[idx + "simlint: allow(".len()..];
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let reason = rest[close + 1..]
+        .trim()
+        .trim_start_matches(['—', '-', ':', ' '])
+        .trim()
+        .trim_end_matches("*/")
+        .trim()
+        .to_string();
+    Some((rules, reason))
+}
+
+/// Lint one file's source. `rel` is the root-relative `/`-separated path
+/// (drives rule scoping). Returns suppressed-filtered findings plus every
+/// allow marker seen.
+pub fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<AllowUse>) {
+    let masked = lexer::mask(src);
+    let toks = tokenize(&masked.code);
+    let sc = scope_for(rel);
+    let regions = test_regions(&toks, masked.code.len());
+
+    let mut hits = scan(&toks, &sc);
+    hits.retain(|&(off, _)| !regions.iter().any(|&(s, e)| s <= off && off < e));
+
+    // Byte offset of each line start, for offset → line mapping.
+    let mut line_starts = vec![0usize];
+    for (i, b) in src.bytes().enumerate() {
+        if b == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let line_of = |off: usize| line_starts.partition_point(|&s| s <= off);
+    let src_lines: Vec<&str> = src.lines().collect();
+    let masked_lines: Vec<&str> = masked.code.lines().collect();
+
+    // A marker binds to its own line and to the next line that has any
+    // masked (i.e. real) code after it — so it works both appended to the
+    // offending line and on a line of its own above it.
+    struct Marker {
+        rules: Vec<String>,
+        reason: String,
+        line: usize,
+        binds: Vec<usize>,
+        used: bool,
+    }
+    let mut markers: Vec<Marker> = Vec::new();
+    for (off, text) in &masked.comments {
+        if let Some((rules, reason)) = parse_allow(text) {
+            let line = line_of(*off);
+            let mut binds = vec![line];
+            if let Some(next) = (line + 1..=masked_lines.len())
+                .find(|&l| !masked_lines[l - 1].trim().is_empty())
+            {
+                binds.push(next);
+            }
+            markers.push(Marker { rules, reason, line, binds, used: false });
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (off, rule) in hits {
+        let line = line_of(off);
+        let suppressed = markers.iter_mut().any(|m| {
+            let applies = m.binds.contains(&line) && m.rules.iter().any(|r| r == rule);
+            if applies {
+                m.used = true;
+            }
+            applies
+        });
+        if !suppressed {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule,
+                excerpt: src_lines.get(line - 1).map(|l| l.trim()).unwrap_or("").to_string(),
+            });
+        }
+    }
+
+    let allows = markers
+        .into_iter()
+        .map(|m| AllowUse {
+            file: rel.to_string(),
+            line: m.line,
+            rules: m.rules,
+            reason: m.reason,
+            used: m.used,
+        })
+        .collect();
+    (findings, allows)
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`, deterministically ordered.
+pub fn lint_dir(root: &Path) -> std::io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    let mut report = LintReport::default();
+    for (rel, path) in files {
+        let src = std::fs::read_to_string(&path)?;
+        let (findings, allows) = lint_source(&rel, &src);
+        report.findings.extend(findings);
+        report.allows.extend(allows);
+        report.files_scanned += 1;
+    }
+    report.findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    report.allows.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_rule_fires_in_sim_core_only() {
+        let src = "use std::collections::HashMap;\n";
+        let (in_core, _) = lint_source("coordinator/scheduler.rs", src);
+        assert_eq!(in_core.len(), 1);
+        assert_eq!(in_core[0].rule, RULE_HASH);
+        assert_eq!(in_core[0].line, 1);
+        let (outside, _) = lint_source("server/mod.rs", src);
+        assert!(outside.is_empty());
+    }
+
+    #[test]
+    fn clock_rule_exempts_server_bench_main() {
+        let src = "let t = std::time::Instant::now();\n";
+        for exempt in ["server/mod.rs", "bench_harness.rs", "main.rs"] {
+            let (f, _) = lint_source(exempt, src);
+            assert!(f.is_empty(), "{exempt} should be exempt");
+        }
+        let (f, _) = lint_source("coordinator/scheduler.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_CLOCK);
+    }
+
+    #[test]
+    fn partial_cmp_rule_spans_lines_and_spares_unwrap_or() {
+        let bad = "xs.sort_by(|a, b| {\n    a.partial_cmp(b)\n        .unwrap()\n});\n";
+        let (f, _) = lint_source("util/stats.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_PARTIAL_CMP);
+        assert_eq!(f[0].line, 2, "finding anchors at the partial_cmp call");
+
+        let ok = "a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal);\n";
+        let (f, _) = lint_source("util/stats.rs", ok);
+        assert!(f.is_empty(), "unwrap_or is panic-free");
+
+        let def = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> { None }\n";
+        let (f, _) = lint_source("sim/mod.rs", def);
+        assert!(f.is_empty(), "trait impl definitions are not calls");
+    }
+
+    #[test]
+    fn nested_call_args_do_not_break_paren_matching() {
+        let src = "k(a).partial_cmp(&k(b)).unwrap();\n";
+        let (f, _) = lint_source("backend.rs", src);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn entropy_rule_exempts_util_rng() {
+        let src = "let s = RandomState::new();\nlet x = rand::random::<u64>();\n";
+        let (f, _) = lint_source("workload/mod.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|f| f.rule == RULE_ENTROPY));
+        let (f, _) = lint_source("util/rng.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn config_panic_rule_scoped_to_config() {
+        let src = "let x: u32 = s.parse().unwrap();\nlet y: u32 = s.parse().expect(\"bad\");\n";
+        let (f, _) = lint_source("config/mod.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|f| f.rule == RULE_CONFIG_PANIC));
+        let (f, _) = lint_source("coordinator/scheduler.rs", src);
+        assert!(f.is_empty(), "bare unwrap is only policed in config/");
+    }
+
+    #[test]
+    fn comments_and_strings_never_trip() {
+        let src = "// a HashMap would break determinism\nlet s = \"Instant::now\";\n";
+        let (f, _) = lint_source("coordinator/scheduler.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = concat!(
+            "pub fn ok() {}\n\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use std::collections::HashMap;\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        let _ = HashMap::<u64, u64>::new();\n",
+            "    }\n}\n"
+        );
+        let (f, _) = lint_source("coordinator/scheduler.rs", src);
+        assert!(f.is_empty(), "hazards inside #[cfg(test)] are intentional: {f:?}");
+    }
+
+    #[test]
+    fn allow_marker_suppresses_same_line_and_next_line() {
+        let same = "use std::collections::HashMap; // simlint: allow(hash-container) — justified\n";
+        let (f, a) = lint_source("coordinator/scheduler.rs", same);
+        assert!(f.is_empty());
+        assert_eq!(a.len(), 1);
+        assert!(a[0].used);
+        assert_eq!(a[0].reason, "justified");
+
+        let above = concat!(
+            "// simlint: allow(hash-container) — justified\n",
+            "use std::collections::HashMap;\n"
+        );
+        let (f, a) = lint_source("coordinator/scheduler.rs", above);
+        assert!(f.is_empty());
+        assert!(a[0].used);
+    }
+
+    #[test]
+    fn allow_marker_for_other_rule_does_not_suppress() {
+        let src = "use std::collections::HashMap; // simlint: allow(wall-clock) — wrong rule\n";
+        let (f, a) = lint_source("coordinator/scheduler.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(!a[0].used);
+    }
+
+    #[test]
+    fn unused_markers_are_reported_unused() {
+        let src = "// simlint: allow(entropy) — stale\nlet x = 1;\n";
+        let (f, a) = lint_source("coordinator/scheduler.rs", src);
+        assert!(f.is_empty());
+        assert_eq!(a.len(), 1);
+        assert!(!a[0].used);
+    }
+}

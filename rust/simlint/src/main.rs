@@ -1,0 +1,49 @@
+//! CLI: `simlint --check <src-dir>`.
+//!
+//! Prints every finding (`file:line: [rule] excerpt`) and every
+//! `simlint: allow` marker (justified exceptions stay visible), then a
+//! one-line summary. Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dir = match args.as_slice() {
+        [flag, dir] if flag == "--check" => dir.clone(),
+        _ => {
+            eprintln!("usage: simlint --check <src-dir>");
+            eprintln!("  e.g. cargo run -p simlint -- --check rust/src");
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match simlint::lint_dir(Path::new(&dir)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: error scanning {dir}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if !report.allows.is_empty() {
+        println!("-- justified exceptions ({}) --", report.allows.len());
+        for a in &report.allows {
+            println!("{a}");
+        }
+    }
+    println!(
+        "simlint: {} file(s) scanned, {} finding(s), {} allow marker(s)",
+        report.files_scanned,
+        report.findings.len(),
+        report.allows.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

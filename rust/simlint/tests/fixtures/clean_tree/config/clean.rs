@@ -1,0 +1,9 @@
+//! Fixture: disciplined parse path — fallible, no panics.
+
+pub fn parse_rate(s: &str) -> Option<f64> {
+    s.trim().parse::<f64>().ok().filter(|x| x.is_finite())
+}
+
+pub fn fallback(s: &str) -> f64 {
+    s.parse().unwrap_or(1.0)
+}

@@ -1,0 +1,9 @@
+//! Fixture: D5 `config-panic` must fire on unwrap/expect in config/.
+
+pub fn parse_rate(s: &str) -> f64 {
+    s.trim().parse::<f64>().unwrap()
+}
+
+pub fn parse_port(s: &str) -> u16 {
+    s.parse().expect("invalid port")
+}

@@ -1,0 +1,9 @@
+//! Fixture: `simlint: allow` markers suppress and are counted, in both
+//! the same-line and line-above positions.
+
+use std::collections::HashMap; // simlint: allow(hash-container) — fixture: same-line marker
+
+pub struct Cache {
+    // simlint: allow(hash-container) — fixture: marker on the line above
+    pub map: HashMap<u64, u64>,
+}

@@ -1,0 +1,13 @@
+//! Fixture: D2 `wall-clock` must fire on Instant and SystemTime.
+
+pub fn stamp() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+pub fn epoch() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

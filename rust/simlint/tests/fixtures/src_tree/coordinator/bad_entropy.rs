@@ -1,0 +1,6 @@
+//! Fixture: D4 `entropy` must fire on ambient randomness sources.
+
+pub fn jitter() -> f64 {
+    let _state = RandomState::new();
+    rand::thread_rng().gen::<f64>()
+}

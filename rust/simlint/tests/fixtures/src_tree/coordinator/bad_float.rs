@@ -1,0 +1,18 @@
+//! Fixture: D3 `partial-cmp-unwrap` must fire on unwrap/expect after
+//! partial_cmp, including when rustfmt splits the chain across lines.
+
+pub fn sort_scores(xs: &mut [(f64, u64)]) {
+    xs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+}
+
+pub fn max_score(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| a.partial_cmp(b).expect("nan score"))
+}
+
+pub fn min_idx(xs: &[f64]) -> Option<usize> {
+    (0..xs.len()).min_by(|&i, &j| {
+        xs[i]
+            .partial_cmp(&xs[j])
+            .unwrap()
+    })
+}

@@ -1,0 +1,14 @@
+//! Fixture: D1 `hash-container` must fire on every HashMap/HashSet token.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Table {
+    pub by_id: HashMap<u64, f64>,
+    pub seen: HashSet<u64>,
+}
+
+impl Table {
+    pub fn new() -> Table {
+        Table { by_id: HashMap::new(), seen: HashSet::new() }
+    }
+}

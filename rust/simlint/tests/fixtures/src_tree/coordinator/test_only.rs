@@ -1,0 +1,22 @@
+//! Fixture: hazards inside `#[cfg(test)]` regions are intentional and
+//! must not be flagged.
+
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hazards_here_are_fine() {
+        let mut m = HashMap::new();
+        m.insert(1u64, f64::NAN);
+        let t = std::time::Instant::now();
+        let mut v = vec![2.0, 1.0];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(t.elapsed().as_secs_f64() >= 0.0);
+        assert!(m.len() + v.len() > 1);
+    }
+}

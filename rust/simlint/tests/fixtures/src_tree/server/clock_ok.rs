@@ -1,0 +1,13 @@
+//! Fixture: the server layer is real-time by nature — D2 is out of scope
+//! here, and D1 only polices the sim core.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn uptime(start: Instant) -> f64 {
+    start.elapsed().as_secs_f64()
+}
+
+pub fn sessions() -> HashMap<u64, Instant> {
+    HashMap::new()
+}

@@ -1,0 +1,10 @@
+//! Fixture: `util/rng.rs` is the one sanctioned entropy boundary — D4
+//! does not apply to this path.
+
+pub fn seed() -> u64 {
+    from_entropy()
+}
+
+fn from_entropy() -> u64 {
+    0xA5A5_A5A5
+}

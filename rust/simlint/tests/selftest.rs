@@ -1,0 +1,116 @@
+//! Vacuity guard for simlint itself: every rule must fire on its tripping
+//! fixture, the clean fixture must pass with zero findings, and — the
+//! tier-1 wiring — the real `rust/src` tree must be hazard-free.
+//!
+//! Fixture trees live under `tests/fixtures/{src_tree,clean_tree}/` and
+//! mirror the scoping layout of `rust/src` (coordinator/, config/,
+//! server/, util/rng.rs).
+
+use simlint::{lint_dir, LintReport, RULES};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn lint_fixture(name: &str) -> LintReport {
+    lint_dir(&fixture(name)).expect("fixture tree readable")
+}
+
+fn count(report: &LintReport, rule: &str) -> usize {
+    report.findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn every_rule_fires_at_least_once() {
+    let report = lint_fixture("src_tree");
+    for rule in RULES {
+        assert!(
+            count(&report, rule) > 0,
+            "rule {rule} is vacuous: no finding in the tripping fixtures\n{:#?}",
+            report.findings
+        );
+    }
+}
+
+#[test]
+fn tripping_fixtures_fire_exact_counts() {
+    let report = lint_fixture("src_tree");
+    assert_eq!(count(&report, "hash-container"), 6, "{:#?}", report.findings);
+    assert_eq!(count(&report, "wall-clock"), 2, "{:#?}", report.findings);
+    assert_eq!(count(&report, "partial-cmp-unwrap"), 3, "{:#?}", report.findings);
+    assert_eq!(count(&report, "entropy"), 3, "{:#?}", report.findings);
+    assert_eq!(count(&report, "config-panic"), 2, "{:#?}", report.findings);
+}
+
+#[test]
+fn clean_fixture_has_zero_findings() {
+    let report = lint_fixture("clean_tree");
+    assert!(report.findings.is_empty(), "clean tree flagged:\n{:#?}", report.findings);
+    assert!(report.files_scanned >= 2);
+}
+
+#[test]
+fn allow_markers_suppress_and_are_counted() {
+    let report = lint_fixture("src_tree");
+    let in_allowed: Vec<_> =
+        report.findings.iter().filter(|f| f.file.ends_with("allowed.rs")).collect();
+    assert!(in_allowed.is_empty(), "allow markers failed to suppress: {in_allowed:#?}");
+    let markers: Vec<_> =
+        report.allows.iter().filter(|a| a.file.ends_with("allowed.rs")).collect();
+    assert_eq!(markers.len(), 2, "both marker positions counted");
+    assert!(markers.iter().all(|m| m.used), "markers must register as used");
+    assert!(markers.iter().all(|m| !m.reason.is_empty()), "reasons survive parsing");
+}
+
+#[test]
+fn test_regions_and_scope_exemptions_are_skipped() {
+    let report = lint_fixture("src_tree");
+    for exempt in ["test_only.rs", "clock_ok.rs", "util/rng.rs"] {
+        let hits: Vec<_> =
+            report.findings.iter().filter(|f| f.file.ends_with(exempt)).collect();
+        assert!(hits.is_empty(), "{exempt} must produce no findings: {hits:#?}");
+    }
+}
+
+#[test]
+fn findings_are_deterministically_ordered() {
+    let a = lint_fixture("src_tree");
+    let b = lint_fixture("src_tree");
+    assert_eq!(a.findings, b.findings);
+    let mut sorted = a.findings.clone();
+    sorted.sort_by(|x, y| (&x.file, x.line, x.rule).cmp(&(&y.file, y.line, y.rule)));
+    assert_eq!(a.findings, sorted, "report order is (file, line, rule)");
+}
+
+/// Tier-1 wiring: the real sim-core tree must stay hazard-free. This is
+/// the same check CI runs via `cargo run -p simlint -- --check rust/src`,
+/// embedded in `cargo test` so the tree cannot regress silently.
+#[test]
+fn the_real_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let report = lint_dir(&src).expect("rust/src readable");
+    assert!(report.files_scanned > 20, "walked the real tree");
+    assert!(
+        report.findings.is_empty(),
+        "rust/src has unannotated determinism hazards:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // Justified exceptions stay visible and none may go stale.
+    assert!(
+        report.allows.iter().all(|a| a.used),
+        "stale allow markers:\n{}",
+        report
+            .allows
+            .iter()
+            .filter(|a| !a.used)
+            .map(|a| a.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

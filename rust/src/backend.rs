@@ -184,7 +184,7 @@ impl ServeBackend for Scheduler {
         // `Scheduler::run` in tests/stepping_api.rs and
         // tests/backend_api.rs (modulo the canonical id sort).
         let mut trace = trace;
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for req in trace {
             Scheduler::inject(self, req);
         }
@@ -194,14 +194,14 @@ impl ServeBackend for Scheduler {
     fn summary_lines(&self) -> Vec<String> {
         vec![format!(
             "iterations={} preemptions={} dropped={} cancelled={} makespan={:.1}s \
-             engine_busy={:.1}s planning={:.1}µs/iter",
+             engine_busy={:.1}s planning={:.1}evals/iter",
             self.stats.iterations,
             self.stats.preemptions,
             self.stats.dropped,
             self.stats.cancelled,
             Scheduler::now(self),
             self.stats.busy_time_s,
-            self.stats.planning_time_s * 1e6 / self.stats.iterations.max(1) as f64
+            self.stats.planning_evals as f64 / self.stats.iterations.max(1) as f64
         )]
     }
 }

@@ -74,7 +74,9 @@ pub struct ReplicaStats {
     pub cancelled: u64,
     /// Virtual seconds the replica's engine was busy.
     pub busy_time_s: f64,
-    pub planning_time_s: f64,
+    /// Order/victim-key evaluations the replica's planner performed
+    /// (deterministic planning-cost proxy — see `SchedStats`).
+    pub planning_evals: u64,
     /// The replica's final virtual clock.
     pub clock: f64,
 }
@@ -231,6 +233,9 @@ impl Cluster {
     /// timeline and is dispatched (sand → replica, multimodal → pool)
     /// when the fleet reaches its arrival instant.
     pub fn inject(&mut self, req: Request) {
+        // Sanitize before routing: the router's cost estimates read the
+        // same untrusted floats the scheduler does (see Request::sanitize).
+        let req = req.sanitize();
         if self.pool.is_some() {
             let due = req.arrival.max(self.ingress.now());
             self.ingress.schedule(due, req);
@@ -249,6 +254,7 @@ impl Cluster {
     /// migration-avoidance host preference applies (the out-of-range
     /// host can never match a candidate).
     pub fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        let req = req.sanitize();
         let views = self.views();
         let i = self.checked_replica(self.router.route_handoff(&req, &views, usize::MAX));
         self.routed[i] += 1;
@@ -552,7 +558,7 @@ impl Cluster {
     /// later).
     pub fn run(&mut self, trace: Vec<Request>) -> ClusterReport {
         let mut trace = trace;
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         if self.pool.is_some() {
             // Pool mode already dispatches from a global ingress timeline
             // (every arrival advances the fleet to its instant before
@@ -590,7 +596,7 @@ impl Cluster {
                 dropped: r.stats.dropped,
                 cancelled: r.stats.cancelled,
                 busy_time_s: r.stats.busy_time_s,
-                planning_time_s: r.stats.planning_time_s,
+                planning_evals: r.stats.planning_evals,
                 clock: r.now(),
             })
             .collect()

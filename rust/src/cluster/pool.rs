@@ -201,7 +201,7 @@ impl EncoderPool {
             .enumerate()
             .filter(|(_, s)| s.current.is_some())
             .min_by(|(ai, a), (bi, b)| {
-                a.busy_until.partial_cmp(&b.busy_until).unwrap().then(ai.cmp(bi))
+                a.busy_until.total_cmp(&b.busy_until).then(ai.cmp(bi))
             })
             .map(|(i, _)| i)?;
         let done_at = self.slots[i].busy_until;

@@ -26,7 +26,7 @@ use crate::coordinator::estimator::ImpactEstimator;
 use crate::coordinator::profiler::Profiler;
 use crate::model::ModelProfile;
 use crate::request::{Modality, Request};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Snapshot of one replica at routing time. Index in the slice handed to
 /// [`Router::route`] is the replica id.
@@ -81,12 +81,12 @@ pub trait Router: Send {
 #[derive(Debug, Default)]
 struct WorkLedger {
     outstanding: Vec<f64>,
-    by_req: HashMap<u64, (usize, f64)>,
+    by_req: BTreeMap<u64, (usize, f64)>,
 }
 
 impl WorkLedger {
     fn new(replicas: usize) -> WorkLedger {
-        WorkLedger { outstanding: vec![0.0; replicas], by_req: HashMap::new() }
+        WorkLedger { outstanding: vec![0.0; replicas], by_req: BTreeMap::new() }
     }
 
     fn assign(&mut self, req_id: u64, replica: usize, cost: f64) {

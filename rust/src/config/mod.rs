@@ -1,6 +1,11 @@
 //! Typed configuration for the serving system: defaults follow the paper's
 //! §4.1 experimental setup, overridable from a TOML file and/or CLI args.
 
+// Parse paths handle untrusted input: every fallible conversion must
+// surface a ConfigError, not panic. Mirrors simlint's `config-panic` rule
+// (tests keep unwrap for brevity, hence not(test)).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod toml;
 
 use crate::request::Class;
@@ -222,6 +227,8 @@ impl ServeConfig {
     /// built from this so `encode_overlap = true` means the same thing
     /// at any replica count.
     pub fn engine_profile(&self) -> crate::model::ModelProfile {
+        #[allow(clippy::expect_used)]
+        // simlint: allow(config-panic) — reached only after validate() checked the model name
         let profile = crate::model::by_name(&self.model).expect("validated model name");
         if self.cluster.encode_overlap {
             profile.with_encode_overlap(self.cluster.overlap_penalty_s)

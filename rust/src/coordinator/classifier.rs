@@ -84,7 +84,7 @@ impl SmartClassifier {
         // ordering in log space.
         let scores: Vec<f64> = kmeans.centroids.iter().map(|c| c.iter().sum()).collect();
         let mut order: Vec<usize> = (0..kmeans.centroids.len()).collect();
-        order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
         let mut cluster_class = vec![Class::Truck; kmeans.centroids.len()];
         for (rank, &cluster) in order.iter().enumerate() {
             cluster_class[cluster] = Class::from_index(rank.min(2));
@@ -194,7 +194,7 @@ mod tests {
     fn all_three_classes_reachable() {
         let (est, cls) = pipeline();
         let p = by_name("llava-7b").unwrap();
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         let mut gen = crate::workload::WorkloadGen::new(&p, crate::workload::MIX_MH, 2.0, 3);
         for r in gen.generate(2000) {
             seen.insert(cls.classify(&r, &est.estimate(&r)));

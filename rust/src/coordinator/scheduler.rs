@@ -41,10 +41,10 @@ use crate::engine::kv_cache::KvCache;
 use crate::engine::{DecodeItem, EncodeItem, Engine, PrefillItem, StepPlan};
 use crate::metrics::Report;
 use crate::model::ModelProfile;
-use crate::policies::{OrderKey, Policy, VictimKey};
+use crate::policies::{cmp_order_key, cmp_victim_key, OrderKey, Policy, VictimKey};
 use crate::request::Request;
 use crate::sim::EventQueue;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// How a KV reservation may obtain memory (see
 /// [`Scheduler::reserve_with_preemption`]).
@@ -112,15 +112,19 @@ pub enum RequestEvent {
 }
 
 /// Aggregate counters for introspection and the perf benches.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SchedStats {
     pub iterations: u64,
     pub preemptions: u64,
     pub dropped: u64,
     /// Requests cancelled by the client ([`Scheduler::cancel`]).
     pub cancelled: u64,
-    /// Wall-clock seconds spent in planning (L3 overhead, §Perf).
-    pub planning_time_s: f64,
+    /// Order/victim-key evaluations performed while planning (L3
+    /// overhead, §Perf). A deterministic proxy for planning cost: the
+    /// perf bench divides wall time by this to get ns/eval, while the
+    /// counter itself stays bit-identical across runs — the sim core
+    /// never reads a wall clock.
+    pub planning_evals: u64,
     /// Virtual/wall seconds the engine was busy.
     pub busy_time_s: f64,
 }
@@ -133,10 +137,10 @@ pub struct Scheduler {
     engine: Box<dyn Engine>,
     kv: KvCache,
 
-    states: HashMap<u64, ReqState>,
+    states: BTreeMap<u64, ReqState>,
     /// Requests arriving already encoded (pool handoffs): id → handoff
     /// time. They skip CPU preprocessing and the admission encode.
-    preencoded: HashMap<u64, f64>,
+    preencoded: BTreeMap<u64, f64>,
     waiting: Vec<u64>,
     running: Vec<u64>,
     queues: QueueManager,
@@ -170,8 +174,8 @@ impl Scheduler {
             policy,
             engine,
             kv,
-            states: HashMap::new(),
-            preencoded: HashMap::new(),
+            states: BTreeMap::new(),
+            preencoded: BTreeMap::new(),
             waiting: Vec::new(),
             running: Vec::new(),
             queues: QueueManager::new(),
@@ -243,6 +247,7 @@ impl Scheduler {
     /// the clock reaches its arrival time; a request whose arrival is
     /// already in the past is ingested on the next step.
     pub fn inject(&mut self, req: Request) {
+        let req = req.sanitize();
         let due = req.arrival.max(self.arrivals.now());
         self.arrivals.schedule(due, req);
     }
@@ -256,6 +261,8 @@ impl Scheduler {
     /// A later preemption-by-recompute re-encodes locally, exactly as for
     /// locally encoded requests.
     pub fn inject_preencoded(&mut self, req: Request, ready_at: f64) {
+        let req = req.sanitize();
+        let ready_at = if ready_at.is_finite() { ready_at } else { req.arrival };
         let due = ready_at.max(self.arrivals.now());
         self.preencoded.insert(req.id, ready_at);
         self.arrivals.schedule(due, req);
@@ -351,10 +358,10 @@ impl Scheduler {
             };
         }
 
-        // 3. plan
-        let t_plan = std::time::Instant::now();
+        // 3. plan — cost is accounted in key evaluations (see
+        // `SchedStats::planning_evals`), not wall time: a wall clock here
+        // would make `stats` differ between two runs of the same trace.
         let plan = self.build_plan();
-        self.stats.planning_time_s += t_plan.elapsed().as_secs_f64();
 
         if plan.is_empty() {
             // Everything schedulable is blocked; the caller decides
@@ -447,7 +454,7 @@ impl Scheduler {
     /// wrapper over the stepping API (inject everything, drain).
     pub fn run(&mut self, trace: Vec<Request>) -> Report {
         let mut trace = trace;
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for req in trace {
             self.inject(req);
         }
@@ -558,7 +565,7 @@ impl Scheduler {
             .preproc_free
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let arrival = self.states[&id].req.arrival;
         let start = self.preproc_free[w].max(arrival);
@@ -606,15 +613,16 @@ impl Scheduler {
         let mut plan = StepPlan::default();
         let mut budget = self.cfg.scheduler.token_budget as u64;
         // planned item index per request, for preemption surgery
-        let mut planned_decode: HashMap<u64, usize> = HashMap::new();
-        let mut planned_prefill: HashMap<u64, usize> = HashMap::new();
+        let mut planned_decode: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut planned_prefill: BTreeMap<u64, usize> = BTreeMap::new();
 
         // Decorate-sort: compute each key once (policy key evaluation is
         // a dyn call and, for TCM, an exp/log — O(n log n) comparator
         // invocations tripled planning time before this, §Perf).
         let mut order: Vec<(OrderKey, u64)> =
             self.running.iter().map(|&id| (self.key(id), id)).collect();
-        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.stats.planning_evals += order.len() as u64;
+        order.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
         let order: Vec<u64> = order.into_iter().map(|(_, id)| id).collect();
 
         // Phase 1: decodes
@@ -650,7 +658,8 @@ impl Scheduler {
             .chain(self.waiting.iter().copied())
             .map(|id| (self.key(id), id))
             .collect();
-        prefill_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.stats.planning_evals += prefill_order.len() as u64;
+        prefill_order.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
         let prefill_order: Vec<u64> = prefill_order.into_iter().map(|(_, id)| id).collect();
 
         for id in prefill_order {
@@ -787,8 +796,8 @@ impl Scheduler {
         mode: ReserveMode,
         plan: &mut StepPlan,
         budget: &mut u64,
-        planned_decode: &mut HashMap<u64, usize>,
-        planned_prefill: &mut HashMap<u64, usize>,
+        planned_decode: &mut BTreeMap<u64, usize>,
+        planned_prefill: &mut BTreeMap<u64, usize>,
     ) -> bool {
         loop {
             if self.kv.try_reserve(id, tokens) {
@@ -800,12 +809,13 @@ impl Scheduler {
                     // select by victim_key (class-aware policies evict
                     // trucks first); gate on order_key so a candidate
                     // never evicts someone more urgent than itself
+                    self.stats.planning_evals += self.running.len() as u64;
                     let victim = self
                         .running
                         .iter()
                         .copied()
-                        .max_by(|&a, &b| self.vkey(a).partial_cmp(&self.vkey(b)).unwrap())
-                        .filter(|&v| self.key(v) > cand_key);
+                        .max_by(|&a, &b| cmp_victim_key(&self.vkey(a), &self.vkey(b)))
+                        .filter(|&v| cmp_order_key(&self.key(v), &cand_key).is_gt());
                     match victim {
                         Some(v) => {
                             self.preempt(v, plan, budget, planned_decode, planned_prefill)
@@ -823,13 +833,14 @@ impl Scheduler {
                     // forever (live-lock). A requester alone in the cache
                     // that still cannot fit can never fit: drop it.
                     let my_key = self.vkey(id);
+                    self.stats.planning_evals += self.running.len() as u64;
                     let victim = self
                         .running
                         .iter()
                         .copied()
                         .filter(|&v| v != id)
-                        .max_by(|&a, &b| self.vkey(a).partial_cmp(&self.vkey(b)).unwrap())
-                        .filter(|&v| self.vkey(v) > my_key);
+                        .max_by(|&a, &b| cmp_victim_key(&self.vkey(a), &self.vkey(b)))
+                        .filter(|&v| cmp_victim_key(&self.vkey(v), &my_key).is_gt());
                     match victim {
                         Some(v) => {
                             self.preempt(v, plan, budget, planned_decode, planned_prefill)
@@ -859,8 +870,8 @@ impl Scheduler {
         id: u64,
         plan: &mut StepPlan,
         budget: &mut u64,
-        planned_decode: &mut HashMap<u64, usize>,
-        planned_prefill: &mut HashMap<u64, usize>,
+        planned_decode: &mut BTreeMap<u64, usize>,
+        planned_prefill: &mut BTreeMap<u64, usize>,
     ) {
         // Undo planned work (plan surgery keeps indices valid by swapping
         // with the last element and fixing its index entry).

@@ -7,7 +7,7 @@
 //! fails — exactly the resource the paper's trucks monopolize under
 //! memory pressure (§2.4).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct Alloc {
@@ -21,7 +21,7 @@ pub struct KvCache {
     block_tokens: u32,
     total_blocks: u64,
     free_blocks: u64,
-    allocs: HashMap<u64, Alloc>,
+    allocs: BTreeMap<u64, Alloc>,
     /// High-water mark of used blocks (for reporting).
     peak_used_blocks: u64,
 }
@@ -35,7 +35,7 @@ impl KvCache {
             block_tokens,
             total_blocks: capacity_tokens / block_tokens as u64,
             free_blocks: capacity_tokens / block_tokens as u64,
-            allocs: HashMap::new(),
+            allocs: BTreeMap::new(),
             peak_used_blocks: 0,
         }
     }

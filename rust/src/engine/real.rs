@@ -21,7 +21,7 @@ use super::{Engine, StepPlan};
 use crate::runtime::{literal_f32, Input, Runtime};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Per-request device-path state.
 struct ReqExec {
@@ -42,16 +42,16 @@ struct ReqExec {
 /// PJRT-backed engine over the artifacts in `artifacts/`.
 pub struct RealEngine {
     rt: Runtime,
-    reqs: HashMap<u64, ReqExec>,
+    reqs: BTreeMap<u64, ReqExec>,
     d_model: usize,
     /// Emitted tokens per request, exposed for tests/examples.
-    pub outputs: HashMap<u64, Vec<i32>>,
+    pub outputs: BTreeMap<u64, Vec<i32>>,
 }
 
 impl RealEngine {
     pub fn new(rt: Runtime) -> RealEngine {
         let d_model = rt.manifest.hparams.d_model;
-        RealEngine { rt, reqs: HashMap::new(), d_model, outputs: HashMap::new() }
+        RealEngine { rt, reqs: BTreeMap::new(), d_model, outputs: BTreeMap::new() }
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -221,6 +221,7 @@ impl RealEngine {
     /// Fallible step execution (Engine::execute unwraps; examples may call
     /// this directly for error reporting).
     pub fn try_execute(&mut self, plan: &StepPlan) -> Result<f64> {
+        // simlint: allow(wall-clock) — real-hardware engine: iteration duration IS wall time
         let t0 = std::time::Instant::now();
         for e in &plan.encodes {
             self.run_encode(e)?;

@@ -85,7 +85,7 @@ impl Summary {
         }
         let n = outcomes.len();
         let mut ttfts: Vec<f64> = outcomes.iter().map(|o| o.ttft()).collect();
-        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ttfts.sort_by(|a, b| a.total_cmp(b));
         let violators: Vec<&&Outcome> = outcomes.iter().filter(|o| o.violates_slo()).collect();
         let severity = if violators.is_empty() {
             0.0

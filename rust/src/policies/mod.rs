@@ -59,6 +59,24 @@ pub type OrderKey = (f64, f64);
 /// before motorcycles), then the order key.
 pub type VictimKey = (u8, OrderKey);
 
+/// Total lexicographic order over [`OrderKey`]s. The scheduler's sorts
+/// and victim scans must never go through `PartialOrd` + `unwrap()`: a
+/// single NaN score (adversarial input, estimator edge case) would panic
+/// the leader loop. `total_cmp` orders NaN deterministically instead
+/// (after +inf), so a poisoned request sorts last and gets served or
+/// preempted like any other — enforced tree-wide by
+/// `simlint`'s `partial-cmp-unwrap` rule.
+#[inline]
+pub fn cmp_order_key(a: &OrderKey, b: &OrderKey) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then_with(|| a.1.total_cmp(&b.1))
+}
+
+/// Total lexicographic order over [`VictimKey`]s (see [`cmp_order_key`]).
+#[inline]
+pub fn cmp_victim_key(a: &VictimKey, b: &VictimKey) -> std::cmp::Ordering {
+    a.0.cmp(&b.0).then_with(|| cmp_order_key(&a.1, &b.1))
+}
+
 /// Decision interface between the scheduler and a policy.
 pub trait Policy: Send {
     fn name(&self) -> &'static str;

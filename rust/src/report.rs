@@ -51,7 +51,7 @@ pub fn preemption_row(label: &str, s: &Summary) {
 /// Simple fixed-width CDF print: deciles of a sample (Fig 2).
 pub fn cdf_deciles(label: &str, xs: &[f64]) {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     print!("{label:<28}");
     for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
         print!(" p{q:<3}={:<10.3}", crate::util::stats::percentile_sorted(&s, q));

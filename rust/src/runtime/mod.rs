@@ -142,6 +142,7 @@ impl Runtime {
             bufs.push(b);
         }
 
+        // simlint: allow(wall-clock) — PJRT device timing: measures actual execution
         let t0 = std::time::Instant::now();
         let result = exe
             .execute_b(&bufs)

@@ -30,11 +30,9 @@ impl<T> Eq for Event<T> {}
 impl<T> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // min-heap on (time, seq): reverse the natural (max-heap) order.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // total_cmp so even a (sanitized-away) NaN time would order
+        // deterministically instead of silently tying.
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 

@@ -191,7 +191,7 @@ mod tests {
         let xs: Vec<f64> = (0..n).map(|_| r.log_uniform(10.0, 10_000.0)).collect();
         assert!(xs.iter().all(|&x| (10.0..=10_000.0).contains(&x)));
         let mut s = xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let median = s[n / 2];
         // geometric mean of bounds = 10^(2.5) ≈ 316
         assert!((median.log10() - 2.5).abs() < 0.05, "median={median}");

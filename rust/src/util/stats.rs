@@ -34,7 +34,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&s, q)
 }
 
@@ -69,7 +69,7 @@ pub fn min(xs: &[f64]) -> f64 {
 /// Empirical CDF evaluation points: returns (sorted_xs, cum_prob).
 pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let n = s.len() as f64;
     let probs = (1..=s.len()).map(|i| i as f64 / n).collect();
     (s, probs)
@@ -381,7 +381,7 @@ mod tests {
         // order clusters by norm -> should recover the three blobs
         let norms = km.centroid_norms();
         let mut order: Vec<usize> = (0..3).collect();
-        order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap());
+        order.sort_by(|&a, &b| norms[a].total_cmp(&norms[b]));
         let rank = |c: usize| order.iter().position(|&o| o == c).unwrap();
         let correct = pts
             .iter()

@@ -1,0 +1,332 @@
+//! Determinism evidence for the simlint-enforced discipline (see
+//! `rust/README.md`, "Determinism discipline"): reruns of the same
+//! seeded trace are bit-identical — reports, makespans, *and* scheduler
+//! stats, now that planning cost is a key-evaluation counter instead of
+//! a wall-clock timer — across every policy and router; hostile
+//! non-finite floats injected at the API boundary are sanitized instead
+//! of panicking or poisoning virtual time; and the full event stream
+//! hashes to the same FNV-1a digest on every rerun, with golden digests
+//! pinned per seed once recorded.
+
+mod common;
+
+use common::assert_reports_bit_identical;
+use tcm_serve::config::{ServeConfig, ROUTERS};
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::{make_trace, run_cluster_with_trace, run_sim_with_trace};
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::{Modality, Request};
+
+const POLICIES: [&str; 6] =
+    ["fcfs", "edf", "naive-class", "static-priority", "naive-aging", "tcm"];
+
+fn new_scheduler(cfg: &ServeConfig) -> Scheduler {
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let policy = build_policy(cfg, &profile);
+    Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&cfg.engine_profile())))
+}
+
+/// Rerunning the same trace must reproduce not just the report but the
+/// whole `SchedStats` struct, field for field. This is the regression
+/// test for the old `planning_time_s` wall-clock leak: a stat derived
+/// from `Instant::now()` differs between two executions of identical
+/// work, so `assert_eq!` on the full struct would catch any such field
+/// creeping back in.
+#[test]
+fn rerun_reports_and_stats_are_bit_identical_per_policy() {
+    for policy in POLICIES {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 150;
+        cfg.rate = 2.5;
+        cfg.mix = "MH".into();
+        cfg.seed = 11;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let a = run_sim_with_trace(&cfg, trace.clone());
+        let b = run_sim_with_trace(&cfg, trace);
+        assert_reports_bit_identical(policy, &a.report, &b.report);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{policy}: makespan diverged");
+        assert_eq!(a.stats, b.stats, "{policy}: scheduler stats diverged between reruns");
+        assert!(
+            a.stats.planning_evals > 0,
+            "{policy}: planning work happened, so the eval counter must move"
+        );
+    }
+}
+
+/// Same property one layer up: cluster reruns agree on per-replica stats
+/// too, under every router. `ReplicaStats::planning_evals` is part of
+/// the comparison — the cluster layer must not reintroduce wall-clock
+/// state of its own.
+#[test]
+fn cluster_rerun_stats_are_identical_per_router() {
+    for router in ROUTERS {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "tcm".into();
+        cfg.mix = "MH".into();
+        cfg.num_requests = 180;
+        cfg.rate = 3.0;
+        cfg.seed = 29;
+        cfg.cluster.replicas = 3;
+        cfg.cluster.router = router.into();
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let a = run_cluster_with_trace(&cfg, trace.clone());
+        let b = run_cluster_with_trace(&cfg, trace);
+        assert_reports_bit_identical(router, &a.report, &b.report);
+        for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+            assert_eq!(x.routed, y.routed, "{router}: replica {i} routed");
+            assert_eq!(x.iterations, y.iterations, "{router}: replica {i} iterations");
+            assert_eq!(
+                x.planning_evals, y.planning_evals,
+                "{router}: replica {i} planning_evals diverged between reruns"
+            );
+        }
+    }
+}
+
+/// Batch (`run`) and stepped execution are two different code paths over
+/// the migrated `BTreeMap` plan/state containers; they must agree on the
+/// report *and* on every stats counter, including planning work.
+#[test]
+fn stepped_run_matches_batch_stats_including_planning_evals() {
+    for policy in ["fcfs", "tcm"] {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        cfg.num_requests = 100;
+        cfg.rate = 2.0;
+        cfg.seed = 17;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let mut batch = new_scheduler(&cfg);
+        let batch_report = batch.run(trace.clone());
+
+        let mut stepped = new_scheduler(&cfg);
+        let mut sorted = trace;
+        sorted.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for req in sorted {
+            stepped.inject(req);
+        }
+        loop {
+            match stepped.step() {
+                StepOutcome::Executed { .. } => {}
+                StepOutcome::Idle { next_event } => stepped.advance_to(next_event),
+                StepOutcome::Blocked { next_event: Some(t) } => stepped.advance_to(t),
+                StepOutcome::Blocked { next_event: None } => stepped.drop_blocked(),
+                StepOutcome::Drained => break,
+            }
+        }
+        assert_reports_bit_identical(policy, &stepped.report(), &batch_report);
+        assert_eq!(stepped.stats, batch.stats, "{policy}: stepped vs batch stats diverged");
+    }
+}
+
+/// A request carrying every hostile float a client can send — NaN and
+/// infinite arrivals, NaN/negative durations, NaN/∞/negative deadlines —
+/// must degrade to a servable request at the injection boundary, not
+/// panic and not distort the rest of the run.
+fn hostile_trace() -> Vec<Request> {
+    let normal = |id: u64, arrival: f64| Request {
+        id,
+        arrival,
+        modality: Modality::Image,
+        text_tokens: 40,
+        mm_tokens: 729,
+        output_tokens: 60,
+        ..Request::default()
+    };
+    let mut trace = vec![
+        Request { arrival: f64::NAN, ..normal(100, 0.0) },
+        Request { arrival: f64::NEG_INFINITY, ..normal(101, 0.0) },
+        Request { arrival: f64::INFINITY, ..normal(102, 0.0) },
+        Request {
+            modality: Modality::Video,
+            video_duration_s: f64::NAN,
+            mm_tokens: 4000,
+            ..normal(103, 0.5)
+        },
+        Request {
+            modality: Modality::Video,
+            video_duration_s: -30.0,
+            mm_tokens: 4000,
+            ..normal(104, 0.6)
+        },
+        Request { deadline_s: Some(f64::NAN), ..normal(105, 0.7) },
+        Request { deadline_s: Some(f64::NEG_INFINITY), ..normal(106, 0.8) },
+        Request { deadline_s: Some(0.0), ..normal(107, 0.9) },
+    ];
+    for id in 0..8u64 {
+        trace.push(normal(id, 0.1 * id as f64));
+    }
+    trace
+}
+
+#[test]
+fn hostile_floats_are_sanitized_at_the_scheduler_boundary() {
+    for policy in POLICIES {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = policy.into();
+        let trace = hostile_trace();
+        let n = trace.len();
+        let report = run_sim_with_trace(&cfg, trace).report;
+        assert_eq!(
+            report.outcomes.len() + report.failed.len() + report.cancelled.len(),
+            n,
+            "{policy}: every request must reach a terminal state"
+        );
+        for o in &report.outcomes {
+            assert!(o.first_token.is_finite(), "{policy}: req {} TTFT not finite", o.id);
+            assert!(o.finish.is_finite(), "{policy}: req {} finish not finite", o.id);
+        }
+    }
+}
+
+#[test]
+fn hostile_floats_are_sanitized_at_the_cluster_boundary() {
+    // the router's cost estimates read the same untrusted floats the
+    // scheduler does; 2 replicas exercise the routing decision on them
+    for router in ROUTERS {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "tcm".into();
+        cfg.cluster.replicas = 2;
+        cfg.cluster.router = router.into();
+        let trace = hostile_trace();
+        let n = trace.len();
+        let cr = run_cluster_with_trace(&cfg, trace);
+        assert_eq!(
+            cr.report.outcomes.len() + cr.report.failed.len() + cr.report.cancelled.len(),
+            n,
+            "{router}: every request must reach a terminal state"
+        );
+        assert!(cr.makespan.is_finite(), "{router}: makespan poisoned by hostile floats");
+    }
+}
+
+#[test]
+fn sanitize_clamps_exactly_the_non_finite_fields() {
+    let hostile = Request {
+        arrival: f64::NAN,
+        video_duration_s: f64::INFINITY,
+        deadline_s: Some(f64::NAN),
+        ..Request::default()
+    };
+    let clean = hostile.sanitize();
+    assert_eq!(clean.arrival.to_bits(), 0.0f64.to_bits());
+    assert_eq!(clean.video_duration_s.to_bits(), 0.0f64.to_bits());
+    assert_eq!(clean.deadline_s, None);
+
+    // negative duration and non-positive deadline are clamped too
+    let negative = Request {
+        video_duration_s: -1.0,
+        deadline_s: Some(-5.0),
+        ..Request::default()
+    }
+    .sanitize();
+    assert_eq!(negative.video_duration_s.to_bits(), 0.0f64.to_bits());
+    assert_eq!(negative.deadline_s, None);
+
+    // well-formed fields pass through bit-untouched
+    let good = Request {
+        arrival: 3.25,
+        video_duration_s: 45.0,
+        deadline_s: Some(12.5),
+        ..Request::default()
+    }
+    .sanitize();
+    assert_eq!(good.arrival.to_bits(), 3.25f64.to_bits());
+    assert_eq!(good.video_duration_s.to_bits(), 45.0f64.to_bits());
+    assert_eq!(good.deadline_s, Some(12.5));
+}
+
+// ---------------------------------------------------------------------
+// Golden event streams: the entire observable history of a seeded run,
+// folded into one FNV-1a digest.
+
+fn fnv1a(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn hash_events(events: &[RequestEvent]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for e in events {
+        let (tag, id, t) = match *e {
+            RequestEvent::Ready { id, t } => (1u8, id, t),
+            RequestEvent::Encoded { id, t } => (2, id, t),
+            RequestEvent::FirstToken { id, t } => (3, id, t),
+            RequestEvent::Preempted { id, t } => (4, id, t),
+            RequestEvent::Finished { id, t } => (5, id, t),
+            RequestEvent::Dropped { id, t } => (6, id, t),
+            RequestEvent::Cancelled { id, t } => (7, id, t),
+        };
+        fnv1a(&mut h, &[tag]);
+        fnv1a(&mut h, &id.to_le_bytes());
+        fnv1a(&mut h, &t.to_bits().to_le_bytes());
+    }
+    h
+}
+
+fn event_stream(cfg: &ServeConfig, trace: Vec<Request>) -> Vec<RequestEvent> {
+    let mut sched = new_scheduler(cfg);
+    let mut trace = trace;
+    trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for req in trace {
+        sched.inject(req);
+    }
+    let mut events = Vec::new();
+    loop {
+        match sched.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => sched.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => sched.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => sched.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        events.extend(sched.take_events());
+    }
+    events.extend(sched.take_events());
+    events
+}
+
+/// Pinned digests per seed. `None` means "not yet recorded": the test
+/// still asserts rerun self-agreement and prints the digest so a run
+/// with a toolchain can arm it (same convention as the null medians in
+/// `BENCH_baseline.json`). Once armed, any change to event content,
+/// order or timing for these seeds fails loudly.
+const GOLDEN_STREAMS: [(u64, Option<u64>); 3] = [(7, None), (21, None), (42, None)];
+
+#[test]
+fn golden_event_streams_are_stable_across_reruns_for_three_seeds() {
+    for (seed, golden) in GOLDEN_STREAMS {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "tcm".into();
+        cfg.mix = "MH".into();
+        cfg.num_requests = 120;
+        cfg.rate = 2.0;
+        cfg.seed = seed;
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let a = event_stream(&cfg, trace.clone());
+        let b = event_stream(&cfg, trace);
+        assert!(!a.is_empty(), "seed {seed}: run produced no events");
+        let (ha, hb) = (hash_events(&a), hash_events(&b));
+        assert_eq!(ha, hb, "seed {seed}: event stream diverged between reruns");
+        match golden {
+            Some(g) => assert_eq!(
+                ha, g,
+                "seed {seed}: event stream digest changed from the pinned golden"
+            ),
+            None => eprintln!(
+                "seed {seed}: golden event-stream digest not yet recorded; observed {ha:#018x}"
+            ),
+        }
+    }
+}

@@ -31,7 +31,7 @@ fn load(keep: &[&str]) -> Option<Runtime> {
 }
 
 fn argmax(xs: &[f32]) -> usize {
-    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    xs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
 }
 
 #[test]

@@ -30,7 +30,7 @@ fn run_stepped(
 ) -> Result<(Report, f64, Vec<RequestEvent>), String> {
     let mut sched = new_scheduler(cfg);
     let mut trace = trace;
-    trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     for req in trace {
         sched.inject(req);
     }
