@@ -1,0 +1,91 @@
+//! obs_overhead — cost and coverage of the observability layer on a
+//! representative cluster+pool run (2 replicas, encoder pool, MH mix,
+//! tcm policy).
+//!
+//! Two questions, one run each:
+//!
+//! 1. **Perturbation** — the observed run's report must be bit-identical
+//!    to the plain run's (the recorder only *reads* the event stream;
+//!    `--obs` must never change a scheduling decision). Asserted here on
+//!    every bench invocation, not just in `cargo test`.
+//! 2. **Footprint** — how much the layer produces: telemetry epochs
+//!    sampled, span segments recorded, Perfetto JSON bytes rendered.
+//!    All three are virtual-time metrics (bit-deterministic per seed,
+//!    machine-independent), recorded as informational entries
+//!    (hot=false) so the CI compare step tracks drift without gating.
+
+use tcm_serve::backend::{self, ServeBackend};
+use tcm_serve::bench_harness::record_named;
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::make_trace;
+use tcm_serve::obs::ObsBackend;
+
+fn cfg() -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.policy = "tcm".into();
+    c.mix = "MH".into();
+    c.rate = 3.0;
+    c.num_requests = 300;
+    c.seed = 71;
+    c.cluster.replicas = 2;
+    c.cluster.router = "least-work".into();
+    c.pool.enabled = true;
+    c.pool.slots = 2;
+    c
+}
+
+fn main() {
+    let base = cfg();
+    let profile = tcm_serve::model::by_name(&base.model).unwrap();
+    let trace = make_trace(&base, &profile);
+    let n = trace.len();
+
+    println!("=== obs_overhead — 2 replicas + pool, MH mix, tcm, 3 req/s, llava-7b ===");
+
+    // plain run: the bit-exact reference
+    let mut plain = backend::build(&base);
+    let reference = plain.run_trace(trace.clone());
+
+    // observed run: same backend wrapped in the recorder
+    let mut observed = ObsBackend::new(backend::build(&base));
+    let report = observed.run_trace(trace);
+
+    // 1. perturbation: observation must not move a single bit
+    assert_eq!(report.outcomes.len(), reference.outcomes.len());
+    assert_eq!(report.failed.len(), reference.failed.len());
+    for (a, b) in report.outcomes.iter().zip(reference.outcomes.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "req {} finish moved", a.id);
+        assert_eq!(
+            a.first_token.map(f64::to_bits),
+            b.first_token.map(f64::to_bits),
+            "req {} first_token moved",
+            a.id
+        );
+    }
+    println!("perturbation: none ({} outcomes bit-identical to the plain run)", n);
+
+    // 2. footprint
+    let spans = observed.spans();
+    let segments: usize = spans.iter().map(|s| s.segments.len()).sum();
+    for s in &spans {
+        s.check_conservation().expect("span conservation");
+    }
+    let trace_json = observed.trace();
+    let snap = observed.telemetry().snapshot();
+    println!(
+        "footprint: {} epochs sampled, {} spans / {} segments, {} trace bytes",
+        snap.epochs,
+        spans.len(),
+        segments,
+        trace_json.len()
+    );
+
+    // virtual-time metrics: bit-deterministic per seed, informational
+    record_named("obs/telemetry/epochs", snap.epochs as f64, None, false);
+    record_named("obs/spans/segments-total", segments as f64, None, false);
+    record_named("obs/trace/bytes", trace_json.len() as f64, None, false);
+
+    println!("\nExpected shape: zero perturbation always; footprint metrics move only");
+    println!("when the schedule itself changes (same gate semantics as cluster/*).");
+}

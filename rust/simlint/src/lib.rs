@@ -106,6 +106,7 @@ fn scope_for(rel: &str) -> Scope {
         || rel.starts_with("cluster/")
         || rel.starts_with("engine/")
         || rel.starts_with("sim/")
+        || rel.starts_with("obs/")
         || rel == "backend.rs"
         || rel == "request.rs"
         || rel == "report.rs";

@@ -1,0 +1,23 @@
+//! Fixture: the observability layer is sim-core scope — hash containers,
+//! wall clocks, and entropy must all fire under `obs/` too (spans and
+//! telemetry must be pure functions of the event stream).
+
+use std::collections::HashMap;
+
+pub struct BadRecorder {
+    pub spans: HashMap<u64, f64>,
+}
+
+impl BadRecorder {
+    pub fn new() -> BadRecorder {
+        BadRecorder { spans: HashMap::new() }
+    }
+
+    pub fn stamp(&self) -> f64 {
+        std::time::Instant::now().elapsed().as_secs_f64()
+    }
+
+    pub fn sample(&self) -> f64 {
+        rand::random::<f64>()
+    }
+}

@@ -128,6 +128,36 @@ pub trait ServeBackend {
     /// counters, iteration/preemption totals) — what `ClusterReport`
     /// carries structurally, available without downcasting.
     fn summary_lines(&self) -> Vec<String>;
+
+    // --- observability hooks (all optional; see crate::obs) ---
+
+    /// Enable/disable buffering of [`crate::obs::ObsEvent`]s. Off by
+    /// default: the disabled path must not allocate or change behavior.
+    fn set_obs(&mut self, _enabled: bool) {}
+
+    /// Drain buffered obs-only events (empty when obs is disabled).
+    fn take_obs_events(&mut self) -> Vec<crate::obs::ObsEvent> {
+        Vec::new()
+    }
+
+    /// Sample current backend state for telemetry. `None` when the
+    /// backend doesn't support probing.
+    fn probe(&self) -> Option<crate::obs::Probe> {
+        None
+    }
+
+    /// Telemetry aggregate, when an observer is attached
+    /// ([`crate::obs::ObsBackend`]); `None` otherwise.
+    fn telemetry_snapshot(&self) -> Option<crate::obs::TelemetrySnapshot> {
+        None
+    }
+
+    /// Perfetto JSON for everything observed so far, when an observer is
+    /// attached; `None` otherwise. Drains pending events into the
+    /// recorder.
+    fn trace_json(&mut self) -> Option<String> {
+        None
+    }
 }
 
 impl ServeBackend for Scheduler {
@@ -203,6 +233,18 @@ impl ServeBackend for Scheduler {
             self.stats.busy_time_s,
             self.stats.planning_evals as f64 / self.stats.iterations.max(1) as f64
         )]
+    }
+
+    fn set_obs(&mut self, enabled: bool) {
+        Scheduler::set_obs(self, enabled);
+    }
+
+    fn take_obs_events(&mut self) -> Vec<crate::obs::ObsEvent> {
+        Scheduler::take_obs_events(self)
+    }
+
+    fn probe(&self) -> Option<crate::obs::Probe> {
+        Some(Scheduler::probe(self))
     }
 }
 
@@ -305,6 +347,18 @@ impl ServeBackend for Cluster {
         ));
         lines
     }
+
+    fn set_obs(&mut self, enabled: bool) {
+        Cluster::set_obs(self, enabled);
+    }
+
+    fn take_obs_events(&mut self) -> Vec<crate::obs::ObsEvent> {
+        Cluster::take_obs_events(self)
+    }
+
+    fn probe(&self) -> Option<crate::obs::Probe> {
+        Some(Cluster::probe(self))
+    }
 }
 
 /// Build the backend a config describes — a bare [`Scheduler`] over a
@@ -313,13 +367,18 @@ impl ServeBackend for Cluster {
 /// driver shares; a 1-replica no-pool config stays on the scheduler path
 /// (bit-identical to the pre-trait drivers).
 pub fn build(cfg: &ServeConfig) -> Box<dyn ServeBackend> {
-    if cfg.cluster.replicas > 1 || cfg.pool.enabled {
+    let inner: Box<dyn ServeBackend> = if cfg.cluster.replicas > 1 || cfg.pool.enabled {
         Box::new(Cluster::new(cfg))
     } else {
         let profile = crate::model::by_name(&cfg.model).expect("validated model name");
         let policy = build_policy(cfg, &profile);
         let engine: Box<dyn Engine> = Box::new(SimEngine::new(&cfg.engine_profile()));
         Box::new(Scheduler::new(cfg.clone(), policy, engine))
+    };
+    if cfg.obs.active() {
+        Box::new(crate::obs::ObsBackend::new(inner))
+    } else {
+        inner
     }
 }
 
@@ -328,5 +387,10 @@ pub fn build(cfg: &ServeConfig) -> Box<dyn ServeBackend> {
 pub fn scheduler_backend(cfg: &ServeConfig, engine: Box<dyn Engine>) -> Box<dyn ServeBackend> {
     let profile = crate::model::by_name(&cfg.model).expect("validated model name");
     let policy = build_policy(cfg, &profile);
-    Box::new(Scheduler::new(cfg.clone(), policy, engine))
+    let inner: Box<dyn ServeBackend> = Box::new(Scheduler::new(cfg.clone(), policy, engine));
+    if cfg.obs.active() {
+        Box::new(crate::obs::ObsBackend::new(inner))
+    } else {
+        inner
+    }
 }

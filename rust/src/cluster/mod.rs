@@ -156,6 +156,10 @@ pub struct Cluster {
     /// (pebbles/rocks) with the fleet advanced to that moment.
     ingress: EventQueue<Request>,
     migration_cost_s_per_ktok: f64,
+    /// Observation enabled (see [`crate::obs`]): buffer cluster-level
+    /// [`crate::obs::ObsEvent`]s and retain `events` across batch drains.
+    obs: bool,
+    obs_events: Vec<crate::obs::ObsEvent>,
 }
 
 impl Cluster {
@@ -187,7 +191,54 @@ impl Cluster {
             pool,
             ingress: EventQueue::new(),
             migration_cost_s_per_ktok: cfg.pool.migration_cost_s_per_ktok,
+            obs: false,
+            obs_events: Vec::new(),
         }
+    }
+
+    /// Enable/disable observation cluster-wide (replicas included).
+    pub fn set_obs(&mut self, enabled: bool) {
+        self.obs = enabled;
+        for r in &mut self.replicas {
+            r.set_obs(enabled);
+        }
+    }
+
+    /// Drain cluster-level and per-replica obs events. Ordering is
+    /// deterministic (cluster buffer, then replicas in index order);
+    /// consumers sort per-request by time, so feed order is not
+    /// semantic.
+    pub fn take_obs_events(&mut self) -> Vec<crate::obs::ObsEvent> {
+        let mut out = std::mem::take(&mut self.obs_events);
+        for r in &mut self.replicas {
+            out.extend(r.take_obs_events());
+        }
+        out
+    }
+
+    /// Fleet-wide telemetry sample: replica probes summed (KV
+    /// utilization averaged) plus encoder-pool occupancy.
+    pub fn probe(&self) -> crate::obs::Probe {
+        let mut p = crate::obs::Probe { t: Cluster::now(self), ..crate::obs::Probe::default() };
+        for r in &self.replicas {
+            let rp = r.probe();
+            for i in 0..3 {
+                p.waiting[i] += rp.waiting[i];
+                p.running[i] += rp.running[i];
+            }
+            p.kv_utilization += rp.kv_utilization;
+            p.planning_evals += rp.planning_evals;
+        }
+        if !self.replicas.is_empty() {
+            p.kv_utilization /= self.replicas.len() as f64;
+        }
+        if let Some(pool) = &self.pool {
+            p.pool_busy_slots = pool.busy_slots() as u32;
+            p.pool_total_slots = pool.slot_count() as u32;
+            p.pool_queue_depth = pool.queue_depth() as u32;
+            p.pool_aged_promotions = pool.stats.aged_promotions;
+        }
+        p
     }
 
     /// Encoder-pool mode active?
@@ -324,6 +375,10 @@ impl Cluster {
                     let i = self.router.route(&req, &views);
                     self.dispatch_to_replica(i, req);
                 } else {
+                    if self.obs {
+                        self.obs_events
+                            .push(crate::obs::ObsEvent::PoolEnqueued { id: req.id, t });
+                    }
                     self.pool.as_mut().expect("pool mode").enqueue(req, t);
                 }
                 delivered += 1;
@@ -356,6 +411,21 @@ impl Cluster {
                             .charge_migration(&h.req, self.migration_cost_s_per_ktok)
                     };
                     self.events.push(RequestEvent::Encoded { id: h.req.id, t: h.done_at });
+                    if self.obs {
+                        self.obs_events.push(crate::obs::ObsEvent::PoolEncode {
+                            id: h.req.id,
+                            slot: h.slot,
+                            start: h.started,
+                            end: h.done_at,
+                        });
+                        if migration > 0.0 {
+                            self.obs_events.push(crate::obs::ObsEvent::Migration {
+                                id: h.req.id,
+                                start: h.done_at,
+                                end: h.done_at + migration,
+                            });
+                        }
+                    }
                     self.routed[i] += 1;
                     self.replicas[i].inject_preencoded(h.req, h.done_at + migration);
                     delivered += 1;
@@ -538,7 +608,11 @@ impl Cluster {
     /// analogue of [`Scheduler::drain`].
     pub fn drain(&mut self) -> ClusterReport {
         loop {
-            self.events.clear();
+            // with an observer attached, retain events so it can harvest
+            // the full stream after the batch drive completes
+            if !self.obs {
+                self.events.clear();
+            }
             match self.step() {
                 StepOutcome::Executed { .. } => {}
                 StepOutcome::Idle { next_event } => self.advance_to(next_event),
@@ -547,7 +621,9 @@ impl Cluster {
                 StepOutcome::Drained => break,
             }
         }
-        self.events.clear();
+        if !self.obs {
+            self.events.clear();
+        }
         self.report()
     }
 
@@ -577,7 +653,9 @@ impl Cluster {
                 self.advance_replica_to(i, t);
             }
             self.reap_finished();
-            self.events.clear();
+            if !self.obs {
+                self.events.clear();
+            }
             self.inject(req);
         }
         self.drain()

@@ -51,6 +51,11 @@ pub struct Handoff {
     /// Replica co-hosted with the slot that ran the encode; migration is
     /// charged iff the router binds a different replica.
     pub host: usize,
+    /// Slot index that ran the encode (observability: slot occupancy
+    /// timelines in the Perfetto export).
+    pub slot: usize,
+    /// Pool-clock time the encode started on its slot.
+    pub started: f64,
 }
 
 /// Aggregate pool counters (surfaced in
@@ -97,6 +102,8 @@ struct Queued {
 struct Slot {
     host: usize,
     busy_until: f64,
+    /// When the in-flight encode started (valid while `current` is set).
+    started: f64,
     /// In-flight request and whether it occupies a rock-cap slot.
     current: Option<(Request, bool)>,
 }
@@ -129,7 +136,7 @@ impl EncoderPool {
         EncoderPool {
             profile: profile.clone(),
             slots: (0..slots)
-                .map(|i| Slot { host: i % replicas, busy_until: 0.0, current: None })
+                .map(|i| Slot { host: i % replicas, busy_until: 0.0, started: 0.0, current: None })
                 .collect(),
             rock_cap: slots.div_ceil(2),
             aging_deadline_s,
@@ -143,6 +150,16 @@ impl EncoderPool {
 
     pub fn slot_count(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Slots with an encode in flight right now (telemetry gauge).
+    pub fn busy_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.current.is_some()).count()
+    }
+
+    /// Requests waiting in either lane (telemetry gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.pebbles.len() + self.rocks.len()
     }
 
     pub fn rock_cap(&self) -> usize {
@@ -214,8 +231,9 @@ impl EncoderPool {
         }
         self.stats.encodes += 1;
         let host = self.slots[i].host;
+        let started = self.slots[i].started;
         self.fill_slots();
-        Some(Handoff { req, done_at, host })
+        Some(Handoff { req, done_at, host, slot: i, started })
     }
 
     /// Cancel a queued or in-flight encode at pool time `t`. A queued
@@ -334,6 +352,7 @@ impl EncoderPool {
             self.stats.busy_time_s += dur;
             self.stats.max_encode_s = self.stats.max_encode_s.max(dur);
             self.slots[slot].busy_until = now + dur;
+            self.slots[slot].started = now;
             self.slots[slot].current = Some((q.req, is_rock));
         }
     }

@@ -152,6 +152,31 @@ impl Default for PoolConfig {
     }
 }
 
+/// Observability knobs (the `[obs]` TOML section; see [`crate::obs`]).
+/// All off by default: with no field set, no observer is attached and
+/// backend behavior (events, reports, stats) is bit-identical to a
+/// build without the obs module.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsConfig {
+    /// Attach the observability decorator (`--obs`): record lifecycle
+    /// spans and per-epoch telemetry even when no output path is set
+    /// (the server exposes them via `metrics_text`/`telemetry_snapshot`).
+    pub enabled: bool,
+    /// Write a Chrome/Perfetto `trace_event` JSON file here at the end
+    /// of the run (`--trace-out`). Implies `enabled`.
+    pub trace_out: Option<String>,
+    /// Write Prometheus-format telemetry text here at the end of the
+    /// run (`--metrics-out`). Implies `enabled`.
+    pub metrics_out: Option<String>,
+}
+
+impl ObsConfig {
+    /// Whether any obs feature is requested (decorator attach point).
+    pub fn active(&self) -> bool {
+        self.enabled || self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+}
+
 /// Serving-front-end knobs (the `[server]` TOML section).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ServerConfig {
@@ -187,6 +212,7 @@ pub struct ServeConfig {
     pub cluster: ClusterConfig,
     pub pool: PoolConfig,
     pub server: ServerConfig,
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -205,6 +231,7 @@ impl Default for ServeConfig {
             cluster: ClusterConfig::default(),
             pool: PoolConfig::default(),
             server: ServerConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -241,7 +268,7 @@ impl ServeConfig {
     pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
-            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.", "server.",
+            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.", "server.", "obs.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -327,6 +354,15 @@ impl ServeConfig {
             }
             self.server.admission_limit = v as usize;
         }
+        if let Some(v) = doc.get_bool("obs.enabled") {
+            self.obs.enabled = v;
+        }
+        if let Some(v) = doc.get_str("obs.trace_out") {
+            self.obs.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("obs.metrics_out") {
+            self.obs.metrics_out = Some(v.to_string());
+        }
         if let Some(v) = doc.get_bool("regulator.aging_enabled") {
             self.regulator.aging_enabled = v;
         }
@@ -396,6 +432,15 @@ impl ServeConfig {
             args.get_f64("late-bind-epsilon", self.pool.late_bind_epsilon_s).map_err(e)?;
         self.server.admission_limit =
             args.get_usize("admission-limit", self.server.admission_limit).map_err(e)?;
+        if args.has_flag("obs") {
+            self.obs.enabled = true;
+        }
+        if let Some(v) = args.get("trace-out") {
+            self.obs.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = args.get("metrics-out") {
+            self.obs.metrics_out = Some(v.to_string());
+        }
         self.validate()
     }
 
@@ -597,6 +642,34 @@ late_bind_epsilon_s = 0.25
             c.apply_doc(&Doc::parse("[server]\nadmission_limit = -1").unwrap()).is_err(),
             "a negative limit must not wrap to unbounded"
         );
+    }
+
+    #[test]
+    fn obs_section_and_flags_parse() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.obs, ObsConfig::default());
+        assert!(!c.obs.active(), "obs must default to fully off");
+        let doc = Doc::parse(
+            r#"
+[obs]
+enabled = true
+trace_out = "trace.json"
+metrics_out = "metrics.prom"
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(c.obs.metrics_out.as_deref(), Some("metrics.prom"));
+        assert!(c.obs.active());
+
+        // any output path implies active() without the flag
+        let c = ServeConfig {
+            obs: ObsConfig { trace_out: Some("t.json".into()), ..ObsConfig::default() },
+            ..ServeConfig::default()
+        };
+        assert!(c.obs.active());
     }
 
     #[test]

@@ -99,6 +99,13 @@ pub enum RequestEvent {
     FirstToken { id: u64, t: f64 },
     /// Preempted-by-recompute and re-queued.
     Preempted { id: u64, t: f64 },
+    /// A previously preempted request was re-admitted into the running
+    /// set. Paired with the preceding `Preempted`, the interval
+    /// `[Preempted.t, Requeued.t]` is exactly one preempted gap — span
+    /// reconstruction (`obs::SpanRecorder`) never has to infer gap
+    /// boundaries, and the per-request sum of gaps equals the outcome's
+    /// `preempted_time`.
+    Requeued { id: u64, t: f64 },
     /// All output tokens emitted.
     Finished { id: u64, t: f64 },
     /// Dropped: the request can never be scheduled (prompt exceeds KV
@@ -159,6 +166,11 @@ pub struct Scheduler {
     retired_failed: usize,
     retired_cancelled: usize,
     events: Vec<RequestEvent>,
+    /// Obs-only event buffer ([`crate::obs::ObsEvent`]); `None` unless
+    /// an observer enabled it via [`Scheduler::set_obs`]. While active,
+    /// batch drains also retain `events` instead of clearing them so an
+    /// observer can harvest the full stream post-hoc.
+    obs_tap: Option<Vec<crate::obs::ObsEvent>>,
     pub stats: SchedStats,
 }
 
@@ -190,7 +202,44 @@ impl Scheduler {
             retired_failed: 0,
             retired_cancelled: 0,
             events: Vec::new(),
+            obs_tap: None,
             stats: SchedStats::default(),
+        }
+    }
+
+    /// Enable/disable the obs-only event tap (see [`crate::obs`]). Off
+    /// by default; scheduling decisions are unaffected either way.
+    pub fn set_obs(&mut self, enabled: bool) {
+        self.obs_tap = if enabled { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain buffered obs-only events (empty when the tap is off).
+    pub fn take_obs_events(&mut self) -> Vec<crate::obs::ObsEvent> {
+        self.obs_tap.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Sample current state for telemetry: queue depths and batch
+    /// occupancy by modality, KV utilization, cumulative planning work.
+    pub fn probe(&self) -> crate::obs::Probe {
+        let mut waiting = [0u32; 3];
+        let mut running = [0u32; 3];
+        for id in &self.waiting {
+            if let Some(st) = self.states.get(id) {
+                waiting[st.req.modality as usize] += 1;
+            }
+        }
+        for id in &self.running {
+            if let Some(st) = self.states.get(id) {
+                running[st.req.modality as usize] += 1;
+            }
+        }
+        crate::obs::Probe {
+            t: self.now,
+            waiting,
+            running,
+            kv_utilization: self.kv.utilization(),
+            planning_evals: self.stats.planning_evals,
+            ..crate::obs::Probe::default()
         }
     }
 
@@ -437,7 +486,12 @@ impl Scheduler {
     /// events should drive [`Scheduler::step`] themselves.
     pub fn drain(&mut self) -> Report {
         loop {
-            self.events.clear();
+            // with an observer attached, retain events for post-hoc
+            // harvest (take_events); the unobserved batch path keeps its
+            // flat-memory behavior
+            if self.obs_tap.is_none() {
+                self.events.clear();
+            }
             match self.step() {
                 StepOutcome::Executed { .. } => {}
                 StepOutcome::Idle { next_event } => self.advance_to(next_event),
@@ -446,7 +500,9 @@ impl Scheduler {
                 StepOutcome::Drained => break,
             }
         }
-        self.events.clear();
+        if self.obs_tap.is_none() {
+            self.events.clear();
+        }
         self.report()
     }
 
@@ -744,6 +800,11 @@ impl Scheduler {
                     st.phase = Phase::Prefilling;
                     if let Some(t0) = st.preempted_at.take() {
                         st.preempted_time += now - t0;
+                        // the preempted gap closes at this re-admission
+                        self.events.push(RequestEvent::Requeued { id, t: now });
+                    }
+                    if let Some(tap) = self.obs_tap.as_mut() {
+                        tap.push(crate::obs::ObsEvent::Admitted { id, t: now });
                     }
                     let class = st.class;
                     // `encoded_externally` implies `encoded`, so an

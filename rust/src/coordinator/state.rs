@@ -126,6 +126,7 @@ impl ReqState {
             slo_latency: self.slo_latency,
             preemptions: self.preemptions,
             preempted_time: self.preempted_time,
+            slo_class: self.req.slo_class,
         }
     }
 

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod policies;
 pub mod report;
 pub mod request;

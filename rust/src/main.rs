@@ -48,6 +48,9 @@ fn parser() -> Parser {
             "prefer the encode slot's host on handoff within this ledger gap, s (0 = off)",
         )
         .option("admission-limit", "max outstanding requests before the server rejects (0 = off)")
+        .flag("obs", "record lifecycle spans and per-epoch telemetry (deterministic, virtual-time)")
+        .option("trace-out", "write a Chrome/Perfetto trace_event JSON file (implies --obs)")
+        .option("metrics-out", "write Prometheus-format telemetry text (implies --obs)")
         .option("out", "output path (trace subcommand)")
         .option("artifacts", "artifacts directory (serve subcommand)")
 }
@@ -136,6 +139,27 @@ fn cmd_simulate(cfg: &ServeConfig) {
         r.cancelled.len(),
         r.rejected
     );
+    if let Some(path) = &cfg.obs.trace_out {
+        match backend.trace_json() {
+            Some(json) => match std::fs::write(path, json) {
+                Ok(()) => println!("wrote perfetto trace to {path}"),
+                Err(e) => eprintln!("failed to write trace {path}: {e}"),
+            },
+            None => eprintln!("trace-out set but no observer attached (internal error)"),
+        }
+    }
+    if let Some(path) = &cfg.obs.metrics_out {
+        match backend.telemetry_snapshot() {
+            Some(snap) => {
+                let text = tcm_serve::obs::prometheus_text(&snap);
+                match std::fs::write(path, text) {
+                    Ok(()) => println!("wrote telemetry to {path}"),
+                    Err(e) => eprintln!("failed to write metrics {path}: {e}"),
+                }
+            }
+            None => eprintln!("metrics-out set but no observer attached (internal error)"),
+        }
+    }
 }
 
 #[cfg(pjrt_runtime)]

@@ -7,7 +7,7 @@
 //! * preemptions — count and aggregate preempted time (Fig 11)
 //! * goodput — max sustainable rate meeting the SLO (Fig 15)
 
-use crate::request::{Class, Modality};
+use crate::request::{Class, Modality, SloClass};
 
 /// Everything recorded about one completed request.
 #[derive(Debug, Clone)]
@@ -29,6 +29,9 @@ pub struct Outcome {
     pub preemptions: u32,
     /// Aggregate time spent preempted (evicted and waiting to re-run).
     pub preempted_time: f64,
+    /// Client-declared latency class (`None` behaves as Standard) —
+    /// telemetry groups rolling TTFT attainment by this.
+    pub slo_class: Option<SloClass>,
 }
 
 impl Outcome {
@@ -257,6 +260,7 @@ mod tests {
             slo_latency: slo,
             preemptions: 0,
             preempted_time: 0.0,
+            slo_class: None,
         }
     }
 

@@ -1,0 +1,570 @@
+//! Per-request lifecycle span reconstruction.
+//!
+//! [`SpanRecorder`] folds the public [`RequestEvent`] stream plus the
+//! obs-only [`ObsEvent`] side-channel into one span tree per request: a
+//! flat, time-ordered list of [`Segment`]s that exactly partitions the
+//! interval `[arrival, terminal]`. The recorder never consults a wall
+//! clock and never iterates a hash-ordered container; everything is
+//! keyed by `BTreeMap` and ordered by virtual time, so its output is a
+//! pure function of the event stream.
+//!
+//! Conservation invariant (checked by [`RequestSpans::check_conservation`]):
+//! the first segment starts bit-exactly at `arrival`, adjacent segments
+//! are bit-contiguous, and the last segment ends bit-exactly at the
+//! terminal timestamp. Preempted time reported by the scheduler equals
+//! the sum of `PreemptedGap` segments bit-for-bit for finished requests.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::RequestEvent;
+use crate::request::{Modality, Request};
+
+use super::ObsEvent;
+
+/// What a request was doing during a [`Segment`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Between arrival and the scheduler/cluster seeing it as ready.
+    Preprocess,
+    /// Queued behind the disaggregated encoder pool.
+    PoolQueue,
+    /// Occupying an encoder slot (pool) or the inline encode instant
+    /// (local encode, zero-length marker).
+    Encode,
+    /// KV migration from the encode host to the serving replica.
+    Migration,
+    /// Admissible but not yet admitted to the running batch.
+    Waiting,
+    /// Admitted, before the first token.
+    Prefill,
+    /// Admitted, after the first token.
+    Decode,
+    /// Evicted from the batch, waiting to be re-admitted.
+    PreemptedGap,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Preprocess => "preprocess",
+            SpanKind::PoolQueue => "pool_queue",
+            SpanKind::Encode => "encode",
+            SpanKind::Migration => "migration",
+            SpanKind::Waiting => "waiting",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::PreemptedGap => "preempted_gap",
+        }
+    }
+}
+
+/// One contiguous interval of a request's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+    /// Encoder slot index for pool `Encode` segments, `None` otherwise.
+    pub slot: Option<usize>,
+}
+
+/// How a request left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Terminal {
+    Finished,
+    Dropped,
+    Cancelled,
+}
+
+/// The reconstructed lifecycle of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpans {
+    pub id: u64,
+    pub modality: Modality,
+    pub multimodal: bool,
+    pub arrival: f64,
+    pub end: f64,
+    pub terminal: Option<Terminal>,
+    pub segments: Vec<Segment>,
+}
+
+impl RequestSpans {
+    /// Total time spent in `PreemptedGap` segments.
+    pub fn gap_total(&self) -> f64 {
+        self.segments
+            .iter()
+            .filter(|s| s.kind == SpanKind::PreemptedGap)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Number of `Encode` segments (pool slot occupancy or local
+    /// zero-length markers).
+    pub fn encode_count(&self) -> usize {
+        self.segments.iter().filter(|s| s.kind == SpanKind::Encode).count()
+    }
+
+    /// Verify the conservation invariant: segments exactly partition
+    /// `[arrival, end]` with bit-exact contiguity.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        if self.segments.is_empty() {
+            if self.end.to_bits() != self.arrival.to_bits() {
+                return Err(format!(
+                    "req {}: no segments but end {} != arrival {}",
+                    self.id, self.end, self.arrival
+                ));
+            }
+            return Ok(());
+        }
+        let first = &self.segments[0];
+        if first.start.to_bits() != self.arrival.to_bits() {
+            return Err(format!(
+                "req {}: first segment starts at {} but arrival is {}",
+                self.id, first.start, self.arrival
+            ));
+        }
+        let mut cursor = self.arrival;
+        for (i, s) in self.segments.iter().enumerate() {
+            if !s.start.is_finite() || !s.end.is_finite() {
+                return Err(format!("req {}: segment {i} non-finite", self.id));
+            }
+            if s.start.to_bits() != cursor.to_bits() {
+                return Err(format!(
+                    "req {}: segment {i} ({:?}) starts at {} but cursor is {}",
+                    self.id, s.kind, s.start, cursor
+                ));
+            }
+            if s.end < s.start {
+                return Err(format!(
+                    "req {}: segment {i} ({:?}) ends before it starts ({} < {})",
+                    self.id, s.kind, s.end, s.start
+                ));
+            }
+            cursor = s.end;
+        }
+        if cursor.to_bits() != self.end.to_bits() {
+            return Err(format!(
+                "req {}: last segment ends at {cursor} but terminal is {}",
+                self.id, self.end
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Internal normalized event, ranked for stable same-instant ordering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RawEv {
+    Ready(f64),
+    PoolEnqueued(f64),
+    PoolEncode { slot: usize, start: f64, end: f64 },
+    Migration { start: f64, end: f64 },
+    Requeued(f64),
+    Admitted(f64),
+    EncodedLocal(f64),
+    First(f64),
+    Preempted(f64),
+    Terminal(f64, Terminal),
+}
+
+impl RawEv {
+    fn time(&self) -> f64 {
+        match *self {
+            RawEv::Ready(t)
+            | RawEv::PoolEnqueued(t)
+            | RawEv::Requeued(t)
+            | RawEv::Admitted(t)
+            | RawEv::EncodedLocal(t)
+            | RawEv::First(t)
+            | RawEv::Preempted(t)
+            | RawEv::Terminal(t, _) => t,
+            RawEv::PoolEncode { start, .. } => start,
+            RawEv::Migration { start, .. } => start,
+        }
+    }
+
+    /// Tie-break rank for events sharing a timestamp: lifecycle order.
+    fn rank(&self) -> u8 {
+        match self {
+            RawEv::Ready(_) => 0,
+            RawEv::PoolEnqueued(_) => 0,
+            RawEv::PoolEncode { .. } => 1,
+            RawEv::Migration { .. } => 2,
+            RawEv::Requeued(_) => 3,
+            RawEv::Admitted(_) => 4,
+            RawEv::EncodedLocal(_) => 5,
+            RawEv::First(_) => 6,
+            RawEv::Preempted(_) => 7,
+            RawEv::Terminal(..) => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Meta {
+    arrival: f64,
+    modality: Modality,
+    multimodal: bool,
+}
+
+/// Folds request/obs events into per-request span trees.
+///
+/// Feed it every injected [`Request`] via [`SpanRecorder::on_request`],
+/// every [`RequestEvent`] via [`SpanRecorder::observe`], and every
+/// [`ObsEvent`] via [`SpanRecorder::observe_obs`]; then call
+/// [`SpanRecorder::finalize`] for the reconstructed spans. `finalize`
+/// is non-consuming, so it can be called repeatedly as a run proceeds.
+#[derive(Debug, Default)]
+pub struct SpanRecorder {
+    meta: BTreeMap<u64, Meta>,
+    events: BTreeMap<u64, Vec<RawEv>>,
+}
+
+impl SpanRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a request's identity before (or as) it is injected.
+    pub fn on_request(&mut self, req: &Request) {
+        self.meta.entry(req.id).or_insert(Meta {
+            arrival: req.arrival,
+            modality: req.modality,
+            multimodal: req.mm_tokens > 0,
+        });
+    }
+
+    /// Fold one public lifecycle event.
+    pub fn observe(&mut self, ev: &RequestEvent) {
+        let (id, raw) = match *ev {
+            RequestEvent::Ready { id, t } => (id, RawEv::Ready(t)),
+            RequestEvent::Encoded { id, t } => (id, RawEv::EncodedLocal(t)),
+            RequestEvent::Requeued { id, t } => (id, RawEv::Requeued(t)),
+            RequestEvent::FirstToken { id, t } => (id, RawEv::First(t)),
+            RequestEvent::Preempted { id, t } => (id, RawEv::Preempted(t)),
+            RequestEvent::Finished { id, t } => (id, RawEv::Terminal(t, Terminal::Finished)),
+            RequestEvent::Dropped { id, t } => (id, RawEv::Terminal(t, Terminal::Dropped)),
+            RequestEvent::Cancelled { id, t } => (id, RawEv::Terminal(t, Terminal::Cancelled)),
+        };
+        self.events.entry(id).or_default().push(raw);
+    }
+
+    /// Fold one obs-only side-channel event.
+    pub fn observe_obs(&mut self, ev: &ObsEvent) {
+        let (id, raw) = match *ev {
+            ObsEvent::Admitted { id, t } => (id, RawEv::Admitted(t)),
+            ObsEvent::PoolEnqueued { id, t } => (id, RawEv::PoolEnqueued(t)),
+            ObsEvent::PoolEncode { id, slot, start, end } => {
+                (id, RawEv::PoolEncode { slot, start, end })
+            }
+            ObsEvent::Migration { id, start, end } => (id, RawEv::Migration { start, end }),
+        };
+        self.events.entry(id).or_default().push(raw);
+    }
+
+    /// Number of requests with registered metadata.
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    /// Reconstruct span trees for every known request, in id order.
+    pub fn finalize(&self) -> Vec<RequestSpans> {
+        let mut out = Vec::with_capacity(self.meta.len());
+        for (&id, meta) in &self.meta {
+            let mut evs = self.events.get(&id).cloned().unwrap_or_default();
+            evs.sort_by(|a, b| a.time().total_cmp(&b.time()).then(a.rank().cmp(&b.rank())));
+            dedup_pool_encoded(&mut evs);
+            out.push(build_spans(id, meta, &evs));
+        }
+        out
+    }
+}
+
+/// A pool handoff produces both an obs `PoolEncode` (with slot/timing)
+/// and a public `Encoded` event at the same completion instant; remove
+/// the redundant local marker so encode segments aren't double-counted.
+fn dedup_pool_encoded(evs: &mut Vec<RawEv>) {
+    let ends: Vec<u64> = evs
+        .iter()
+        .filter_map(|e| match e {
+            RawEv::PoolEncode { end, .. } => Some(end.to_bits()),
+            _ => None,
+        })
+        .collect();
+    for end_bits in ends {
+        if let Some(pos) = evs
+            .iter()
+            .position(|e| matches!(e, RawEv::EncodedLocal(t) if t.to_bits() == end_bits))
+        {
+            evs.remove(pos);
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    Pre,
+    PoolQueue,
+    Waiting,
+    Running,
+    Gap,
+}
+
+struct Builder {
+    segments: Vec<Segment>,
+    cursor: f64,
+    state: St,
+    first_seen: bool,
+}
+
+impl Builder {
+    fn state_kind(&self) -> SpanKind {
+        match self.state {
+            St::Pre => SpanKind::Preprocess,
+            St::PoolQueue => SpanKind::PoolQueue,
+            St::Waiting => SpanKind::Waiting,
+            St::Running => {
+                if self.first_seen {
+                    SpanKind::Decode
+                } else {
+                    SpanKind::Prefill
+                }
+            }
+            St::Gap => SpanKind::PreemptedGap,
+        }
+    }
+
+    /// Fill `[cursor, t]` with the current state's kind and advance.
+    fn close(&mut self, t: f64) {
+        let t = t.max(self.cursor);
+        if t > self.cursor {
+            self.segments.push(Segment {
+                kind: self.state_kind(),
+                start: self.cursor,
+                end: t,
+                slot: None,
+            });
+        }
+        self.cursor = t;
+    }
+
+    /// Close `[cursor, t]` as running time (prefill before the first
+    /// token, decode after), regardless of what the state machine
+    /// currently believes — events that imply the request was running
+    /// (FirstToken, Preempted, Finished) are authoritative and this
+    /// self-heals same-instant preempt/requeue/admit scrambles.
+    fn close_running(&mut self, t: f64) {
+        let t = t.max(self.cursor);
+        if t > self.cursor {
+            let kind = if self.first_seen { SpanKind::Decode } else { SpanKind::Prefill };
+            self.segments.push(Segment { kind, start: self.cursor, end: t, slot: None });
+        }
+        self.cursor = t;
+    }
+}
+
+fn build_spans(id: u64, meta: &Meta, evs: &[RawEv]) -> RequestSpans {
+    let mut b = Builder {
+        segments: Vec::new(),
+        cursor: meta.arrival,
+        state: St::Pre,
+        first_seen: false,
+    };
+    let mut terminal = None;
+    for ev in evs {
+        match *ev {
+            RawEv::Ready(t) => {
+                // the pool handoff path re-announces readiness on the
+                // serving replica; only the first Ready ends Preprocess
+                if b.state == St::Pre {
+                    b.close(t);
+                    b.state = St::Waiting;
+                }
+            }
+            RawEv::PoolEnqueued(_) => {
+                b.state = St::PoolQueue;
+            }
+            RawEv::PoolEncode { slot, start, end } => {
+                b.close(start);
+                let start = b.cursor;
+                let end = end.max(start);
+                b.segments.push(Segment { kind: SpanKind::Encode, start, end, slot: Some(slot) });
+                b.cursor = end;
+                b.state = St::Waiting;
+            }
+            RawEv::Migration { start, end } => {
+                b.close(start);
+                let start = b.cursor;
+                let end = end.max(start);
+                b.segments.push(Segment { kind: SpanKind::Migration, start, end, slot: None });
+                b.cursor = end;
+                b.state = St::Waiting;
+            }
+            RawEv::Requeued(t) => {
+                b.close(t);
+                b.state = St::Waiting;
+            }
+            RawEv::Admitted(t) => {
+                b.close(t);
+                b.state = St::Running;
+            }
+            RawEv::EncodedLocal(t) => {
+                b.close(t);
+                // inline encode is instantaneous in virtual time:
+                // leave a zero-length marker so encode_count() sees it
+                b.segments.push(Segment {
+                    kind: SpanKind::Encode,
+                    start: b.cursor,
+                    end: b.cursor,
+                    slot: None,
+                });
+            }
+            RawEv::First(t) => {
+                b.close_running(t);
+                b.first_seen = true;
+                b.state = St::Running;
+            }
+            RawEv::Preempted(t) => {
+                b.close_running(t);
+                b.state = St::Gap;
+            }
+            RawEv::Terminal(t, term) => {
+                match term {
+                    Terminal::Finished => b.close_running(t),
+                    Terminal::Dropped | Terminal::Cancelled => b.close(t),
+                }
+                terminal = Some(term);
+            }
+        }
+    }
+    // zero-length markers at the very start can precede arrival only if
+    // events were malformed; conservation checking will surface that.
+    RequestSpans {
+        id,
+        modality: meta.modality,
+        multimodal: meta.multimodal,
+        arrival: meta.arrival,
+        end: b.cursor,
+        terminal,
+        segments: b.segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, mm: u32) -> Request {
+        Request {
+            id,
+            arrival,
+            modality: if mm > 0 { Modality::Image } else { Modality::Text },
+            text_tokens: 32,
+            mm_tokens: mm,
+            output_tokens: 8,
+            ..Request::default()
+        }
+    }
+
+    #[test]
+    fn simple_text_lifecycle() {
+        let mut rec = SpanRecorder::new();
+        rec.on_request(&req(1, 0.0, 0));
+        rec.observe(&RequestEvent::Ready { id: 1, t: 0.0 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 1, t: 0.5 });
+        rec.observe(&RequestEvent::FirstToken { id: 1, t: 1.0 });
+        rec.observe(&RequestEvent::Finished { id: 1, t: 2.0 });
+        let spans = rec.finalize();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        s.check_conservation().unwrap();
+        assert_eq!(s.terminal, Some(Terminal::Finished));
+        let kinds: Vec<_> = s.segments.iter().map(|x| x.kind).collect();
+        assert_eq!(kinds, vec![SpanKind::Waiting, SpanKind::Prefill, SpanKind::Decode]);
+    }
+
+    #[test]
+    fn pool_lifecycle_with_migration_dedups_encoded() {
+        let mut rec = SpanRecorder::new();
+        rec.on_request(&req(2, 1.0, 128));
+        rec.observe(&RequestEvent::Ready { id: 2, t: 1.0 });
+        rec.observe_obs(&ObsEvent::PoolEnqueued { id: 2, t: 1.0 });
+        rec.observe_obs(&ObsEvent::PoolEncode { id: 2, slot: 3, start: 1.5, end: 2.5 });
+        // the cluster also emits a public Encoded at done_at
+        rec.observe(&RequestEvent::Encoded { id: 2, t: 2.5 });
+        rec.observe_obs(&ObsEvent::Migration { id: 2, start: 2.5, end: 2.75 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 2, t: 3.0 });
+        rec.observe(&RequestEvent::FirstToken { id: 2, t: 3.5 });
+        rec.observe(&RequestEvent::Finished { id: 2, t: 4.0 });
+        let spans = rec.finalize();
+        let s = &spans[0];
+        s.check_conservation().unwrap();
+        assert_eq!(s.encode_count(), 1, "public Encoded must be deduped against PoolEncode");
+        let kinds: Vec<_> = s.segments.iter().map(|x| x.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SpanKind::PoolQueue,
+                SpanKind::Encode,
+                SpanKind::Migration,
+                SpanKind::Waiting,
+                SpanKind::Prefill,
+                SpanKind::Decode,
+            ]
+        );
+        assert_eq!(s.segments[1].slot, Some(3));
+    }
+
+    #[test]
+    fn preemption_gap_is_conserved() {
+        let mut rec = SpanRecorder::new();
+        rec.on_request(&req(3, 0.0, 0));
+        rec.observe(&RequestEvent::Ready { id: 3, t: 0.0 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 3, t: 0.0 });
+        rec.observe(&RequestEvent::FirstToken { id: 3, t: 1.0 });
+        rec.observe(&RequestEvent::Preempted { id: 3, t: 2.0 });
+        rec.observe(&RequestEvent::Requeued { id: 3, t: 2.0 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 3, t: 3.0 });
+        rec.observe(&RequestEvent::Finished { id: 3, t: 5.0 });
+        let spans = rec.finalize();
+        let s = &spans[0];
+        s.check_conservation().unwrap();
+        assert!((s.gap_total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_instant_scramble_stays_conserved() {
+        // preempt, requeue, and re-admit all at t=2.0, then run on
+        let mut rec = SpanRecorder::new();
+        rec.on_request(&req(4, 0.0, 0));
+        rec.observe(&RequestEvent::Ready { id: 4, t: 0.0 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 4, t: 0.0 });
+        rec.observe(&RequestEvent::FirstToken { id: 4, t: 1.0 });
+        rec.observe(&RequestEvent::Preempted { id: 4, t: 2.0 });
+        rec.observe(&RequestEvent::Requeued { id: 4, t: 2.0 });
+        rec.observe_obs(&ObsEvent::Admitted { id: 4, t: 2.0 });
+        rec.observe(&RequestEvent::Finished { id: 4, t: 3.0 });
+        let spans = rec.finalize();
+        let s = &spans[0];
+        s.check_conservation().unwrap();
+        assert_eq!(s.gap_total(), 0.0, "zero-length scramble must leave no gap");
+    }
+
+    #[test]
+    fn dropped_request_conserves_to_drop_instant() {
+        let mut rec = SpanRecorder::new();
+        rec.on_request(&req(5, 0.0, 0));
+        rec.observe(&RequestEvent::Ready { id: 5, t: 0.0 });
+        rec.observe(&RequestEvent::Dropped { id: 5, t: 4.0 });
+        let spans = rec.finalize();
+        let s = &spans[0];
+        s.check_conservation().unwrap();
+        assert_eq!(s.terminal, Some(Terminal::Dropped));
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.segments[0].kind, SpanKind::Waiting);
+    }
+}

@@ -1,0 +1,387 @@
+//! Per-epoch telemetry: a bounded ring of [`Probe`] samples plus
+//! rolling TTFT-attainment windows per SLO class.
+//!
+//! The ring decimates rather than truncates: when it reaches capacity
+//! it drops every other sample and doubles the sampling stride, so a
+//! long run keeps uniform coverage of its whole history in bounded
+//! memory — and the retained set is a pure function of the epoch
+//! sequence (no clocks, no randomness).
+
+use std::collections::VecDeque;
+
+use crate::metrics::Report;
+
+use super::Probe;
+
+/// Ring capacity before decimation kicks in.
+const RING_CAP: usize = 4096;
+/// Rolling window length for per-class TTFT attainment.
+const TTFT_WINDOW: usize = 64;
+
+const SLO_CLASSES: [&str; 3] = ["critical", "standard", "best-effort"];
+const MODALITIES: [&str; 3] = ["text", "image", "video"];
+
+/// Point-in-time aggregate of the telemetry state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub epochs: u64,
+    /// Virtual time of the most recent retained probe (0.0 if none).
+    pub t: f64,
+    pub waiting: [u32; 3],
+    pub running: [u32; 3],
+    pub kv_utilization: f64,
+    pub planning_evals: u64,
+    pub pool_busy_slots: u32,
+    pub pool_total_slots: u32,
+    pub pool_queue_depth: u32,
+    pub pool_aged_promotions: u64,
+    pub finished: u64,
+    pub dropped: u64,
+    pub cancelled: u64,
+    /// Fraction of the rolling window that met its TTFT budget, per
+    /// SLO class (1.0 when the window is empty).
+    pub ttft_attainment: [f64; 3],
+    /// Number of samples currently in each rolling window.
+    pub ttft_samples: [u32; 3],
+}
+
+/// Accumulates probes and terminal outcomes across a run.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    epochs: u64,
+    stride: u64,
+    samples: Vec<Probe>,
+    finished: u64,
+    dropped: u64,
+    cancelled: u64,
+    ttft_ok: [VecDeque<bool>; 3],
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry { stride: 1, ..Telemetry::default() }
+    }
+
+    /// Whether the upcoming epoch's probe would be retained — callers
+    /// should skip the (O(requests)) probe entirely when it wouldn't.
+    pub fn wants_sample(&self) -> bool {
+        self.epochs % self.stride.max(1) == 0
+    }
+
+    /// Advance the epoch counter without recording a sample.
+    pub fn tick(&mut self) {
+        self.epochs += 1;
+    }
+
+    /// Record a probe for this epoch and advance.
+    pub fn push(&mut self, p: Probe) {
+        self.samples.push(p);
+        self.epochs += 1;
+        if self.samples.len() >= RING_CAP {
+            // decimate: keep the 1st, 3rd, 5th, ... samples
+            let mut keep = false;
+            self.samples.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.stride = self.stride.max(1) * 2;
+        }
+    }
+
+    /// Fold a finished run's terminal outcomes into the counters and
+    /// TTFT windows. Safe to call per drained report chunk.
+    pub fn on_finished(&mut self, report: &Report) {
+        for o in &report.outcomes {
+            self.finished += 1;
+            let idx = o.slo_class.unwrap_or_default() as usize;
+            let win = &mut self.ttft_ok[idx];
+            win.push_back(o.ttft() <= o.slo_latency);
+            while win.len() > TTFT_WINDOW {
+                win.pop_front();
+            }
+        }
+        self.dropped += report.failed.len() as u64;
+        self.cancelled += report.cancelled.len() as u64;
+    }
+
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// The retained probe ring, oldest first.
+    pub fn samples(&self) -> &[Probe] {
+        &self.samples
+    }
+
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let last = self.samples.last().copied().unwrap_or_default();
+        let mut ttft_attainment = [1.0f64; 3];
+        let mut ttft_samples = [0u32; 3];
+        for (i, win) in self.ttft_ok.iter().enumerate() {
+            ttft_samples[i] = win.len() as u32;
+            if !win.is_empty() {
+                let ok = win.iter().filter(|&&b| b).count();
+                ttft_attainment[i] = ok as f64 / win.len() as f64;
+            }
+        }
+        TelemetrySnapshot {
+            epochs: self.epochs,
+            t: last.t,
+            waiting: last.waiting,
+            running: last.running,
+            kv_utilization: last.kv_utilization,
+            planning_evals: last.planning_evals,
+            pool_busy_slots: last.pool_busy_slots,
+            pool_total_slots: last.pool_total_slots,
+            pool_queue_depth: last.pool_queue_depth,
+            pool_aged_promotions: last.pool_aged_promotions,
+            finished: self.finished,
+            dropped: self.dropped,
+            cancelled: self.cancelled,
+            ttft_attainment,
+            ttft_samples,
+        }
+    }
+
+    /// Human-readable lines appended to a backend's summary output.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let s = self.snapshot();
+        let mut out = vec![
+            format!(
+                "obs: {} epochs, {} samples retained (stride {})",
+                s.epochs,
+                self.samples.len(),
+                self.stride.max(1)
+            ),
+            format!(
+                "obs: terminal counts finished={} dropped={} cancelled={}",
+                s.finished, s.dropped, s.cancelled
+            ),
+        ];
+        for (i, name) in SLO_CLASSES.iter().enumerate() {
+            if s.ttft_samples[i] > 0 {
+                out.push(format!(
+                    "obs: ttft attainment [{name}] {:.3} over {} finished",
+                    s.ttft_attainment[i], s.ttft_samples[i]
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0.000000".into()
+    }
+}
+
+/// Render a snapshot in Prometheus text exposition format. Output is
+/// deterministic: fixed metric order, fixed label order, `{:.6}`
+/// floats.
+pub fn prometheus_text(s: &TelemetrySnapshot) -> String {
+    let mut out = String::with_capacity(2048);
+    let mut metric = |help: &str, ty: &str, name: &str, lines: &[(String, String)]| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+        for (labels, value) in lines {
+            if labels.is_empty() {
+                out.push_str(&format!("{name} {value}\n"));
+            } else {
+                out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+            }
+        }
+    };
+
+    metric(
+        "Scheduler epochs (steps) observed.",
+        "counter",
+        "tcm_obs_epochs",
+        &[(String::new(), s.epochs.to_string())],
+    );
+    metric(
+        "Virtual clock of the most recent probe, seconds.",
+        "gauge",
+        "tcm_obs_clock_seconds",
+        &[(String::new(), fmt_f64(s.t))],
+    );
+    let by_modality = |vals: &[u32; 3]| -> Vec<(String, String)> {
+        MODALITIES
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (format!("modality=\"{m}\""), vals[i].to_string()))
+            .collect()
+    };
+    metric(
+        "Requests waiting for admission, by modality.",
+        "gauge",
+        "tcm_obs_waiting",
+        &by_modality(&s.waiting),
+    );
+    metric(
+        "Requests in the running batch, by modality.",
+        "gauge",
+        "tcm_obs_running",
+        &by_modality(&s.running),
+    );
+    metric(
+        "KV cache utilization in [0,1].",
+        "gauge",
+        "tcm_obs_kv_utilization",
+        &[(String::new(), fmt_f64(s.kv_utilization))],
+    );
+    metric(
+        "Cumulative admission-planning evaluations.",
+        "counter",
+        "tcm_obs_planning_evals",
+        &[(String::new(), s.planning_evals.to_string())],
+    );
+    metric(
+        "Busy encoder pool slots.",
+        "gauge",
+        "tcm_obs_pool_busy_slots",
+        &[(String::new(), s.pool_busy_slots.to_string())],
+    );
+    metric(
+        "Total encoder pool slots.",
+        "gauge",
+        "tcm_obs_pool_total_slots",
+        &[(String::new(), s.pool_total_slots.to_string())],
+    );
+    metric(
+        "Requests queued behind the encoder pool.",
+        "gauge",
+        "tcm_obs_pool_queue_depth",
+        &[(String::new(), s.pool_queue_depth.to_string())],
+    );
+    metric(
+        "Cumulative aged pebble-to-rock promotions in the pool.",
+        "counter",
+        "tcm_obs_pool_aged_promotions",
+        &[(String::new(), s.pool_aged_promotions.to_string())],
+    );
+    metric(
+        "Requests finished.",
+        "counter",
+        "tcm_obs_finished_total",
+        &[(String::new(), s.finished.to_string())],
+    );
+    metric(
+        "Requests dropped.",
+        "counter",
+        "tcm_obs_dropped_total",
+        &[(String::new(), s.dropped.to_string())],
+    );
+    metric(
+        "Requests cancelled.",
+        "counter",
+        "tcm_obs_cancelled_total",
+        &[(String::new(), s.cancelled.to_string())],
+    );
+    let by_class = |vals: &[f64; 3]| -> Vec<(String, String)> {
+        SLO_CLASSES
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (format!("slo_class=\"{c}\""), fmt_f64(vals[i])))
+            .collect()
+    };
+    metric(
+        "Rolling TTFT attainment per SLO class (1.0 when no samples).",
+        "gauge",
+        "tcm_obs_ttft_attainment",
+        &by_class(&s.ttft_attainment),
+    );
+    metric(
+        "Samples in each rolling TTFT window.",
+        "gauge",
+        "tcm_obs_ttft_window",
+        &SLO_CLASSES
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (format!("slo_class=\"{c}\""), s.ttft_samples[i].to_string()))
+            .collect::<Vec<_>>(),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Outcome;
+    use crate::request::{Modality, SloClass};
+
+    fn probe(t: f64) -> Probe {
+        Probe { t, waiting: [1, 2, 3], running: [4, 5, 6], kv_utilization: 0.5, ..Probe::default() }
+    }
+
+    #[test]
+    fn decimation_bounds_memory_and_doubles_stride() {
+        let mut tel = Telemetry::new();
+        for i in 0..20_000u64 {
+            if tel.wants_sample() {
+                tel.push(probe(i as f64));
+            } else {
+                tel.tick();
+            }
+        }
+        assert!(tel.samples().len() < RING_CAP);
+        assert_eq!(tel.epochs(), 20_000);
+        // samples must remain strictly time-ordered after decimation
+        for w in tel.samples().windows(2) {
+            assert!(w[0].t < w[1].t);
+        }
+    }
+
+    #[test]
+    fn ttft_windows_track_slo_class() {
+        let mut tel = Telemetry::new();
+        let mut report = Report::default();
+        report.outcomes.push(Outcome {
+            id: 1,
+            modality: Modality::Text,
+            class: None,
+            arrival: 0.0,
+            first_token: 0.5,
+            finish: 1.0,
+            output_tokens: 8,
+            slo_latency: 1.0,
+            preemptions: 0,
+            preempted_time: 0.0,
+            slo_class: Some(SloClass::Critical),
+        });
+        report.outcomes.push(Outcome {
+            id: 2,
+            modality: Modality::Text,
+            class: None,
+            arrival: 0.0,
+            first_token: 5.0,
+            finish: 6.0,
+            output_tokens: 8,
+            slo_latency: 1.0,
+            preemptions: 0,
+            preempted_time: 0.0,
+            slo_class: None, // defaults to standard
+        });
+        tel.on_finished(&report);
+        let s = tel.snapshot();
+        assert_eq!(s.finished, 2);
+        assert_eq!(s.ttft_samples, [1, 1, 0]);
+        assert_eq!(s.ttft_attainment[0], 1.0);
+        assert_eq!(s.ttft_attainment[1], 0.0);
+        assert_eq!(s.ttft_attainment[2], 1.0, "empty window reads 1.0");
+    }
+
+    #[test]
+    fn prometheus_text_is_deterministic_and_labeled() {
+        let mut tel = Telemetry::new();
+        tel.push(probe(1.25));
+        let a = prometheus_text(&tel.snapshot());
+        let b = prometheus_text(&tel.snapshot());
+        assert_eq!(a, b);
+        assert!(a.contains("tcm_obs_epochs 1"));
+        assert!(a.contains("tcm_obs_waiting{modality=\"image\"} 2"));
+        assert!(a.contains("tcm_obs_ttft_attainment{slo_class=\"critical\"} 1.000000"));
+        assert!(a.contains("# TYPE tcm_obs_kv_utilization gauge"));
+    }
+}

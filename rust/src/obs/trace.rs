@@ -1,0 +1,225 @@
+//! Chrome/Perfetto `trace_event` JSON export.
+//!
+//! Hand-rolled serializer (zero dependencies) emitting the legacy JSON
+//! trace format that both `chrome://tracing` and [ui.perfetto.dev]
+//! ingest. Layout:
+//!
+//! - pid 1 — requests: one thread per request (named via `M` metadata
+//!   events), one `X` complete event per lifecycle [`Segment`].
+//! - pid 2 — encoder pool: one thread per slot, `X` slices for each
+//!   pool encode occupancy.
+//! - pid 3 — telemetry: `C` counter events per retained [`Probe`].
+//!
+//! Timestamps are microseconds of virtual time; all floats are written
+//! with fixed precision so the output is byte-deterministic.
+//!
+//! [ui.perfetto.dev]: https://ui.perfetto.dev
+
+use super::span::{RequestSpans, SpanKind};
+use super::Probe;
+
+/// Seconds of virtual time -> trace microseconds, clamped finite.
+fn us(t: f64) -> f64 {
+    if t.is_finite() {
+        t * 1e6
+    } else {
+        0.0
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct TraceWriter {
+    buf: String,
+    first: bool,
+}
+
+impl TraceWriter {
+    fn new() -> Self {
+        TraceWriter { buf: String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), first: true }
+    }
+
+    fn push(&mut self, event: String) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('\n');
+        self.buf.push_str(&event);
+    }
+
+    fn meta_name(&mut self, pid: u32, tid: u64, which: &str, name: &str) {
+        self.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{which}\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        ));
+    }
+
+    fn complete(&mut self, pid: u32, tid: u64, name: &str, ts: f64, dur: f64, args: Option<String>) {
+        let args = args.map(|a| format!(",\"args\":{{{a}}}")).unwrap_or_default();
+        self.push(format!(
+            "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{}\",\
+             \"ts\":{:.3},\"dur\":{:.3}{args}}}",
+            esc(name),
+            us(ts),
+            us(dur.max(0.0)),
+        ));
+    }
+
+    fn counter(&mut self, pid: u32, name: &str, ts: f64, series: &[(&str, f64)]) {
+        let args = series
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{:.6}", esc(k), if v.is_finite() { *v } else { 0.0 }))
+            .collect::<Vec<_>>()
+            .join(",");
+        self.push(format!(
+            "{{\"ph\":\"C\",\"pid\":{pid},\"tid\":0,\"name\":\"{}\",\"ts\":{:.3},\
+             \"args\":{{{args}}}}}",
+            esc(name),
+            us(ts),
+        ));
+    }
+
+    fn finish(mut self) -> String {
+        self.buf.push_str("\n]}\n");
+        self.buf
+    }
+}
+
+/// Serialize spans and telemetry probes into a Perfetto-loadable JSON
+/// trace. Output is a pure function of the inputs.
+pub fn trace_json(spans: &[RequestSpans], samples: &[Probe]) -> String {
+    let mut w = TraceWriter::new();
+
+    w.meta_name(1, 0, "process_name", "requests");
+    w.meta_name(2, 0, "process_name", "encoder pool");
+    w.meta_name(3, 0, "process_name", "telemetry");
+
+    // pid 1: one thread per request, one slice per segment
+    let mut pool_slices: Vec<(usize, f64, f64, u64)> = Vec::new();
+    for s in spans {
+        w.meta_name(1, s.id, "thread_name", &format!("req {} ({})", s.id, s.modality.name()));
+        for seg in &s.segments {
+            let args = seg.slot.map(|slot| format!("\"slot\":{slot}"));
+            w.complete(1, s.id, seg.kind.name(), seg.start, seg.end - seg.start, args);
+            if seg.kind == SpanKind::Encode {
+                if let Some(slot) = seg.slot {
+                    pool_slices.push((slot, seg.start, seg.end, s.id));
+                }
+            }
+        }
+    }
+
+    // pid 2: encoder slot occupancy, ordered by (slot, start)
+    pool_slices.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut named: Option<usize> = None;
+    for (slot, start, end, id) in pool_slices {
+        if named != Some(slot) {
+            // slots arrive sorted, so each thread is named exactly once
+            w.meta_name(2, slot as u64, "thread_name", &format!("slot {slot}"));
+            named = Some(slot);
+        }
+        w.complete(2, slot as u64, &format!("encode req {id}"), start, end - start, None);
+    }
+
+    // pid 3: counters per retained probe
+    for p in samples {
+        w.counter(
+            3,
+            "waiting",
+            p.t,
+            &[
+                ("text", p.waiting[0] as f64),
+                ("image", p.waiting[1] as f64),
+                ("video", p.waiting[2] as f64),
+            ],
+        );
+        w.counter(
+            3,
+            "running",
+            p.t,
+            &[
+                ("text", p.running[0] as f64),
+                ("image", p.running[1] as f64),
+                ("video", p.running[2] as f64),
+            ],
+        );
+        w.counter(3, "kv_utilization", p.t, &[("kv", p.kv_utilization)]);
+        w.counter(
+            3,
+            "encoder_pool",
+            p.t,
+            &[("busy", p.pool_busy_slots as f64), ("queued", p.pool_queue_depth as f64)],
+        );
+    }
+
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Segment, SpanKind, Terminal};
+    use crate::request::Modality;
+
+    fn spans_fixture() -> Vec<RequestSpans> {
+        vec![RequestSpans {
+            id: 7,
+            modality: Modality::Image,
+            multimodal: true,
+            arrival: 0.0,
+            end: 2.0,
+            terminal: Some(Terminal::Finished),
+            segments: vec![
+                Segment { kind: SpanKind::PoolQueue, start: 0.0, end: 0.5, slot: None },
+                Segment { kind: SpanKind::Encode, start: 0.5, end: 1.0, slot: Some(2) },
+                Segment { kind: SpanKind::Prefill, start: 1.0, end: 1.5, slot: None },
+                Segment { kind: SpanKind::Decode, start: 1.5, end: 2.0, slot: None },
+            ],
+        }]
+    }
+
+    #[test]
+    fn trace_is_valid_shape_and_deterministic() {
+        let probes =
+            vec![Probe { t: 0.5, waiting: [1, 0, 0], running: [0, 1, 0], ..Probe::default() }];
+        let a = trace_json(&spans_fixture(), &probes);
+        let b = trace_json(&spans_fixture(), &probes);
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(a.trim_end().ends_with("]}"));
+        assert!(a.contains("\"ph\":\"X\""));
+        assert!(a.contains("\"ph\":\"C\""));
+        assert!(a.contains("req 7 (image)"));
+        assert!(a.contains("encode req 7"));
+        assert!(a.contains("\"slot\":2"));
+        // braces balance (cheap structural sanity; CI runs the real
+        // validator in tools/trace_check.py)
+        let open = a.matches('{').count();
+        let close = a.matches('}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn non_finite_inputs_are_clamped() {
+        let mut spans = spans_fixture();
+        spans[0].segments[0].end = 0.5;
+        let probes = vec![Probe { t: 1.0, kv_utilization: f64::NAN, ..Probe::default() }];
+        let json = trace_json(&spans, &probes);
+        assert!(!json.contains("NaN"));
+        assert!(!json.contains("inf"));
+    }
+}

@@ -98,6 +98,9 @@ impl std::error::Error for ServerGone {}
 enum ServerMsg {
     Submit(Request, mpsc::Sender<ResponseEvent>),
     Cancel(u64),
+    /// Telemetry scrape: reply with Prometheus text (see
+    /// [`ServerHandle::metrics_text`]).
+    Metrics(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -135,6 +138,17 @@ impl ServerHandle {
     /// stands). Errs only when the leader has exited.
     pub fn cancel(&self, req_id: u64) -> Result<(), ServerGone> {
         self.tx.send(ServerMsg::Cancel(req_id)).map_err(|_| ServerGone)
+    }
+
+    /// Scrape current telemetry as Prometheus text (the `/metrics`
+    /// endpoint a real deployment would expose). Requires the backend to
+    /// have been spawned with `cfg.obs` active; otherwise returns a
+    /// comment line saying telemetry is disabled. Errs with
+    /// [`ServerGone`] when the leader has exited.
+    pub fn metrics_text(&self) -> Result<String, ServerGone> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(ServerMsg::Metrics(tx)).map_err(|_| ServerGone)?;
+        rx.recv().map_err(|_| ServerGone)
     }
 
     pub fn shutdown(&self) {
@@ -269,6 +283,13 @@ fn leader_loop(
                     // deliver() retires the subscriber when it streams
                     backend.cancel(id);
                 }
+                Ok(Some(ServerMsg::Metrics(tx))) => {
+                    let text = backend
+                        .telemetry_snapshot()
+                        .map(|s| crate::obs::prometheus_text(&s))
+                        .unwrap_or_else(|| "# telemetry disabled (spawn with --obs)\n".into());
+                    let _ = tx.send(text);
+                }
                 Ok(Some(ServerMsg::Shutdown)) => shutdown = true,
                 Ok(None) => break,
                 Err(()) => {
@@ -323,6 +344,14 @@ fn leader_loop(
         deliver(&mut subscribers, ev);
     }
     collected.merge(backend.take_finished());
+    // observability: flush the Perfetto trace at shutdown when requested
+    if let Some(path) = &cfg.obs.trace_out {
+        if let Some(json) = backend.trace_json() {
+            if let Err(e) = std::fs::write(path, json) {
+                eprintln!("failed to write trace {path}: {e}");
+            }
+        }
+    }
     collected.sort_by_id();
     collected
 }
@@ -361,7 +390,8 @@ fn deliver(subscribers: &mut HashMap<u64, Subscriber>, ev: RequestEvent) {
         // internal lifecycle events, not client-visible
         RequestEvent::Ready { .. }
         | RequestEvent::Encoded { .. }
-        | RequestEvent::Preempted { .. } => {}
+        | RequestEvent::Preempted { .. }
+        | RequestEvent::Requeued { .. } => {}
     }
 }
 
@@ -452,6 +482,42 @@ mod tests {
             assert!(matches!(events[0], ResponseEvent::FirstToken { .. }));
             assert!(matches!(events[1], ResponseEvent::Finished { .. }));
         }
+    }
+
+    /// An observed server: `metrics_text` scrapes live Prometheus
+    /// telemetry mid-run, and the observer never perturbs results.
+    #[test]
+    fn server_metrics_scrape_with_obs() {
+        let mut cfg = ServeConfig::default();
+        cfg.policy = "fcfs".into();
+        cfg.obs.enabled = true;
+        let server = Server::spawn_sim(cfg);
+        let h = server.handle();
+        let mut rxs = Vec::new();
+        for id in 0..4u64 {
+            rxs.push(h.submit(text_req(id, 64, 4)).unwrap());
+        }
+        let text = h.metrics_text().unwrap();
+        assert!(text.contains("tcm_obs_epochs"), "scrape must expose telemetry: {text}");
+        assert!(text.contains("tcm_obs_waiting{modality=\"text\"}"));
+        let report = server.finish();
+        assert_eq!(report.outcomes.len(), 4);
+        for rx in rxs {
+            let events: Vec<_> = rx.iter().collect();
+            assert_eq!(events.len(), 2);
+        }
+    }
+
+    /// Without obs, a scrape answers with the disabled comment rather
+    /// than hanging or panicking.
+    #[test]
+    fn server_metrics_scrape_without_obs() {
+        let cfg = ServeConfig::default();
+        let server = Server::spawn_sim(cfg);
+        let h = server.handle();
+        let text = h.metrics_text().unwrap();
+        assert!(text.starts_with("# telemetry disabled"), "got: {text}");
+        server.finish();
     }
 
     /// A sim engine that takes real wall time per iteration, so tests can

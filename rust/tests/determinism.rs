@@ -265,6 +265,7 @@ fn hash_events(events: &[RequestEvent]) -> u64 {
             RequestEvent::Finished { id, t } => (5, id, t),
             RequestEvent::Dropped { id, t } => (6, id, t),
             RequestEvent::Cancelled { id, t } => (7, id, t),
+            RequestEvent::Requeued { id, t } => (8, id, t),
         };
         fnv1a(&mut h, &[tag]);
         fnv1a(&mut h, &id.to_le_bytes());

@@ -36,6 +36,7 @@ struct EventCounts {
     ready: u32,
     encoded: u32,
     preempted: u32,
+    requeued: u32,
     first_token: u32,
     finished: u32,
     dropped: u32,
@@ -78,6 +79,7 @@ fn run_stepped(
             RequestEvent::Ready { id, .. } => (id, |c| &mut c.ready),
             RequestEvent::Encoded { id, .. } => (id, |c| &mut c.encoded),
             RequestEvent::Preempted { id, .. } => (id, |c| &mut c.preempted),
+            RequestEvent::Requeued { id, .. } => (id, |c| &mut c.requeued),
             RequestEvent::FirstToken { id, .. } => (id, |c| &mut c.first_token),
             RequestEvent::Finished { id, .. } => (id, |c| &mut c.finished),
             RequestEvent::Dropped { id, .. } => (id, |c| &mut c.dropped),
@@ -201,6 +203,14 @@ fn check_case(g: &mut pt::Gen) -> Result<(), String> {
                 o.id, c.preempted, o.preemptions
             ));
         }
+        // every preempted gap of a *finished* request closed with a
+        // re-admission, so the events pair up exactly
+        if c.requeued != c.preempted {
+            return Err(format!(
+                "{label}: req {} Requeued events {} != Preempted events {}",
+                o.id, c.requeued, c.preempted
+            ));
+        }
     }
 
     // determinism: the identical config and trace reproduce bit-for-bit
@@ -270,6 +280,7 @@ fn run_stepped_with_cancels(
             RequestEvent::Ready { id, .. } => (id, |c| &mut c.ready),
             RequestEvent::Encoded { id, .. } => (id, |c| &mut c.encoded),
             RequestEvent::Preempted { id, .. } => (id, |c| &mut c.preempted),
+            RequestEvent::Requeued { id, .. } => (id, |c| &mut c.requeued),
             RequestEvent::FirstToken { id, .. } => (id, |c| &mut c.first_token),
             RequestEvent::Finished { id, .. } => (id, |c| &mut c.finished),
             RequestEvent::Dropped { id, .. } => (id, |c| &mut c.dropped),

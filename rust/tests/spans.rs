@@ -1,0 +1,323 @@
+//! The observability contract, end to end:
+//!
+//! 1. **Conservation** — for every request, the reconstructed span
+//!    segments exactly partition `[arrival, terminal]` (bit-contiguous),
+//!    the `PreemptedGap` total matches the scheduler's `preempted_time`,
+//!    and encode segments count `1 + preemptions` for finished
+//!    multimodal requests — across policies × routers × pool modes ×
+//!    seeds, with enough memory pressure that the grid is non-vacuous
+//!    (preemptions, pool encodes, and migrations all actually occur).
+//! 2. **Invisibility** — attaching the observer changes nothing: the
+//!    event stream and the report are bit-identical to the undecorated
+//!    backend, and a `Scheduler` with the obs tap enabled produces
+//!    identical stats.
+
+use tcm_serve::backend::{self, ServeBackend};
+use tcm_serve::config::ServeConfig;
+use tcm_serve::coordinator::{RequestEvent, Scheduler, StepOutcome};
+use tcm_serve::engine::sim_engine::SimEngine;
+use tcm_serve::experiments::make_trace;
+use tcm_serve::metrics::Report;
+use tcm_serve::obs::{ObsBackend, SpanKind, Terminal};
+use tcm_serve::policies::build_policy;
+use tcm_serve::request::Request;
+
+fn grid_cfg(policy: &str, pool: bool, router: &str, seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = policy.into();
+    cfg.mix = "MH".into();
+    cfg.num_requests = 60;
+    cfg.rate = 3.0;
+    cfg.seed = seed;
+    cfg.memory_frac = 0.06;
+    cfg.cluster.replicas = 2;
+    cfg.cluster.router = router.into();
+    cfg.pool.enabled = pool;
+    cfg.pool.slots = 2;
+    cfg
+}
+
+fn observed(cfg: &ServeConfig) -> ObsBackend {
+    // wrap explicitly (cfg.obs stays off) so the test controls both the
+    // decorated and undecorated builds from one config
+    ObsBackend::new(backend::build(cfg))
+}
+
+/// Conservation + accounting checks for one finished run, returning
+/// (preemptions, pool-encode segments, migration segments) observed.
+fn check_spans(ctx: &str, b: &mut ObsBackend, report: &Report) -> (u64, usize, usize) {
+    let spans = b.spans();
+    assert_eq!(spans.len(), report.total(), "{ctx}: every request must have a span tree");
+    let by_id: std::collections::BTreeMap<u64, &tcm_serve::metrics::Outcome> =
+        report.outcomes.iter().map(|o| (o.id, o)).collect();
+    let mut preemptions = 0u64;
+    let mut pool_encodes = 0usize;
+    let mut migrations = 0usize;
+    for s in &spans {
+        s.check_conservation().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        pool_encodes +=
+            s.segments.iter().filter(|g| g.kind == SpanKind::Encode && g.slot.is_some()).count();
+        migrations += s.segments.iter().filter(|g| g.kind == SpanKind::Migration).count();
+        let Some(o) = by_id.get(&s.id) else { continue };
+        assert_eq!(
+            s.terminal,
+            Some(Terminal::Finished),
+            "{ctx}: req {} completed but span terminal is {:?}",
+            s.id,
+            s.terminal
+        );
+        assert_eq!(
+            s.end.to_bits(),
+            o.finish.to_bits(),
+            "{ctx}: req {} span ends at {} but outcome finished at {}",
+            s.id,
+            s.end,
+            o.finish
+        );
+        assert!(
+            (s.gap_total() - o.preempted_time).abs() <= 1e-9,
+            "{ctx}: req {} gap total {} != preempted_time {}",
+            s.id,
+            s.gap_total(),
+            o.preempted_time
+        );
+        if s.multimodal {
+            assert_eq!(
+                s.encode_count(),
+                1 + o.preemptions as usize,
+                "{ctx}: req {} must encode once plus once per preemption",
+                s.id
+            );
+        }
+        preemptions += o.preemptions as u64;
+    }
+    (preemptions, pool_encodes, migrations)
+}
+
+#[test]
+fn span_conservation_across_grid() {
+    let mut total_preemptions = 0u64;
+    let mut total_pool_encodes = 0usize;
+    let mut total_migrations = 0usize;
+    for policy in ["fcfs", "tcm", "edf"] {
+        for pool in [false, true] {
+            for router in ["round-robin", "least-work"] {
+                for seed in [7u64, 21, 42] {
+                    let cfg = grid_cfg(policy, pool, router, seed);
+                    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+                    let trace = make_trace(&cfg, &profile);
+                    let mut b = observed(&cfg);
+                    let report = b.run_trace(trace);
+                    let ctx = format!("{policy}/{router}/pool={pool}/seed={seed}");
+                    let (p, e, m) = check_spans(&ctx, &mut b, &report);
+                    total_preemptions += p;
+                    if pool {
+                        total_pool_encodes += e;
+                        total_migrations += m;
+                    } else {
+                        assert_eq!(e, 0, "{ctx}: slot-tagged encodes without a pool");
+                        assert_eq!(m, 0, "{ctx}: migrations without a pool");
+                    }
+                }
+            }
+        }
+    }
+    // the invariants above must not have held vacuously
+    assert!(total_preemptions > 0, "grid produced no preemptions — raise memory pressure");
+    assert!(total_pool_encodes > 0, "pool runs produced no slot-tagged encode segments");
+    assert!(total_migrations > 0, "pool runs produced no migration segments");
+}
+
+#[test]
+fn span_conservation_single_scheduler() {
+    for policy in ["fcfs", "tcm", "edf"] {
+        for seed in [7u64, 21, 42] {
+            let mut cfg = ServeConfig::default();
+            cfg.policy = policy.into();
+            cfg.mix = "MH".into();
+            cfg.num_requests = 60;
+            cfg.rate = 3.0;
+            cfg.seed = seed;
+            cfg.memory_frac = 0.05;
+            let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+            let trace = make_trace(&cfg, &profile);
+            let mut b = observed(&cfg);
+            let report = b.run_trace(trace);
+            check_spans(&format!("scheduler/{policy}/seed={seed}"), &mut b, &report);
+            // the stepping path samples telemetry on every epoch
+            let snap = b.telemetry_snapshot().expect("observer attached");
+            assert!(snap.epochs > 0, "telemetry must have observed epochs");
+            assert_eq!(snap.finished, report.outcomes.len() as u64);
+        }
+    }
+}
+
+/// Drive a backend through the public stepping verbs (the server's
+/// loop), collecting events — the apples-to-apples harness for the
+/// invisibility proof.
+fn run_stepped(b: &mut dyn ServeBackend, trace: Vec<Request>) -> (Report, Vec<RequestEvent>) {
+    let mut trace = trace;
+    trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for req in trace {
+        b.inject(req);
+    }
+    let mut events = Vec::new();
+    let mut collected = Report::default();
+    let mut steps = 0u64;
+    loop {
+        match b.step() {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => b.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => b.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => b.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        events.extend(b.take_events());
+        collected.merge(b.take_finished());
+        steps += 1;
+        assert!(steps < 5_000_000, "stepping did not drain");
+    }
+    events.extend(b.take_events());
+    collected.merge(b.take_finished());
+    collected.sort_by_id();
+    (collected, events)
+}
+
+fn assert_reports_bit_identical(ctx: &str, a: &Report, b: &Report) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome counts differ");
+    assert_eq!(a.failed.len(), b.failed.len(), "{ctx}: drop counts differ");
+    assert_eq!(a.cancelled.len(), b.cancelled.len(), "{ctx}: cancel counts differ");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{ctx}: outcome order diverged");
+        assert_eq!(
+            x.first_token.to_bits(),
+            y.first_token.to_bits(),
+            "{ctx}: req {} first_token not bit-identical",
+            x.id
+        );
+        assert_eq!(
+            x.finish.to_bits(),
+            y.finish.to_bits(),
+            "{ctx}: req {} finish not bit-identical",
+            x.id
+        );
+        assert_eq!(x.preemptions, y.preemptions, "{ctx}: req {} preemptions differ", x.id);
+        assert_eq!(
+            x.preempted_time.to_bits(),
+            y.preempted_time.to_bits(),
+            "{ctx}: req {} preempted_time not bit-identical",
+            x.id
+        );
+    }
+    for (x, y) in a.failed.iter().zip(&b.failed) {
+        assert_eq!(x.id, y.id, "{ctx}: failed order diverged");
+        assert_eq!(x.dropped_at.to_bits(), y.dropped_at.to_bits(), "{ctx}: drop time differs");
+    }
+}
+
+/// The tentpole guarantee: attaching the observer is invisible. Event
+/// streams and reports from the decorated and undecorated backends are
+/// identical element for element, bit for bit — scheduler topology,
+/// plain cluster, and pool-mode cluster alike.
+#[test]
+fn observer_is_bit_invisible() {
+    let mut scheduler_cfg = ServeConfig::default();
+    scheduler_cfg.policy = "tcm".into();
+    scheduler_cfg.mix = "MH".into();
+    scheduler_cfg.num_requests = 50;
+    scheduler_cfg.rate = 3.0;
+    scheduler_cfg.seed = 11;
+    scheduler_cfg.memory_frac = 0.05;
+    let cluster_cfg = grid_cfg("tcm", false, "least-work", 7);
+    let pool_cfg = grid_cfg("fcfs", true, "least-work", 7);
+    for (ctx, cfg) in [
+        ("scheduler", scheduler_cfg),
+        ("cluster", cluster_cfg),
+        ("cluster+pool", pool_cfg),
+    ] {
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let trace = make_trace(&cfg, &profile);
+
+        let mut plain = backend::build(&cfg);
+        let (plain_report, plain_events) = run_stepped(plain.as_mut(), trace.clone());
+
+        let mut obs = observed(&cfg);
+        let (obs_report, obs_events) = run_stepped(&mut obs, trace);
+
+        assert_eq!(
+            plain_events, obs_events,
+            "{ctx}: the observer altered the event stream"
+        );
+        assert_reports_bit_identical(ctx, &plain_report, &obs_report);
+
+        // and the observer actually observed: spans exist and conserve
+        check_spans(ctx, &mut obs, &obs_report);
+    }
+}
+
+/// The raw scheduler tap is equally invisible: same trace, obs on vs
+/// off, identical stats (PartialEq over every counter) and report.
+#[test]
+fn scheduler_obs_tap_does_not_change_results() {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = "tcm".into();
+    cfg.mix = "MH".into();
+    cfg.num_requests = 80;
+    cfg.rate = 3.0;
+    cfg.seed = 13;
+    cfg.memory_frac = 0.05;
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+
+    let new_scheduler = |cfg: &ServeConfig| {
+        let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+        let policy = build_policy(cfg, &profile);
+        Scheduler::new(cfg.clone(), policy, Box::new(SimEngine::new(&profile)))
+    };
+
+    let mut off = new_scheduler(&cfg);
+    let report_off = off.run(trace.clone());
+
+    let mut on = new_scheduler(&cfg);
+    on.set_obs(true);
+    let report_on = on.run(trace);
+
+    assert_eq!(off.stats, on.stats, "obs tap changed scheduler stats");
+    assert_reports_bit_identical("scheduler-tap", &report_off, &report_on);
+
+    assert!(
+        !on.take_obs_events().is_empty(),
+        "tap enabled but no obs events were buffered"
+    );
+    assert!(
+        !on.take_events().is_empty(),
+        "obs-enabled batch drain must retain the event stream for harvest"
+    );
+    assert!(
+        off.take_events().is_empty(),
+        "without obs the batch drain must keep clearing events (flat memory)"
+    );
+}
+
+/// The Perfetto export is non-trivial for a pool run: request slices,
+/// slot-occupancy slices, counter samples — and byte-deterministic
+/// across two identical runs.
+#[test]
+fn perfetto_trace_exports_pool_run() {
+    let cfg = grid_cfg("tcm", true, "least-work", 21);
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let trace = make_trace(&cfg, &profile);
+
+    let render = |trace: Vec<Request>| {
+        let mut b = observed(&cfg);
+        b.run_trace(trace);
+        ServeBackend::trace_json(&mut b).expect("observer renders a trace")
+    };
+    let json = render(trace.clone());
+    assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+    assert!(json.contains("\"ph\":\"X\""), "trace must contain complete events");
+    assert!(json.contains("\"ph\":\"C\""), "trace must contain counter samples");
+    assert!(json.contains("encoder pool"), "trace must contain the pool process");
+    assert!(json.contains("\"slot\":"), "trace must tag pool encodes with slots");
+    assert_eq!(json, render(trace), "trace export must be byte-deterministic");
+}

@@ -108,6 +108,7 @@ fn events_consistent(policy: &str, report: &Report, events: &[RequestEvent]) -> 
             RequestEvent::Dropped { .. } => drops += 1,
             RequestEvent::Encoded { .. }
             | RequestEvent::Preempted { .. }
+            | RequestEvent::Requeued { .. }
             | RequestEvent::Cancelled { .. } => {}
         }
     }

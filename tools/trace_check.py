@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto trace_event JSON file emitted by
+`tcm-serve simulate --trace-out` (rust/src/obs/trace.rs).
+
+Checks the subset of the trace_event format the exporter uses:
+
+  * top level is an object with a "traceEvents" list;
+  * every event is an object with ph in {X, C, M};
+  * X (complete) events carry finite ts >= 0, dur >= 0, pid, tid, name;
+  * within each (pid, tid), X events are sorted by ts and do not
+    overlap (next.ts >= prev.ts + prev.dur, with a 1e-6 us tolerance
+    for float rendering);
+  * C (counter) events carry finite ts, an args object of finite
+    numbers, and per (pid, name) non-decreasing ts;
+  * M (metadata) events are thread_name records with a string name in
+    args;
+  * the trace is non-vacuous: at least one X and one C event.
+
+Exit status 0 on success, 1 on any violation (all violations are
+printed, not just the first). stdlib only — no third-party imports.
+"""
+
+import json
+import math
+import sys
+from collections import defaultdict
+
+TOL = 1e-6  # us; trace.rs renders timestamps with {:.3}
+
+
+def is_finite_number(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool) and math.isfinite(x)
+
+
+def check(path):
+    errors = []
+
+    def err(msg):
+        errors.append(msg)
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        return [f"{path}: top level must be an object with a traceEvents list"]
+
+    events = doc["traceEvents"]
+    complete = defaultdict(list)  # (pid, tid) -> [(ts, dur, idx)]
+    counters = defaultdict(list)  # (pid, name) -> [(ts, idx)]
+    n_x = n_c = 0
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            err(f"event[{i}]: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "C", "M"):
+            err(f"event[{i}]: unexpected ph {ph!r} (exporter only emits X/C/M)")
+            continue
+
+        if ph == "M":
+            if ev.get("name") != "thread_name":
+                err(f"event[{i}]: M event must be a thread_name record, got {ev.get('name')!r}")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not isinstance(args.get("name"), str):
+                err(f"event[{i}]: M event needs args.name string")
+            continue
+
+        ts = ev.get("ts")
+        if not is_finite_number(ts) or ts < 0:
+            err(f"event[{i}] ({ph}): ts must be a finite number >= 0, got {ts!r}")
+            continue
+        if "pid" not in ev or not isinstance(ev.get("name"), str) or not ev["name"]:
+            err(f"event[{i}] ({ph}): missing pid or name")
+            continue
+
+        if ph == "X":
+            n_x += 1
+            dur = ev.get("dur")
+            if not is_finite_number(dur) or dur < 0:
+                err(f"event[{i}] (X): dur must be a finite number >= 0, got {dur!r}")
+                continue
+            if "tid" not in ev:
+                err(f"event[{i}] (X): missing tid")
+                continue
+            complete[(ev["pid"], ev["tid"])].append((ts, dur, i))
+        else:  # C
+            n_c += 1
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                err(f"event[{i}] (C): counter needs a non-empty args object")
+                continue
+            for k, v in args.items():
+                if not is_finite_number(v):
+                    err(f"event[{i}] (C): args[{k!r}] must be a finite number, got {v!r}")
+            counters[(ev["pid"], ev["name"])].append((ts, i))
+
+    for (pid, tid), slices in complete.items():
+        prev_end, prev_idx = None, None
+        for ts, dur, idx in slices:
+            if prev_end is not None and ts < prev_end - TOL:
+                err(
+                    f"event[{idx}] (X): lane pid={pid} tid={tid} overlaps/regresses: "
+                    f"ts={ts} < previous end {prev_end} (event[{prev_idx}])"
+                )
+            prev_end, prev_idx = ts + dur, idx
+
+    for (pid, name), samples in counters.items():
+        prev_ts, prev_idx = None, None
+        for ts, idx in samples:
+            if prev_ts is not None and ts < prev_ts - TOL:
+                err(
+                    f"event[{idx}] (C): counter pid={pid} name={name!r} time regressed: "
+                    f"ts={ts} < {prev_ts} (event[{prev_idx}])"
+                )
+            prev_ts, prev_idx = ts, idx
+
+    if n_x == 0:
+        err(f"{path}: vacuous trace — no X (complete) events")
+    if n_c == 0:
+        err(f"{path}: vacuous trace — no C (counter) events")
+
+    if not errors:
+        lanes = len(complete)
+        print(f"{path}: OK — {n_x} slices across {lanes} lanes, {n_c} counter samples")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(f"usage: {argv[0]} TRACE.json [TRACE.json ...]", file=sys.stderr)
+        return 2
+    failures = 0
+    for path in argv[1:]:
+        for msg in check(path):
+            print(f"FAIL {msg}", file=sys.stderr)
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
