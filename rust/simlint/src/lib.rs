@@ -434,6 +434,21 @@ mod tests {
     }
 
     #[test]
+    fn readyset_is_inside_the_sim_core_scope() {
+        // the indexed ready/run sets are planner state: hash-ordered
+        // containers or wall clocks there would break bit-determinism
+        // exactly like in scheduler.rs, so the coordinator/ prefix must
+        // keep covering the module
+        let (hash, _) = lint_source("coordinator/readyset.rs", "use std::collections::HashSet;\n");
+        assert_eq!(hash.len(), 1, "hash rule must cover coordinator/readyset.rs");
+        assert_eq!(hash[0].rule, RULE_HASH);
+        let (clock, _) =
+            lint_source("coordinator/readyset.rs", "let t = std::time::Instant::now();\n");
+        assert_eq!(clock.len(), 1, "clock rule must cover coordinator/readyset.rs");
+        assert_eq!(clock[0].rule, RULE_CLOCK);
+    }
+
+    #[test]
     fn clock_rule_exempts_server_bench_main() {
         let src = "let t = std::time::Instant::now();\n";
         for exempt in ["server/mod.rs", "bench_harness.rs", "main.rs"] {

@@ -30,15 +30,128 @@
 //! * `cancel` works in any live state and releases KV/encoder resources
 //!   at the cancel instant; cancelling an unknown or already-terminal id
 //!   returns `false` and changes nothing.
+//!
+//! # Drain
+//!
+//! Three verbs hand accumulated state out of a backend, and they are the
+//! *only* ways state leaves it — everything else observes without
+//! consuming. Each drains an independent buffer, returns everything
+//! accumulated since its last call, and leaves that buffer empty:
+//!
+//! | verb | drains | granularity |
+//! |------|--------|-------------|
+//! | [`ServeBackend::take_events`] | lifecycle [`RequestEvent`]s | per iteration applied |
+//! | [`ServeBackend::take_finished`] | terminal request state, as a partial [`Report`] | per request retired |
+//! | [`ServeBackend::take_obs_events`] | obs-only [`crate::obs::ObsEvent`]s | per observer-visible transition |
+//!
+//! Rules every implementation honors:
+//!
+//! * Draining never changes scheduling decisions: two runs that differ
+//!   only in when (or whether) the drain verbs were called produce the
+//!   same iteration-by-iteration behavior.
+//! * `take_events` and `take_finished` are always live. `take_obs_events`
+//!   returns an empty vec unless the tap was enabled via
+//!   [`ServeBackend::set_obs`].
+//! * `take_finished` *retires*: the per-request state backing the partial
+//!   report is reclaimed, so callers must merge partials themselves
+//!   (long-lived servers call it every iteration to keep memory flat).
+//! * One exception couples the buffers: while an obs tap is active, the
+//!   batch `drain`/`run_trace` paths retain `take_events`'s buffer
+//!   instead of clearing it between iterations, so a post-hoc observer
+//!   can harvest the full stream after a batch run.
 
 use crate::cluster::Cluster;
 use crate::config::ServeConfig;
+use crate::coordinator::state::Phase;
 use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
 use crate::engine::sim_engine::SimEngine;
 use crate::engine::Engine;
 use crate::metrics::Report;
 use crate::policies::build_policy;
 use crate::request::Request;
+
+/// A failed structural-consistency check, typed so callers can match on
+/// what broke and where instead of parsing strings. `Display` renders the
+/// exact messages the stringly predecessor produced, so log-grepping
+/// asserts keep working.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InvariantViolation {
+    /// KV-cache accounting failure (reported by the cache itself).
+    Kv(String),
+    /// An indexed ready/run-set's internal views disagree about `id`.
+    IndexDesync { structure: &'static str, id: u64 },
+    /// Request `id` sits in the named scheduler list but its phase says
+    /// otherwise (e.g. a `waiting` entry not in [`Phase::Waiting`]).
+    PhaseMismatch { list: &'static str, id: u64, phase: Phase },
+    /// A cancelled request is still in the ready or running set.
+    CancelledStillScheduled { id: u64 },
+    /// `stats.cancelled` disagrees with live + retired cancelled counts.
+    CancelAccounting { live: usize, retired: usize, counted: u64 },
+    /// `stats.dropped` disagrees with live + retired failed counts.
+    DropAccounting { live: usize, retired: usize, counted: u64 },
+    /// Encoder pool: the rock in-flight counter drifted from a recount.
+    RockCounterMismatch { counter: usize, recount: usize },
+    /// Encoder pool: more rocks in flight than the configured cap.
+    RockCapExceeded { in_flight: usize, cap: usize },
+    /// Encoder pool: a busy slot's completion time is behind the clock.
+    SlotBehindClock { slot: usize, busy_until: f64, clock: f64 },
+    /// Encoder pool: a free slot coexists with waiting pebbles.
+    IdleSlotWithPebbles,
+    /// Encoder pool: a free slot coexists with an under-cap rock queue.
+    IdleSlotWithAdmissibleRock,
+    /// A cluster replica's scheduler violated an invariant.
+    Replica { index: usize, source: Box<InvariantViolation> },
+    /// The cluster's encoder pool violated an invariant.
+    Pool(Box<InvariantViolation>),
+}
+
+impl std::fmt::Display for InvariantViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InvariantViolation::Kv(msg) => write!(f, "{msg}"),
+            InvariantViolation::IndexDesync { structure, id } => {
+                write!(f, "{structure} index desync at id {id}")
+            }
+            InvariantViolation::PhaseMismatch { list, id, phase } => {
+                write!(f, "{list} req {id} in phase {phase:?}")
+            }
+            InvariantViolation::CancelledStillScheduled { id } => {
+                write!(f, "cancelled req {id} still scheduled")
+            }
+            InvariantViolation::CancelAccounting { live, retired, counted } => write!(
+                f,
+                "cancel accounting: {live} cancelled + {retired} retired-cancelled \
+                 but stats.cancelled={counted}"
+            ),
+            InvariantViolation::DropAccounting { live, retired, counted } => write!(
+                f,
+                "drop accounting: {live} failed + {retired} retired-failed outcomes \
+                 but stats.dropped={counted}"
+            ),
+            InvariantViolation::RockCounterMismatch { counter, recount } => {
+                write!(f, "rock in-flight counter {counter} != recount {recount}")
+            }
+            InvariantViolation::RockCapExceeded { in_flight, cap } => {
+                write!(f, "rock cap violated: {in_flight} in flight > cap {cap}")
+            }
+            InvariantViolation::SlotBehindClock { slot, busy_until, clock } => {
+                write!(f, "slot {slot} busy_until {busy_until} behind pool clock {clock}")
+            }
+            InvariantViolation::IdleSlotWithPebbles => {
+                write!(f, "free slot while pebbles wait")
+            }
+            InvariantViolation::IdleSlotWithAdmissibleRock => {
+                write!(f, "free slot while an admissible rock waits")
+            }
+            InvariantViolation::Replica { index, source } => {
+                write!(f, "replica {index}: {source}")
+            }
+            InvariantViolation::Pool(source) => write!(f, "encoder pool: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for InvariantViolation {}
 
 /// The stepping contract shared by [`Scheduler`] and [`Cluster`].
 ///
@@ -90,7 +203,7 @@ pub trait ServeBackend {
     fn active_requests(&self) -> usize;
 
     /// Structural consistency invariants (property tests).
-    fn check_invariants(&self) -> Result<(), String>;
+    fn check_invariants(&self) -> Result<(), InvariantViolation>;
 
     /// Batch driver: run a whole trace to completion with each backend's
     /// arrival-faithful semantics (the cluster advances replicas to each
@@ -205,7 +318,7 @@ impl ServeBackend for Scheduler {
         Scheduler::active_requests(self)
     }
 
-    fn check_invariants(&self) -> Result<(), String> {
+    fn check_invariants(&self) -> Result<(), InvariantViolation> {
         Scheduler::check_invariants(self)
     }
 
@@ -293,7 +406,7 @@ impl ServeBackend for Cluster {
         Cluster::active_requests(self)
     }
 
-    fn check_invariants(&self) -> Result<(), String> {
+    fn check_invariants(&self) -> Result<(), InvariantViolation> {
         Cluster::check_invariants(self)
     }
 

@@ -701,12 +701,14 @@ impl Cluster {
 
     /// Per-replica scheduler invariants plus encoder-pool structural
     /// invariants (property tests).
-    pub fn check_invariants(&self) -> Result<(), String> {
+    pub fn check_invariants(&self) -> Result<(), crate::backend::InvariantViolation> {
+        use crate::backend::InvariantViolation;
         for (i, r) in self.replicas.iter().enumerate() {
-            r.check_invariants().map_err(|e| format!("replica {i}: {e}"))?;
+            r.check_invariants()
+                .map_err(|e| InvariantViolation::Replica { index: i, source: Box::new(e) })?;
         }
         if let Some(p) = &self.pool {
-            p.check_invariants().map_err(|e| format!("encoder pool: {e}"))?;
+            p.check_invariants().map_err(|e| InvariantViolation::Pool(Box::new(e)))?;
         }
         Ok(())
     }

@@ -358,36 +358,38 @@ impl EncoderPool {
     }
 
     /// Structural invariants (exercised by the pool property suite).
-    pub fn check_invariants(&self) -> Result<(), String> {
+    pub fn check_invariants(&self) -> Result<(), crate::backend::InvariantViolation> {
+        use crate::backend::InvariantViolation;
         let in_flight = self.slots.iter().filter(|s| matches!(s.current, Some((_, true)))).count();
         if in_flight != self.rocks_in_flight {
-            return Err(format!(
-                "rock in-flight counter {} != recount {in_flight}",
-                self.rocks_in_flight
-            ));
+            return Err(InvariantViolation::RockCounterMismatch {
+                counter: self.rocks_in_flight,
+                recount: in_flight,
+            });
         }
         if self.rocks_in_flight > self.rock_cap {
-            return Err(format!(
-                "rock cap violated: {} in flight > cap {}",
-                self.rocks_in_flight, self.rock_cap
-            ));
+            return Err(InvariantViolation::RockCapExceeded {
+                in_flight: self.rocks_in_flight,
+                cap: self.rock_cap,
+            });
         }
         for (i, s) in self.slots.iter().enumerate() {
             if s.current.is_some() && s.busy_until < self.clock - 1e-9 {
-                return Err(format!(
-                    "slot {i} busy_until {} behind pool clock {}",
-                    s.busy_until, self.clock
-                ));
+                return Err(InvariantViolation::SlotBehindClock {
+                    slot: i,
+                    busy_until: s.busy_until,
+                    clock: self.clock,
+                });
             }
         }
         // work conservation: a free slot may coexist only with an empty
         // pebble lane and a rock lane blocked by the cap
         let free = self.slots.iter().any(|s| s.current.is_none());
         if free && !self.pebbles.is_empty() {
-            return Err("free slot while pebbles wait".into());
+            return Err(InvariantViolation::IdleSlotWithPebbles);
         }
         if free && !self.rocks.is_empty() && self.rocks_in_flight < self.rock_cap {
-            return Err("free slot while an admissible rock waits".into());
+            return Err(InvariantViolation::IdleSlotWithAdmissibleRock);
         }
         Ok(())
     }

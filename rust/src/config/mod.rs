@@ -69,6 +69,14 @@ pub struct SchedulerConfig {
     /// static-bucket artifacts do not support chunk resumption; the
     /// simulator supports both).
     pub atomic_prefill: bool,
+    /// Use the indexed ready-set planner (default): waiting requests are
+    /// kept pre-sorted per rank family and only visited heads are
+    /// rescored, so per-iteration planning cost is near-constant in
+    /// queue depth. `false` selects the original full-rescore oracle —
+    /// O(n log n) per iteration — kept as an escape hatch; the two are
+    /// proven bit-identical on events, reports and stats (minus
+    /// `planning_evals`) by `tests/scheduler_properties.rs`.
+    pub indexed: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -79,6 +87,7 @@ impl Default for SchedulerConfig {
             kv_block_tokens: 16,
             preprocess_workers: 8,
             atomic_prefill: false,
+            indexed: true,
         }
     }
 }
@@ -321,6 +330,9 @@ impl ServeConfig {
         if let Some(v) = doc.get_bool("scheduler.atomic_prefill") {
             self.scheduler.atomic_prefill = v;
         }
+        if let Some(v) = doc.get_bool("scheduler.indexed") {
+            self.scheduler.indexed = v;
+        }
         if let Some(v) = doc.get_i64("cluster.replicas") {
             self.cluster.replicas = v as usize;
         }
@@ -411,6 +423,17 @@ impl ServeConfig {
         self.scheduler.token_budget =
             args.get_usize("token-budget", self.scheduler.token_budget as usize).map_err(e)?
                 as u32;
+        if let Some(v) = args.get("sched-indexed") {
+            self.scheduler.indexed = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                other => {
+                    return Err(ConfigError(format!(
+                        "--sched-indexed expects true|false, got '{other}'"
+                    )))
+                }
+            };
+        }
         self.cluster.replicas = args.get_usize("replicas", self.cluster.replicas).map_err(e)?;
         if let Some(v) = args.get("router") {
             self.cluster.router = v.to_string();

@@ -4,7 +4,7 @@
 //! * [`profiler`] — Workload Profiler (§3.2, offline)
 //! * [`estimator`] — Impact Estimator (§3.3)
 //! * [`classifier`] — Request Classifier (§3.4)
-//! * [`queues`] — Queue Manager (§3.5)
+//! * [`readyset`] — Queue Manager (§3.5): indexed ready/run sets
 //! * [`priority`] — Priority Regulator (§3.6)
 //! * [`scheduler`] — the continuous-batching core that ties them to an
 //!   execution engine (shared with all baseline policies)
@@ -14,7 +14,7 @@ pub mod classifier;
 pub mod estimator;
 pub mod priority;
 pub mod profiler;
-pub mod queues;
+pub mod readyset;
 pub mod scheduler;
 pub mod state;
 

@@ -8,6 +8,17 @@
 //! With the paper's constants, motorcycle priority rises almost
 //! immediately (k=0.05, p=3.5), cars after moderate waits (k=0.003,
 //! p=2.5) and trucks only after long waits (k=0.00075, p=1.1) — Fig 9.
+//!
+//! A property the indexed scheduler depends on
+//! ([`crate::policies::Policy::rank_key`]): for a fixed class, `priority`
+//! is non-decreasing and `score` non-increasing in the waiting time `w`
+//! (`k, p ≥ 0`, so `e^{−k·wᵖ}` only falls as `w` grows). Equivalently, at
+//! any instant, requests of one class score in `first_enqueue` order —
+//! aging can reorder *classes* against each other but never two requests
+//! *within* a class. Score plateaus (aging disabled, the `max(1e-9)`
+//! clamp, exp saturation) are broken by the scheduler's `ready_time`
+//! tie-break, which equals `first_enqueue`, so the within-class order
+//! stays total and time-invariant.
 
 use crate::config::RegulatorConfig;
 use crate::request::Class;

@@ -1,0 +1,453 @@
+//! Indexed ready/run sets: the scheduler's core queue structures.
+//!
+//! [`ReadySet`] replaces the scheduler's old raw waiting-id vector and
+//! the `QueueManager` it sat next to (paper §3.5): one structure owns
+//! queue membership, per-class waiting statistics, *and* a rank index
+//! that lets the planner walk waiting requests in policy order without
+//! rescoring the whole queue each iteration. [`RunSet`] replaces the raw
+//! running-id vector with the same O(log n) membership operations while
+//! preserving the admission order the legacy vector encoded implicitly.
+//!
+//! # Determinism
+//!
+//! Both sets iterate in insertion (`seq`) order, which reproduces the
+//! legacy `Vec` order exactly: `Vec::retain` preserved relative order
+//! and `Vec::push` appended, so position order *was* seq order. The rank
+//! index keys entries by `(family, rank, seq)` where `(family, rank)`
+//! comes from [`crate::policies::Policy::rank_key`] — a time-invariant
+//! decomposition of the policy's dynamic `order_key` (see that method's
+//! contract). Float ranks are ordered by `f64::total_cmp` ([`TotalF64`]),
+//! never `PartialOrd`, so a NaN rank cannot panic or introduce
+//! platform-dependent order.
+
+use crate::request::Class;
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+/// An `f64` with the `total_cmp` total order (IEEE 754 totalOrder), so it
+/// can key a `BTreeMap`. NaNs sort deterministically (negative NaN first,
+/// positive NaN last) instead of panicking a comparator.
+#[derive(Debug, Clone, Copy)]
+pub struct TotalF64(pub f64);
+
+impl PartialEq for TotalF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0).is_eq()
+    }
+}
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Running statistics for one class queue (absorbed from the retired
+/// `QueueManager`; semantics unchanged).
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    /// Distinct requests enqueued on readiness (first entry only;
+    /// re-enqueues after preemption are counted in `requeued`).
+    pub enqueued: u64,
+    /// Re-enqueues after preemption-by-recompute.
+    pub requeued: u64,
+    /// Distinct requests that left the queue (first dequeue only, so a
+    /// preempted-and-readmitted request counts once).
+    pub dequeued: u64,
+    /// Sum of time-in-queue across *all* visits, including post-preemption
+    /// requeues (avg_wait = sum / dequeued = average total queueing time
+    /// per request).
+    pub total_wait: f64,
+    /// High-water mark of queue length.
+    pub peak_len: usize,
+}
+
+impl QueueStats {
+    /// Average total time-in-queue per request (all visits summed).
+    pub fn avg_wait(&self) -> f64 {
+        if self.dequeued == 0 {
+            0.0
+        } else {
+            self.total_wait / self.dequeued as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct EntryMeta {
+    family: u8,
+    rank: f64,
+    seq: u64,
+    class: Option<Class>,
+    enqueue_time: f64,
+    /// Re-enqueue after preemption (not a fresh arrival).
+    requeue: bool,
+}
+
+/// The waiting set: indexed by insertion order (the legacy vec order) and
+/// by `(family, rank, seq)` for policy-ordered traversal, with per-class
+/// queue statistics. Insert, remove and cancel are O(log n).
+#[derive(Debug, Default)]
+pub struct ReadySet {
+    by_rank: BTreeMap<(u8, TotalF64, u64), u64>,
+    by_seq: BTreeMap<u64, u64>,
+    index: BTreeMap<u64, EntryMeta>,
+    family_len: BTreeMap<u8, usize>,
+    next_seq: u64,
+    class_len: [usize; 3],
+    stats: [QueueStats; 3],
+}
+
+impl ReadySet {
+    pub fn new() -> ReadySet {
+        ReadySet::default()
+    }
+
+    /// Insert a request. `requeue = false` is a fresh enqueue on
+    /// readiness (counted in `enqueued`); `requeue = true` is a
+    /// post-preemption re-entry (counted in `requeued` so preemptions
+    /// don't inflate arrival counts, while the renewed waiting time still
+    /// accrues into `total_wait` at removal). `(family, rank)` must come
+    /// from the active policy's `rank_key` for the request's current
+    /// state.
+    pub fn insert(
+        &mut self,
+        id: u64,
+        family: u8,
+        rank: f64,
+        class: Option<Class>,
+        now: f64,
+        requeue: bool,
+    ) {
+        debug_assert!(!self.index.contains_key(&id), "ready-set double insert for {id}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.by_rank.insert((family, TotalF64(rank), seq), id);
+        self.by_seq.insert(seq, id);
+        self.index.insert(id, EntryMeta { family, rank, seq, class, enqueue_time: now, requeue });
+        *self.family_len.entry(family).or_insert(0) += 1;
+        if let Some(c) = class {
+            let ci = c as usize;
+            self.class_len[ci] += 1;
+            let s = &mut self.stats[ci];
+            if requeue {
+                s.requeued += 1;
+            } else {
+                s.enqueued += 1;
+            }
+            s.peak_len = s.peak_len.max(self.class_len[ci]);
+        }
+    }
+
+    /// Remove a request (admission, drop, or cancel — removal is
+    /// rank-ordered in practice, never positional). Accrues its
+    /// time-in-queue into the class stats. Returns `false` when absent.
+    pub fn remove(&mut self, id: u64, now: f64) -> bool {
+        let Some(meta) = self.index.remove(&id) else {
+            return false;
+        };
+        self.by_rank.remove(&(meta.family, TotalF64(meta.rank), meta.seq));
+        self.by_seq.remove(&meta.seq);
+        if let Some(n) = self.family_len.get_mut(&meta.family) {
+            *n -= 1;
+            if *n == 0 {
+                self.family_len.remove(&meta.family);
+            }
+        }
+        if let Some(c) = meta.class {
+            let ci = c as usize;
+            self.class_len[ci] -= 1;
+            let s = &mut self.stats[ci];
+            if !meta.requeue {
+                s.dequeued += 1;
+            }
+            s.total_wait += (now - meta.enqueue_time).max(0.0);
+        }
+        true
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Ids in insertion order — exactly the legacy `waiting` vec order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.by_seq.values().copied()
+    }
+
+    /// Current queue length for one class.
+    pub fn class_len(&self, class: Class) -> usize {
+        self.class_len[class as usize]
+    }
+
+    pub fn stats(&self, class: Class) -> &QueueStats {
+        &self.stats[class as usize]
+    }
+
+    /// The next sequence number to be assigned. Entries with `seq >=
+    /// watermark()` were inserted after the caller took the watermark —
+    /// the planner uses this to exclude requests preempted *during* the
+    /// current planning pass (the legacy snapshot excluded them by
+    /// construction).
+    pub fn watermark(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Families currently present, ascending. At most one per
+    /// `(class, SLO tier)` combination — bounded by the policy, not the
+    /// queue depth.
+    pub fn families(&self) -> impl Iterator<Item = u8> + '_ {
+        self.family_len.keys().copied()
+    }
+
+    /// The first entry of `family` strictly after cursor position
+    /// `after` (a `(rank, seq)` pair) with `seq < below_seq`, as
+    /// `(rank, seq, id)`. Entries at or above the watermark are skipped
+    /// but do not terminate the scan — a request preempted mid-plan
+    /// re-enters with its old rank and a new seq, interleaved in rank
+    /// order with older entries.
+    pub fn next_in_family(
+        &self,
+        family: u8,
+        after: Option<(f64, u64)>,
+        below_seq: u64,
+    ) -> Option<(f64, u64, u64)> {
+        let lo = match after {
+            Some((rank, seq)) => Bound::Excluded((family, TotalF64(rank), seq)),
+            // total_cmp's minimum is the all-ones bit pattern (a negative
+            // NaN), so this bound is inclusive of every possible rank
+            None => Bound::Included((family, TotalF64(f64::from_bits(u64::MAX)), 0)),
+        };
+        self.by_rank
+            .range((lo, Bound::Unbounded))
+            .take_while(|(&(f, _, _), _)| f == family)
+            .find(|(&(_, _, seq), _)| seq < below_seq)
+            .map(|(&(_, rank, seq), &id)| (rank.0, seq, id))
+    }
+
+    /// Cross-index consistency (exercised by `check_invariants`): every
+    /// entry must appear in all three maps with matching metadata.
+    /// Returns the first desynced id with the structure name.
+    pub fn check_consistency(&self) -> Result<(), (&'static str, u64)> {
+        for (&id, meta) in &self.index {
+            if self.by_rank.get(&(meta.family, TotalF64(meta.rank), meta.seq)) != Some(&id) {
+                return Err(("ready-set rank", id));
+            }
+            if self.by_seq.get(&meta.seq) != Some(&id) {
+                return Err(("ready-set seq", id));
+            }
+        }
+        if self.by_rank.len() != self.index.len() || self.by_seq.len() != self.index.len() {
+            let id = self.by_rank.values().chain(self.by_seq.values()).copied().next();
+            return Err(("ready-set size", id.unwrap_or(0)));
+        }
+        Ok(())
+    }
+}
+
+/// The running set: O(log n) membership keyed by admission order. The
+/// planner's phase-1 sort, victim scans and trace dumps iterate it in
+/// admission (`seq`) order, which is exactly the legacy `running` vec
+/// order (retain preserved order, push appended).
+#[derive(Debug, Default)]
+pub struct RunSet {
+    by_seq: BTreeMap<u64, u64>,
+    index: BTreeMap<u64, u64>,
+    next_seq: u64,
+}
+
+impl RunSet {
+    pub fn new() -> RunSet {
+        RunSet::default()
+    }
+
+    pub fn insert(&mut self, id: u64) {
+        debug_assert!(!self.index.contains_key(&id), "run-set double insert for {id}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.by_seq.insert(seq, id);
+        self.index.insert(id, seq);
+    }
+
+    pub fn remove(&mut self, id: u64) -> bool {
+        match self.index.remove(&id) {
+            Some(seq) => {
+                self.by_seq.remove(&seq);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Ids in admission order — exactly the legacy `running` vec order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.by_seq.values().copied()
+    }
+
+    /// Cross-index consistency; see [`ReadySet::check_consistency`].
+    pub fn check_consistency(&self) -> Result<(), (&'static str, u64)> {
+        for (&id, &seq) in &self.index {
+            if self.by_seq.get(&seq) != Some(&id) {
+                return Err(("run-set seq", id));
+            }
+        }
+        if self.by_seq.len() != self.index.len() {
+            let id = self.by_seq.values().copied().next();
+            return Err(("run-set size", id.unwrap_or(0)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Queue-stats semantics below are carried over verbatim from the
+    // retired QueueManager's test suite: the absorption must not change
+    // any counter's meaning.
+
+    #[test]
+    fn insertion_order_within_class() {
+        let mut rs = ReadySet::new();
+        rs.insert(1, 0, 0.0, Some(Class::Car), 0.0, false);
+        rs.insert(2, 0, 1.0, Some(Class::Car), 1.0, false);
+        rs.insert(3, 0, 0.5, Some(Class::Truck), 0.5, false);
+        assert_eq!(rs.iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(rs.class_len(Class::Car), 2);
+        assert_eq!(rs.class_len(Class::Truck), 1);
+        assert_eq!(rs.class_len(Class::Motorcycle), 0);
+    }
+
+    #[test]
+    fn remove_tracks_wait() {
+        let mut rs = ReadySet::new();
+        rs.insert(1, 0, 0.0, Some(Class::Motorcycle), 0.0, false);
+        rs.insert(2, 0, 0.0, Some(Class::Motorcycle), 0.0, false);
+        assert!(rs.remove(2, 4.0)); // out of order OK
+        assert!(rs.remove(1, 6.0));
+        assert!(!rs.remove(1, 7.0));
+        let s = rs.stats(Class::Motorcycle);
+        assert_eq!(s.enqueued, 2);
+        assert_eq!(s.dequeued, 2);
+        assert!((s.avg_wait() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requeues_tracked_separately_with_total_wait() {
+        let mut rs = ReadySet::new();
+        rs.insert(1, 0, 0.0, Some(Class::Car), 0.0, false);
+        assert!(rs.remove(1, 2.0)); // admitted after 2 s
+        rs.insert(1, 0, 0.0, Some(Class::Car), 3.0, true); // preempted, back in queue
+        assert!(rs.remove(1, 5.0)); // readmitted after 2 more s
+        let s = rs.stats(Class::Car);
+        assert_eq!(s.enqueued, 1, "requeue must not count as a fresh enqueue");
+        assert_eq!(s.requeued, 1);
+        assert_eq!(s.dequeued, 1, "one distinct request left the queue");
+        assert!((s.avg_wait() - 4.0).abs() < 1e-12, "total time-in-queue, not last visit");
+    }
+
+    #[test]
+    fn peak_length_tracked() {
+        let mut rs = ReadySet::new();
+        for i in 0..5 {
+            rs.insert(i, 0, 0.0, Some(Class::Truck), 0.0, false);
+        }
+        for i in 0..5 {
+            rs.remove(i, 1.0);
+        }
+        assert_eq!(rs.stats(Class::Truck).peak_len, 5);
+        assert!(rs.is_empty());
+    }
+
+    #[test]
+    fn rank_traversal_is_family_then_rank_then_seq() {
+        let mut rs = ReadySet::new();
+        rs.insert(10, 1, 5.0, None, 0.0, false);
+        rs.insert(11, 0, 9.0, None, 0.0, false);
+        rs.insert(12, 0, 2.0, None, 0.0, false);
+        rs.insert(13, 0, 2.0, None, 0.0, false); // rank tie → seq order
+        assert_eq!(rs.families().collect::<Vec<_>>(), vec![0, 1]);
+        let w = rs.watermark();
+        let mut got = Vec::new();
+        let mut after = None;
+        while let Some((rank, seq, id)) = rs.next_in_family(0, after, w) {
+            got.push(id);
+            after = Some((rank, seq));
+        }
+        assert_eq!(got, vec![12, 13, 11]);
+        assert_eq!(rs.next_in_family(1, None, w), Some((5.0, 0, 10)));
+    }
+
+    #[test]
+    fn watermark_excludes_later_inserts_without_ending_scan() {
+        let mut rs = ReadySet::new();
+        rs.insert(1, 0, 3.0, None, 0.0, false);
+        rs.insert(2, 0, 9.0, None, 0.0, false);
+        let w = rs.watermark();
+        // a mid-plan preemption re-enters with an *older* rank but a
+        // newer seq — it must be skipped, and the scan must continue to
+        // the entry behind it
+        rs.insert(3, 0, 1.0, None, 0.0, true);
+        rs.insert(4, 0, 5.0, None, 0.0, true);
+        assert_eq!(rs.next_in_family(0, None, w).map(|(_, _, id)| id), Some(1));
+        let (r1, s1, _) = rs.next_in_family(0, None, w).unwrap();
+        assert_eq!(rs.next_in_family(0, Some((r1, s1)), w).map(|(_, _, id)| id), Some(2));
+        // without the watermark both re-entries are visible, rank-ordered
+        let all = rs.watermark();
+        assert_eq!(rs.next_in_family(0, None, all).map(|(_, _, id)| id), Some(3));
+    }
+
+    #[test]
+    fn run_set_preserves_admission_order() {
+        let mut run = RunSet::new();
+        for id in [7, 3, 9, 1] {
+            run.insert(id);
+        }
+        assert!(run.remove(9));
+        run.insert(9); // re-admitted: moves to the back, like Vec::push
+        assert_eq!(run.iter().collect::<Vec<_>>(), vec![7, 3, 1, 9]);
+        assert!(run.contains(9));
+        assert!(!run.remove(42));
+        assert_eq!(run.len(), 4);
+        run.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn consistency_checks_pass_on_live_sets() {
+        let mut rs = ReadySet::new();
+        rs.insert(1, 2, 0.5, Some(Class::Car), 0.0, false);
+        rs.insert(2, 0, -1.0, None, 0.0, true);
+        rs.check_consistency().unwrap();
+        rs.remove(1, 1.0);
+        rs.check_consistency().unwrap();
+    }
+}

@@ -14,6 +14,23 @@
 //! 4. execute the plan on the engine; advance time; emit tokens
 //!    (prefill-completing iterations emit the first token → TTFT).
 //!
+//! # Indexed planning (`scheduler.indexed`)
+//!
+//! Admission planning has two interchangeable implementations, proven
+//! bit-identical on events, reports and stats (minus `planning_evals`)
+//! by `tests/scheduler_properties.rs`:
+//!
+//! * **indexed** (default): waiting requests live pre-sorted in the
+//!   [`ReadySet`] rank index, one stream per time-invariant *family*
+//!   (see [`Policy::rank_key`]); the planner lazily merges the family
+//!   heads with the (≤ `max_running`) ongoing-prefill stream, paying one
+//!   key evaluation per visited head instead of one per waiting request.
+//!   Per-iteration planning cost is bounded by the running set and the
+//!   work actually admitted — near-constant in queue depth.
+//! * **full rescore** (`scheduler.indexed = false`): the original oracle
+//!   — snapshot every waiting id, evaluate every key, sort. O(n log n)
+//!   per iteration; kept as the escape hatch and equivalence oracle.
+//!
 //! # Stepping API (online serving)
 //!
 //! The loop is re-entrant: callers drive it one iteration at a time with
@@ -34,8 +51,9 @@
 //! * [`Scheduler::drain`] — step until nothing is left; the batch
 //!   [`Scheduler::run`] is exactly `inject` everything + `drain`.
 
+use crate::backend::InvariantViolation;
 use crate::config::ServeConfig;
-use crate::coordinator::queues::QueueManager;
+use crate::coordinator::readyset::{ReadySet, RunSet};
 use crate::coordinator::state::{Phase, ReqState};
 use crate::engine::kv_cache::KvCache;
 use crate::engine::{DecodeItem, EncodeItem, Engine, PrefillItem, StepPlan};
@@ -58,6 +76,27 @@ enum ReserveMode {
     AdmitPreempting { cand_key: OrderKey },
     /// Admission without preemption (vLLM FCFS): fail quietly.
     AdmitPlain,
+}
+
+/// What happened when the planner visited one phase-2 candidate (an
+/// ongoing prefill or a waiting admission). Both planning modes dispatch
+/// through one visit function so their side effects — events, queue
+/// stats, plan items, budget — are identical by construction; the
+/// outcome tells the driving loop how to advance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Visit {
+    /// Work was planned for this candidate.
+    Planned,
+    /// Passed over with no claim on its merge position (memory-blocked
+    /// under a skip_blocked policy, zero-chunk, phase changed mid-pass,
+    /// or dropped as unschedulable).
+    Skipped,
+    /// A waiting candidate hit the `max_running` slot ceiling under a
+    /// skip_blocked policy: it and every waiting request until the next
+    /// slot-freeing preemption are passed without side effects.
+    SkippedSaturated,
+    /// Head-of-line blocking for a strict-order policy: stop planning.
+    Blocked,
 }
 
 /// Result of one [`Scheduler::step`] call.
@@ -130,10 +169,29 @@ pub struct SchedStats {
     /// overhead, §Perf). A deterministic proxy for planning cost: the
     /// perf bench divides wall time by this to get ns/eval, while the
     /// counter itself stays bit-identical across runs — the sim core
-    /// never reads a wall clock.
+    /// never reads a wall clock. In full-rescore mode this counts one
+    /// evaluation per snapshot entry per iteration; in indexed mode it
+    /// counts the incremental work instead — rank rescores on state
+    /// transitions (enqueue, preemption re-queue) plus one evaluation
+    /// per visited family head — so it is the quantity the
+    /// `perf/sched/planning_evals_per_iter` sweep drives to
+    /// near-constant. It is the one field the two planning modes are
+    /// *allowed* to disagree on.
     pub planning_evals: u64,
     /// Virtual/wall seconds the engine was busy.
     pub busy_time_s: f64,
+}
+
+/// Cursor over one rank-index family stream during an indexed planning
+/// pass (see [`Scheduler::plan_prefills_indexed`]).
+struct FamilyCursor {
+    family: u8,
+    /// Last consumed `(rank, seq)` position; `None` = stream start.
+    after: Option<(f64, u64)>,
+    /// Cached head beyond `after`: `(order_key, seq, rank, id)`.
+    head: Option<(OrderKey, u64, f64, u64)>,
+    /// Whether `head` reflects the current cursor position.
+    head_valid: bool,
 }
 
 /// The coordinator's scheduling core.
@@ -148,9 +206,13 @@ pub struct Scheduler {
     /// Requests arriving already encoded (pool handoffs): id → handoff
     /// time. They skip CPU preprocessing and the admission encode.
     preencoded: BTreeMap<u64, f64>,
-    waiting: Vec<u64>,
-    running: Vec<u64>,
-    queues: QueueManager,
+    /// Waiting requests: rank-indexed, insertion-ordered, with the
+    /// per-class queue statistics that used to live in `QueueManager`.
+    ready: ReadySet,
+    /// Running requests in admission order.
+    running: RunSet,
+    /// `cfg.scheduler.indexed`, cached for the planner hot path.
+    indexed: bool,
     preproc_free: Vec<f64>,
     /// Injected requests not yet due (keyed by arrival time).
     arrivals: EventQueue<Request>,
@@ -166,12 +228,27 @@ pub struct Scheduler {
     retired_failed: usize,
     retired_cancelled: usize,
     events: Vec<RequestEvent>,
-    /// Obs-only event buffer ([`crate::obs::ObsEvent`]); `None` unless
-    /// an observer enabled it via [`Scheduler::set_obs`]. While active,
-    /// batch drains also retain `events` instead of clearing them so an
-    /// observer can harvest the full stream post-hoc.
+    /// Obs-only event buffer ([`crate::obs::ObsEvent`]); `None` unless an
+    /// observer enabled it via [`Scheduler::set_obs`]. The tap's only
+    /// effect on the shared buffers is batch-drain retention:
+    /// [`Scheduler::drain`] clears `events` between iterations *unless*
+    /// the tap is active, so a post-hoc observer can harvest the full
+    /// stream after a batch run. The stepping drain verbs are
+    /// tap-independent — `take_events` always hands over and empties
+    /// `events`, and `take_obs_events` empties this buffer (returning
+    /// nothing while the tap is off). See the `Drain` section of
+    /// [`crate::backend::ServeBackend`] for the unified contract.
     obs_tap: Option<Vec<crate::obs::ObsEvent>>,
     pub stats: SchedStats,
+
+    // Persistent planning scratch (allocation reuse across steps): the
+    // decorate-sort buffers, the family cursors, and the plan itself are
+    // taken out at plan start and handed back after execution, so a
+    // steady-state iteration allocates nothing in the planner.
+    scratch_order: Vec<(OrderKey, u64)>,
+    scratch_prefill: Vec<(OrderKey, u64)>,
+    scratch_cursors: Vec<FamilyCursor>,
+    scratch_plan: StepPlan,
 }
 
 impl Scheduler {
@@ -180,6 +257,7 @@ impl Scheduler {
         let capacity = (profile.kv_capacity_tokens as f64 * cfg.memory_frac) as u64;
         let kv = KvCache::new(capacity, cfg.scheduler.kv_block_tokens);
         let preproc_free = vec![0.0; cfg.scheduler.preprocess_workers.max(1)];
+        let indexed = cfg.scheduler.indexed;
         Scheduler {
             cfg,
             profile,
@@ -188,9 +266,9 @@ impl Scheduler {
             kv,
             states: BTreeMap::new(),
             preencoded: BTreeMap::new(),
-            waiting: Vec::new(),
-            running: Vec::new(),
-            queues: QueueManager::new(),
+            ready: ReadySet::new(),
+            running: RunSet::new(),
+            indexed,
             preproc_free,
             arrivals: EventQueue::new(),
             ready_events: EventQueue::new(),
@@ -204,6 +282,10 @@ impl Scheduler {
             events: Vec::new(),
             obs_tap: None,
             stats: SchedStats::default(),
+            scratch_order: Vec::new(),
+            scratch_prefill: Vec::new(),
+            scratch_cursors: Vec::new(),
+            scratch_plan: StepPlan::default(),
         }
     }
 
@@ -223,13 +305,13 @@ impl Scheduler {
     pub fn probe(&self) -> crate::obs::Probe {
         let mut waiting = [0u32; 3];
         let mut running = [0u32; 3];
-        for id in &self.waiting {
-            if let Some(st) = self.states.get(id) {
+        for id in self.ready.iter() {
+            if let Some(st) = self.states.get(&id) {
                 waiting[st.req.modality as usize] += 1;
             }
         }
-        for id in &self.running {
-            if let Some(st) = self.states.get(id) {
+        for id in self.running.iter() {
+            if let Some(st) = self.states.get(&id) {
                 running[st.req.modality as usize] += 1;
             }
         }
@@ -255,8 +337,10 @@ impl Scheduler {
         &self.kv
     }
 
-    pub fn queue_manager(&self) -> &QueueManager {
-        &self.queues
+    /// The waiting set, including the per-class queue statistics that
+    /// the retired `QueueManager` used to carry.
+    pub fn ready_set(&self) -> &ReadySet {
+        &self.ready
     }
 
     pub fn engine(&self) -> &dyn Engine {
@@ -268,7 +352,7 @@ impl Scheduler {
     }
 
     pub fn waiting_len(&self) -> usize {
-        self.waiting.len()
+        self.ready.len()
     }
 
     pub fn running_len(&self) -> usize {
@@ -367,18 +451,16 @@ impl Scheduler {
                 // ignores non-preprocessing ids when it fires
             }
             Phase::Waiting => {
-                self.waiting.retain(|&x| x != id);
+                // O(log n); also closes out the class queue-stats visit
+                self.ready.remove(id, now);
             }
             Phase::Prefilling | Phase::Decoding => {
-                self.running.retain(|&x| x != id);
+                self.running.remove(id);
                 self.kv.free(id);
                 self.engine.release(id);
             }
         }
         let st = self.states.get_mut(&id).unwrap();
-        if let Some(c) = st.class {
-            self.queues.dequeue(c, id, now);
-        }
         st.phase = Phase::Cancelled;
         st.finish = Some(now);
         self.cancelled.push(id);
@@ -399,7 +481,7 @@ impl Scheduler {
             self.mark_ready(id, t);
         }
 
-        let has_work = !self.waiting.is_empty() || !self.running.is_empty();
+        let has_work = !self.ready.is_empty() || !self.running.is_empty();
         if !has_work {
             return match self.next_event_time() {
                 Some(t) => StepOutcome::Idle { next_event: t },
@@ -410,12 +492,16 @@ impl Scheduler {
         // 3. plan — cost is accounted in key evaluations (see
         // `SchedStats::planning_evals`), not wall time: a wall clock here
         // would make `stats` differ between two runs of the same trace.
-        let plan = self.build_plan();
+        // The plan's item buffers are recycled across steps.
+        let mut plan = std::mem::take(&mut self.scratch_plan);
+        plan.clear();
+        self.build_plan(&mut plan);
 
         if plan.is_empty() {
             // Everything schedulable is blocked; the caller decides
             // whether to jump to the next event, wait for injections, or
             // drop the blocked tail.
+            self.scratch_plan = plan;
             return StepOutcome::Blocked { next_event: self.next_event_time() };
         }
 
@@ -433,8 +519,8 @@ impl Scheduler {
             let desc: Vec<String> = self
                 .running
                 .iter()
-                .chain(self.waiting.iter())
-                .map(|&id| {
+                .chain(self.ready.iter())
+                .map(|id| {
                     let s = &self.states[&id];
                     format!(
                         "r{id}[{:?} c={} d={} prompt={} key={:?} vkey={:?} rdy={:.3} cls={:?}]",
@@ -467,7 +553,7 @@ impl Scheduler {
                  dropped={} preempt={} kv_used={}/{} dt={dt:.6}",
                 self.stats.iterations,
                 self.now,
-                self.waiting.len(),
+                self.ready.len(),
                 self.running.len(),
                 self.finished.len(),
                 self.stats.dropped,
@@ -477,6 +563,7 @@ impl Scheduler {
             );
         }
 
+        self.scratch_plan = plan;
         StepOutcome::Executed { dt }
     }
 
@@ -646,10 +733,12 @@ impl Scheduler {
         st.first_enqueue = t;
         st.class = class;
         st.impact = impact;
-        self.waiting.push(id);
-        if let Some(c) = class {
-            self.queues.enqueue(c, id, t);
+        let (family, rank) = self.policy.rank_key(st);
+        if self.indexed {
+            // the state-transition rescore of incremental maintenance
+            self.stats.planning_evals += 1;
         }
+        self.ready.insert(id, family, rank, class, t, false);
         self.events.push(RequestEvent::Ready { id, t });
     }
 
@@ -665,24 +754,27 @@ impl Scheduler {
         self.policy.victim_key(&self.states[&id], self.now)
     }
 
-    fn build_plan(&mut self) -> StepPlan {
-        let mut plan = StepPlan::default();
+    fn build_plan(&mut self, plan: &mut StepPlan) {
         let mut budget = self.cfg.scheduler.token_budget as u64;
-        // planned item index per request, for preemption surgery
+        // planned item index per request, for preemption surgery (empty
+        // BTreeMaps don't allocate, so locals are fine here)
         let mut planned_decode: BTreeMap<u64, usize> = BTreeMap::new();
         let mut planned_prefill: BTreeMap<u64, usize> = BTreeMap::new();
 
         // Decorate-sort: compute each key once (policy key evaluation is
         // a dyn call and, for TCM, an exp/log — O(n log n) comparator
-        // invocations tripled planning time before this, §Perf).
-        let mut order: Vec<(OrderKey, u64)> =
-            self.running.iter().map(|&id| (self.key(id), id)).collect();
+        // invocations tripled planning time before this, §Perf). Bounded
+        // by `max_running`, so both planning modes share it.
+        let mut order = std::mem::take(&mut self.scratch_order);
+        order.clear();
+        for id in self.running.iter() {
+            order.push((self.key(id), id));
+        }
         self.stats.planning_evals += order.len() as u64;
         order.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
-        let order: Vec<u64> = order.into_iter().map(|(_, id)| id).collect();
 
         // Phase 1: decodes
-        for id in order {
+        for &(_, id) in order.iter() {
             if self.states[&id].phase != Phase::Decoding {
                 continue;
             }
@@ -691,7 +783,7 @@ impl Scheduler {
             }
             let need = self.states[&id].kv_for_next_decode();
             if !self.reserve_with_preemption(
-                id, need, ReserveMode::Growth, &mut plan, &mut budget,
+                id, need, ReserveMode::Growth, plan, &mut budget,
                 &mut planned_decode, &mut planned_prefill,
             ) {
                 continue; // self-preempted or dropped
@@ -701,149 +793,381 @@ impl Scheduler {
             plan.decodes.push(DecodeItem { req_id: id, ctx_tokens: ctx });
             budget -= 1;
         }
+        self.scratch_order = order;
 
         // Phase 2: prefill work — running continuations and waiting
         // admissions compete in ONE policy-ordered pass (vLLM V1 priority
         // scheduling is global: a waiting motorcycle outranks a running
         // truck's next chunk).
-        let mut prefill_order: Vec<(OrderKey, u64)> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|id| self.states[id].phase == Phase::Prefilling)
-            .chain(self.waiting.iter().copied())
-            .map(|id| (self.key(id), id))
-            .collect();
-        self.stats.planning_evals += prefill_order.len() as u64;
-        prefill_order.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
-        let prefill_order: Vec<u64> = prefill_order.into_iter().map(|(_, id)| id).collect();
+        if self.indexed {
+            self.plan_prefills_indexed(
+                plan,
+                &mut budget,
+                &mut planned_decode,
+                &mut planned_prefill,
+            );
+        } else {
+            self.plan_prefills_rescore(
+                plan,
+                &mut budget,
+                &mut planned_decode,
+                &mut planned_prefill,
+            );
+        }
+    }
 
-        for id in prefill_order {
-            if budget == 0 {
+    /// Full-rescore phase 2 (the oracle): snapshot every ongoing prefill
+    /// and every waiting request, evaluate every key, sort, walk.
+    /// O(n log n) per iteration in queue depth — superlinear over a run.
+    fn plan_prefills_rescore(
+        &mut self,
+        plan: &mut StepPlan,
+        budget: &mut u64,
+        planned_decode: &mut BTreeMap<u64, usize>,
+        planned_prefill: &mut BTreeMap<u64, usize>,
+    ) {
+        let mut snapshot = std::mem::take(&mut self.scratch_prefill);
+        snapshot.clear();
+        for id in self.running.iter() {
+            if self.states[&id].phase == Phase::Prefilling {
+                snapshot.push((self.key(id), id));
+            }
+        }
+        for id in self.ready.iter() {
+            snapshot.push((self.key(id), id));
+        }
+        self.stats.planning_evals += snapshot.len() as u64;
+        snapshot.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
+
+        for &(_, id) in snapshot.iter() {
+            if *budget == 0 {
                 break;
             }
-            match self.states[&id].phase {
-                Phase::Prefilling => {
-                    let st = &self.states[&id];
-                    let chunk = (budget.min(st.prefill_remaining() as u64)) as u32;
-                    if chunk == 0 {
-                        continue;
-                    }
-                    let target = st.cached_rows + chunk;
-                    if !self.reserve_with_preemption(
-                        id, target, ReserveMode::Growth, &mut plan, &mut budget,
-                        &mut planned_decode, &mut planned_prefill,
-                    ) {
-                        continue;
-                    }
-                    let st = &self.states[&id];
-                    planned_prefill.insert(id, plan.prefills.len());
-                    plan.prefills.push(PrefillItem {
-                        req_id: id,
-                        ctx_before: st.cached_rows,
-                        chunk_tokens: chunk,
-                        last_chunk: st.cached_rows + chunk == st.prefill_target(),
-                        text_tokens: st.req.text_tokens,
-                        // externally encoded (pool handoff): the local
-                        // engine owes no encoder work during prefill
-                        mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
-                        prefill_total: st.prefill_target(),
-                    });
-                    budget -= chunk as u64;
-                }
-                Phase::Waiting => {
-                    if self.running.len() >= self.cfg.scheduler.max_running {
-                        if self.policy.skip_blocked() {
-                            continue;
-                        } else {
+            if self.visit_prefill_candidate(id, plan, budget, planned_decode, planned_prefill)
+                == Visit::Blocked
+            {
+                break;
+            }
+        }
+        self.scratch_prefill = snapshot;
+    }
+
+    /// Indexed phase 2: lazily merge the (≤ `max_running`) ongoing-prefill
+    /// stream with the ready set's per-family rank streams, visiting
+    /// candidates in exactly the oracle's order without touching — or
+    /// rescoring — the waiting requests behind the admission frontier.
+    ///
+    /// Equivalence to the oracle rests on three facts:
+    /// * within a family, `order_key` order equals `(rank, seq)` order at
+    ///   every `now` (the [`Policy::rank_key`] contract), so each family
+    ///   stream is pre-sorted and only its head needs a key evaluation;
+    /// * the oracle's stable sort resolves equal keys by snapshot
+    ///   position — ongoing prefills (in admission order) before waiting
+    ///   requests (in insertion order) — which the merge reproduces with
+    ///   the (key, stream, seq) comparison below;
+    /// * requests preempted *during* this pass re-enter the ready set at
+    ///   `seq >= watermark` and are excluded, exactly as they were absent
+    ///   from the oracle's snapshot.
+    ///
+    /// When the running set is full under a skip_blocked policy, the
+    /// oracle visits every waiting request and `continue`s with no side
+    /// effects; the merge instead records a *saturation floor* (the next
+    /// prefill-stream key) and skips the waiting streams wholesale. If a
+    /// later growth preemption frees a slot mid-pass, the floor is
+    /// consumed: each family cursor advances past the entries the oracle
+    /// would already have passed (paying their key evaluations only
+    /// then), and the merge resumes.
+    fn plan_prefills_indexed(
+        &mut self,
+        plan: &mut StepPlan,
+        budget: &mut u64,
+        planned_decode: &mut BTreeMap<u64, usize>,
+        planned_prefill: &mut BTreeMap<u64, usize>,
+    ) {
+        let mut pf = std::mem::take(&mut self.scratch_prefill);
+        pf.clear();
+        for id in self.running.iter() {
+            if self.states[&id].phase == Phase::Prefilling {
+                pf.push((self.key(id), id));
+            }
+        }
+        self.stats.planning_evals += pf.len() as u64;
+        pf.sort_by(|a, b| cmp_order_key(&a.0, &b.0));
+
+        let watermark = self.ready.watermark();
+        let mut cursors = std::mem::take(&mut self.scratch_cursors);
+        cursors.clear();
+        for family in self.ready.families() {
+            cursors.push(FamilyCursor { family, after: None, head: None, head_valid: false });
+        }
+
+        let max_running = self.cfg.scheduler.max_running;
+        let skip_blocked = self.policy.skip_blocked();
+        let mut pf_i = 0usize;
+        let mut sat_floor: Option<OrderKey> = None;
+
+        loop {
+            if *budget == 0 {
+                break;
+            }
+
+            if self.running.len() >= max_running && skip_blocked {
+                // Saturated: no admission can proceed, so waiting heads
+                // need no evaluation. Work through the prefill stream;
+                // every waiting request below the current prefill key is
+                // passed (the oracle's per-entry `continue`), recorded in
+                // the floor instead of walked.
+                match pf.get(pf_i) {
+                    None => break, // only blocked admissions remain
+                    Some(&(key, id)) => {
+                        sat_floor = Some(key);
+                        pf_i += 1;
+                        let v = self.visit_prefill_candidate(
+                            id,
+                            plan,
+                            budget,
+                            planned_decode,
+                            planned_prefill,
+                        );
+                        if v == Visit::Blocked {
                             break;
                         }
-                    }
-                    // Requests whose prompt can never fit are failed early.
-                    let prompt_need = self.states[&id].prefill_target() as u64 + 1;
-                    if prompt_need > self.kv.capacity_tokens() {
-                        self.drop_request(id);
-                        continue;
-                    }
-                    let st = &self.states[&id];
-                    let chunk = (budget.min(st.prefill_remaining() as u64)) as u32;
-                    if self.cfg.scheduler.atomic_prefill && chunk < st.prefill_remaining() {
-                        // whole-prompt-only engines: wait for a budget-
-                        // fresh iteration rather than splitting the prompt
-                        if self.policy.skip_blocked() {
-                            continue;
-                        } else {
-                            break;
-                        }
-                    }
-                    let mode = if self.policy.preempt_for_admission() {
-                        ReserveMode::AdmitPreempting { cand_key: self.key(id) }
-                    } else {
-                        ReserveMode::AdmitPlain
-                    };
-                    let ok = self.reserve_with_preemption(
-                        id, chunk, mode, &mut plan, &mut budget,
-                        &mut planned_decode, &mut planned_prefill,
-                    );
-                    if !ok {
-                        if self.policy.skip_blocked() {
-                            continue;
-                        } else {
-                            break;
-                        }
-                    }
-                    // admit
-                    self.waiting.retain(|&x| x != id);
-                    self.running.push(id);
-                    let now = self.now;
-                    let st = self.states.get_mut(&id).unwrap();
-                    st.phase = Phase::Prefilling;
-                    if let Some(t0) = st.preempted_at.take() {
-                        st.preempted_time += now - t0;
-                        // the preempted gap closes at this re-admission
-                        self.events.push(RequestEvent::Requeued { id, t: now });
-                    }
-                    if let Some(tap) = self.obs_tap.as_mut() {
-                        tap.push(crate::obs::ObsEvent::Admitted { id, t: now });
-                    }
-                    let class = st.class;
-                    // `encoded_externally` implies `encoded`, so an
-                    // EncodeItem is only ever planned for a local encode
-                    let needs_encode = st.req.mm_tokens > 0 && !st.encoded;
-                    if needs_encode {
-                        st.encoded = true;
-                        plan.encodes.push(EncodeItem {
-                            req_id: id,
-                            modality: st.req.modality,
-                            mm_tokens: st.req.mm_tokens,
-                            video_duration_s: st.req.video_duration_s,
-                        });
-                        // the iteration being planned launches this encode
-                        self.events.push(RequestEvent::Encoded { id, t: now });
-                    }
-                    let st = &self.states[&id];
-                    planned_prefill.insert(id, plan.prefills.len());
-                    plan.prefills.push(PrefillItem {
-                        req_id: id,
-                        ctx_before: st.cached_rows,
-                        chunk_tokens: chunk,
-                        last_chunk: st.cached_rows + chunk == st.prefill_target(),
-                        text_tokens: st.req.text_tokens,
-                        // externally encoded (pool handoff): the local
-                        // engine owes no encoder work during prefill
-                        mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
-                        prefill_total: st.prefill_target(),
-                    });
-                    budget -= chunk as u64;
-                    if let Some(c) = class {
-                        self.queues.dequeue(c, id, self.now);
                     }
                 }
-                _ => continue, // finished/preempted during this round
+                continue;
+            }
+
+            // A slot freed up (or we never saturated): settle any pending
+            // floor by advancing each family cursor past the entries the
+            // oracle already passed while the batch was full.
+            if let Some(floor) = sat_floor.take() {
+                for c in cursors.iter_mut() {
+                    loop {
+                        let Some((rank, seq, id)) =
+                            self.ready.next_in_family(c.family, c.after, watermark)
+                        else {
+                            c.head = None;
+                            break;
+                        };
+                        self.stats.planning_evals += 1;
+                        let key = self.key(id);
+                        if cmp_order_key(&key, &floor).is_lt() {
+                            c.after = Some((rank, seq));
+                        } else {
+                            c.head = Some((key, seq, rank, id));
+                            break;
+                        }
+                    }
+                    c.head_valid = true;
+                }
+            }
+
+            // Refresh stale family heads (one key evaluation each).
+            for c in cursors.iter_mut() {
+                if !c.head_valid {
+                    match self.ready.next_in_family(c.family, c.after, watermark) {
+                        Some((rank, seq, id)) => {
+                            self.stats.planning_evals += 1;
+                            let key = self.key(id);
+                            c.head = Some((key, seq, rank, id));
+                        }
+                        None => c.head = None,
+                    }
+                    c.head_valid = true;
+                }
+            }
+
+            // Best waiting head across families: (key, seq) replicates the
+            // oracle's stable tie-break (insertion order).
+            let best = cursors
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| c.head.map(|h| (i, h)))
+                .min_by(|a, b| cmp_order_key(&a.1 .0, &b.1 .0).then(a.1 .1.cmp(&b.1 .1)));
+            let pf_head = pf.get(pf_i).copied();
+
+            // Equal keys take the prefill stream first: it preceded the
+            // waiting ids in the oracle's snapshot.
+            let take_pf = match (pf_head, &best) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some((pk, _)), Some((_, (wk, _, _, _)))) => !cmp_order_key(&pk, wk).is_gt(),
+            };
+
+            if take_pf {
+                let (_, id) = pf_head.unwrap();
+                pf_i += 1;
+                if self.visit_prefill_candidate(id, plan, budget, planned_decode, planned_prefill)
+                    == Visit::Blocked
+                {
+                    break;
+                }
+            } else {
+                let (ci, (_, seq, rank, id)) = best.unwrap();
+                match self.visit_prefill_candidate(
+                    id,
+                    plan,
+                    budget,
+                    planned_decode,
+                    planned_prefill,
+                ) {
+                    Visit::Blocked => break,
+                    Visit::SkippedSaturated => {
+                        // The batch filled since the loop-top check could
+                        // see it (defensive: admissions re-check inside
+                        // the visit). Fold into the floor path.
+                        match pf.get(pf_i) {
+                            None => break,
+                            Some(&(pk, _)) => sat_floor = Some(pk),
+                        }
+                    }
+                    Visit::Planned | Visit::Skipped => {
+                        let c = &mut cursors[ci];
+                        c.after = Some((rank, seq));
+                        c.head = None;
+                        c.head_valid = false;
+                    }
+                }
             }
         }
 
-        plan
+        self.scratch_prefill = pf;
+        self.scratch_cursors = cursors;
+    }
+
+    /// Visit one phase-2 candidate — an ongoing prefill chunk or a
+    /// waiting admission — and plan its work if budget, slots and KV
+    /// admit it. This is the single side-effect path shared by both
+    /// planning modes: every event, queue-stat update, plan item and
+    /// budget charge happens here, identically, regardless of how the
+    /// candidate was ordered.
+    fn visit_prefill_candidate(
+        &mut self,
+        id: u64,
+        plan: &mut StepPlan,
+        budget: &mut u64,
+        planned_decode: &mut BTreeMap<u64, usize>,
+        planned_prefill: &mut BTreeMap<u64, usize>,
+    ) -> Visit {
+        match self.states[&id].phase {
+            Phase::Prefilling => {
+                let st = &self.states[&id];
+                let chunk = ((*budget).min(st.prefill_remaining() as u64)) as u32;
+                if chunk == 0 {
+                    return Visit::Skipped;
+                }
+                let target = st.cached_rows + chunk;
+                if !self.reserve_with_preemption(
+                    id, target, ReserveMode::Growth, plan, budget,
+                    planned_decode, planned_prefill,
+                ) {
+                    return Visit::Skipped;
+                }
+                let st = &self.states[&id];
+                planned_prefill.insert(id, plan.prefills.len());
+                plan.prefills.push(PrefillItem {
+                    req_id: id,
+                    ctx_before: st.cached_rows,
+                    chunk_tokens: chunk,
+                    last_chunk: st.cached_rows + chunk == st.prefill_target(),
+                    text_tokens: st.req.text_tokens,
+                    // externally encoded (pool handoff): the local
+                    // engine owes no encoder work during prefill
+                    mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
+                    prefill_total: st.prefill_target(),
+                });
+                *budget -= chunk as u64;
+                Visit::Planned
+            }
+            Phase::Waiting => {
+                if self.running.len() >= self.cfg.scheduler.max_running {
+                    if self.policy.skip_blocked() {
+                        return Visit::SkippedSaturated;
+                    } else {
+                        return Visit::Blocked;
+                    }
+                }
+                // Requests whose prompt can never fit are failed early.
+                let prompt_need = self.states[&id].prefill_target() as u64 + 1;
+                if prompt_need > self.kv.capacity_tokens() {
+                    self.drop_request(id);
+                    return Visit::Skipped;
+                }
+                let st = &self.states[&id];
+                let chunk = ((*budget).min(st.prefill_remaining() as u64)) as u32;
+                if self.cfg.scheduler.atomic_prefill && chunk < st.prefill_remaining() {
+                    // whole-prompt-only engines: wait for a budget-
+                    // fresh iteration rather than splitting the prompt
+                    if self.policy.skip_blocked() {
+                        return Visit::Skipped;
+                    } else {
+                        return Visit::Blocked;
+                    }
+                }
+                let mode = if self.policy.preempt_for_admission() {
+                    ReserveMode::AdmitPreempting { cand_key: self.key(id) }
+                } else {
+                    ReserveMode::AdmitPlain
+                };
+                let ok = self.reserve_with_preemption(
+                    id, chunk, mode, plan, budget,
+                    planned_decode, planned_prefill,
+                );
+                if !ok {
+                    if self.policy.skip_blocked() {
+                        return Visit::Skipped;
+                    } else {
+                        return Visit::Blocked;
+                    }
+                }
+                // admit
+                let now = self.now;
+                self.ready.remove(id, now);
+                self.running.insert(id);
+                let st = self.states.get_mut(&id).unwrap();
+                st.phase = Phase::Prefilling;
+                if let Some(t0) = st.preempted_at.take() {
+                    st.preempted_time += now - t0;
+                    // the preempted gap closes at this re-admission
+                    self.events.push(RequestEvent::Requeued { id, t: now });
+                }
+                if let Some(tap) = self.obs_tap.as_mut() {
+                    tap.push(crate::obs::ObsEvent::Admitted { id, t: now });
+                }
+                let st = self.states.get_mut(&id).unwrap();
+                // `encoded_externally` implies `encoded`, so an
+                // EncodeItem is only ever planned for a local encode
+                let needs_encode = st.req.mm_tokens > 0 && !st.encoded;
+                if needs_encode {
+                    st.encoded = true;
+                    plan.encodes.push(EncodeItem {
+                        req_id: id,
+                        modality: st.req.modality,
+                        mm_tokens: st.req.mm_tokens,
+                        video_duration_s: st.req.video_duration_s,
+                    });
+                    // the iteration being planned launches this encode
+                    self.events.push(RequestEvent::Encoded { id, t: now });
+                }
+                let st = &self.states[&id];
+                planned_prefill.insert(id, plan.prefills.len());
+                plan.prefills.push(PrefillItem {
+                    req_id: id,
+                    ctx_before: st.cached_rows,
+                    chunk_tokens: chunk,
+                    last_chunk: st.cached_rows + chunk == st.prefill_target(),
+                    text_tokens: st.req.text_tokens,
+                    // externally encoded (pool handoff): the local
+                    // engine owes no encoder work during prefill
+                    mm_tokens: if st.encoded_externally { 0 } else { st.req.mm_tokens },
+                    prefill_total: st.prefill_target(),
+                });
+                *budget -= chunk as u64;
+                Visit::Planned
+            }
+            _ => Visit::Skipped, // finished/preempted during this round
+        }
     }
 
     /// Try to reserve `tokens` total KV rows for `id`, preempting max-key
@@ -874,7 +1198,6 @@ impl Scheduler {
                     let victim = self
                         .running
                         .iter()
-                        .copied()
                         .max_by(|&a, &b| cmp_victim_key(&self.vkey(a), &self.vkey(b)))
                         .filter(|&v| cmp_order_key(&self.key(v), &cand_key).is_gt());
                     match victim {
@@ -898,7 +1221,6 @@ impl Scheduler {
                     let victim = self
                         .running
                         .iter()
-                        .copied()
                         .filter(|&v| v != id)
                         .max_by(|&a, &b| cmp_victim_key(&self.vkey(a), &self.vkey(b)))
                         .filter(|&v| cmp_victim_key(&self.vkey(v), &my_key).is_gt());
@@ -907,10 +1229,10 @@ impl Scheduler {
                             self.preempt(v, plan, budget, planned_decode, planned_prefill)
                         }
                         None => {
-                            let alone = self.running.iter().all(|&v| v == id);
+                            let alone = self.running.iter().all(|v| v == id);
                             if alone {
                                 self.drop_request(id);
-                            } else if self.running.contains(&id) {
+                            } else if self.running.contains(id) {
                                 self.preempt(id, plan, budget, planned_decode, planned_prefill);
                             } else {
                                 // waiting requester (cannot happen today:
@@ -953,7 +1275,7 @@ impl Scheduler {
         // Encodes are never undone: the encoder cache persists host-side.
         self.kv.free(id);
         self.engine.release(id);
-        self.running.retain(|&x| x != id);
+        self.running.remove(id);
         let now = self.now;
         let st = self.states.get_mut(&id).unwrap();
         st.phase = Phase::Waiting;
@@ -964,12 +1286,17 @@ impl Scheduler {
         st.preempted_at = Some(now);
         self.stats.preemptions += 1;
         let class = st.class;
-        self.waiting.push(id);
-        if let Some(c) = class {
-            // a re-enqueue, not a fresh arrival: tracked separately so
-            // queue stats don't double-count preempted requests
-            self.queues.requeue(c, id, now);
+        // Re-enter the ready set with an unchanged rank (preemption
+        // touches neither first_enqueue nor ready_time nor the deadline)
+        // but a fresh seq — mid-plan re-entries stay invisible to the
+        // pass that caused them (watermark). Tracked as a requeue, not a
+        // fresh arrival, so queue stats don't double-count preempted
+        // requests.
+        let (family, rank) = self.policy.rank_key(st);
+        if self.indexed {
+            self.stats.planning_evals += 1;
         }
+        self.ready.insert(id, family, rank, class, now, true);
         self.events.push(RequestEvent::Preempted { id, t: now });
     }
 
@@ -978,15 +1305,12 @@ impl Scheduler {
     /// counted in `stats.dropped`, recorded as a failed outcome in
     /// [`Scheduler::report`], and emitted as [`RequestEvent::Dropped`].
     fn drop_request(&mut self, id: u64) {
-        self.waiting.retain(|&x| x != id);
-        self.running.retain(|&x| x != id);
+        let now = self.now;
+        self.ready.remove(id, now);
+        self.running.remove(id);
         self.kv.free(id);
         self.engine.release(id);
-        let now = self.now;
         let st = self.states.get_mut(&id).unwrap();
-        if let Some(c) = st.class {
-            self.queues.dequeue(c, id, now);
-        }
         st.phase = Phase::Dropped;
         st.finish = Some(now);
         self.failed.push(id);
@@ -998,7 +1322,8 @@ impl Scheduler {
     /// no future events exist). Public so online callers can apply the
     /// same guard at shutdown that [`Scheduler::drain`] applies in batch.
     pub fn drop_blocked(&mut self) {
-        for id in self.waiting.clone() {
+        let blocked: Vec<u64> = self.ready.iter().collect();
+        for id in blocked {
             self.drop_request(id);
         }
     }
@@ -1044,62 +1369,66 @@ impl Scheduler {
         st.finish = Some(now);
         self.kv.free(id);
         self.engine.release(id);
-        self.running.retain(|&x| x != id);
+        self.running.remove(id);
         self.finished.push(id);
         self.events.push(RequestEvent::Finished { id, t: now });
     }
 
     /// Consistency invariants (exercised by property tests).
-    pub fn check_invariants(&self) -> Result<(), String> {
-        self.kv.check_invariants()?;
-        for id in &self.waiting {
-            let p = self.states[id].phase;
-            if p != Phase::Waiting {
-                return Err(format!("waiting req {id} in phase {p:?}"));
+    pub fn check_invariants(&self) -> Result<(), InvariantViolation> {
+        self.kv.check_invariants().map_err(InvariantViolation::Kv)?;
+        self.ready
+            .check_consistency()
+            .map_err(|(structure, id)| InvariantViolation::IndexDesync { structure, id })?;
+        self.running
+            .check_consistency()
+            .map_err(|(structure, id)| InvariantViolation::IndexDesync { structure, id })?;
+        for id in self.ready.iter() {
+            let phase = self.states[&id].phase;
+            if phase != Phase::Waiting {
+                return Err(InvariantViolation::PhaseMismatch { list: "waiting", id, phase });
             }
         }
-        for id in &self.running {
-            let p = self.states[id].phase;
-            if p != Phase::Prefilling && p != Phase::Decoding {
-                return Err(format!("running req {id} in phase {p:?}"));
+        for id in self.running.iter() {
+            let phase = self.states[&id].phase;
+            if phase != Phase::Prefilling && phase != Phase::Decoding {
+                return Err(InvariantViolation::PhaseMismatch { list: "running", id, phase });
             }
         }
-        for id in &self.finished {
-            let p = self.states[id].phase;
-            if p != Phase::Finished {
-                return Err(format!("finished req {id} in phase {p:?}"));
+        for &id in &self.finished {
+            let phase = self.states[&id].phase;
+            if phase != Phase::Finished {
+                return Err(InvariantViolation::PhaseMismatch { list: "finished", id, phase });
             }
         }
-        for id in &self.failed {
-            let p = self.states[id].phase;
-            if p != Phase::Dropped {
-                return Err(format!("failed req {id} in phase {p:?}"));
+        for &id in &self.failed {
+            let phase = self.states[&id].phase;
+            if phase != Phase::Dropped {
+                return Err(InvariantViolation::PhaseMismatch { list: "failed", id, phase });
             }
         }
-        for id in &self.cancelled {
-            let p = self.states[id].phase;
-            if p != Phase::Cancelled {
-                return Err(format!("cancelled req {id} in phase {p:?}"));
+        for &id in &self.cancelled {
+            let phase = self.states[&id].phase;
+            if phase != Phase::Cancelled {
+                return Err(InvariantViolation::PhaseMismatch { list: "cancelled", id, phase });
             }
-            if self.waiting.contains(id) || self.running.contains(id) {
-                return Err(format!("cancelled req {id} still scheduled"));
+            if self.ready.contains(id) || self.running.contains(id) {
+                return Err(InvariantViolation::CancelledStillScheduled { id });
             }
         }
         if (self.cancelled.len() + self.retired_cancelled) as u64 != self.stats.cancelled {
-            return Err(format!(
-                "cancel accounting: {} cancelled + {} retired-cancelled but stats.cancelled={}",
-                self.cancelled.len(),
-                self.retired_cancelled,
-                self.stats.cancelled
-            ));
+            return Err(InvariantViolation::CancelAccounting {
+                live: self.cancelled.len(),
+                retired: self.retired_cancelled,
+                counted: self.stats.cancelled,
+            });
         }
         if (self.failed.len() + self.retired_failed) as u64 != self.stats.dropped {
-            return Err(format!(
-                "drop accounting: {} failed + {} retired-failed outcomes but stats.dropped={}",
-                self.failed.len(),
-                self.retired_failed,
-                self.stats.dropped
-            ));
+            return Err(InvariantViolation::DropAccounting {
+                live: self.failed.len(),
+                retired: self.retired_failed,
+                counted: self.stats.dropped,
+            });
         }
         Ok(())
     }

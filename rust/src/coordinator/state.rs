@@ -36,8 +36,16 @@ pub struct ReqState {
     /// End-to-end latency SLO (seconds), = slo_scale × isolated E2E.
     pub slo_latency: f64,
     /// When CPU preprocessing finished and the request became schedulable.
+    /// Set once, in `mark_ready`, and always equal to [`first_enqueue`](
+    /// Self::first_enqueue) — they are kept as separate fields because
+    /// they answer different questions (tie-breaking vs aging), but the
+    /// indexed planner's rank contract ([`crate::policies::Policy::rank_key`])
+    /// relies on their equality: a score plateau falling through to the
+    /// `ready_time` tie-break must agree with a `first_enqueue` rank.
     pub ready_time: f64,
     /// First time the request entered the waiting queue (aging baseline).
+    /// Set once, in `mark_ready`, alongside `ready_time`; preemption
+    /// re-queues deliberately do NOT update it (aging credit survives).
     pub first_enqueue: f64,
     /// Vision encode has run. Cleared on preemption-by-recompute (the
     /// recompute path rebuilds everything, encoder output included).

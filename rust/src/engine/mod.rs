@@ -72,6 +72,14 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
+    /// Empty the item lists, keeping their allocations — the scheduler
+    /// recycles one plan across iterations.
+    pub fn clear(&mut self) {
+        self.encodes.clear();
+        self.prefills.clear();
+        self.decodes.clear();
+    }
+
     pub fn is_empty(&self) -> bool {
         self.encodes.is_empty() && self.prefills.is_empty() && self.decodes.is_empty()
     }

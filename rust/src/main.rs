@@ -35,6 +35,7 @@ fn parser() -> Parser {
         .option("slo-scale", "SLO = scale x isolated e2e latency")
         .option("memory-frac", "fraction of KV capacity available")
         .option("token-budget", "chunked-prefill token budget per iteration")
+        .option("sched-indexed", "indexed ready-set planner: true (default) | false (full-rescore)")
         .option("replicas", "engine replicas (cluster serving; 1 = single engine)")
         .option("router", "round-robin | least-work | modality-partition")
         .option("overlap-penalty", "encode-overlap sync penalty, seconds")

@@ -180,7 +180,7 @@ impl ServeBackend for ObsBackend {
         self.inner.active_requests()
     }
 
-    fn check_invariants(&self) -> Result<(), String> {
+    fn check_invariants(&self) -> Result<(), crate::backend::InvariantViolation> {
         self.inner.check_invariants()
     }
 

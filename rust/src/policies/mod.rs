@@ -103,6 +103,26 @@ pub trait Policy: Send {
         (0, self.order_key(rs, now))
     }
 
+    /// Time-invariant rank for the indexed ready set
+    /// ([`crate::coordinator::readyset::ReadySet`]): a `(family, rank)`
+    /// pair such that among waiting requests **of the same family**, the
+    /// dynamic `order_key(·, now)` ranks them in ascending `rank` order
+    /// (ties by insertion order) for *every* `now`. Families partition
+    /// the queue so that cross-family order may drift with time (aging
+    /// moves whole classes against each other) while within-family order
+    /// cannot — which is what lets the planner keep requests pre-sorted
+    /// across iterations and evaluate only one key per family head
+    /// instead of one per waiting request.
+    ///
+    /// The contract holds because every policy's score is monotone
+    /// non-decreasing in the chosen rank at any fixed `now`, and score
+    /// plateaus (aging saturation, static ablations) fall through to the
+    /// `ready_time` tie-break, which equals the rank on those paths.
+    /// `rank_key` is evaluated on state transitions only (enqueue,
+    /// preemption re-queue) — the incremental rescore counted in
+    /// `planning_evals` by the indexed scheduler.
+    fn rank_key(&self, rs: &ReqState) -> (u8, f64);
+
     /// May a waiting request preempt a running one to be admitted?
     fn preempt_for_admission(&self) -> bool;
 
@@ -131,6 +151,11 @@ impl Policy for FcfsPolicy {
 
     fn order_key(&self, rs: &ReqState, _now: f64) -> OrderKey {
         (rs.ready_time, 0.0)
+    }
+
+    fn rank_key(&self, rs: &ReqState) -> (u8, f64) {
+        // the order key is already time-invariant: one family
+        (0, rs.ready_time)
     }
 
     fn preempt_for_admission(&self) -> bool {
@@ -164,6 +189,11 @@ impl Policy for EdfPolicy {
         (rs.deadline(), 0.0)
     }
 
+    fn rank_key(&self, rs: &ReqState) -> (u8, f64) {
+        // deadlines are fixed at arrival: one family, ranked by deadline
+        (0, rs.deadline())
+    }
+
     fn preempt_for_admission(&self) -> bool {
         true
     }
@@ -192,6 +222,12 @@ impl Policy for NaiveAgingPolicy {
 
     fn order_key(&self, rs: &ReqState, now: f64) -> OrderKey {
         (-rs.waiting_time(now), 0.0)
+    }
+
+    fn rank_key(&self, rs: &ReqState) -> (u8, f64) {
+        // −waiting_time(now) = first_enqueue − now: at any fixed `now`
+        // the oldest-first order is the first_enqueue order
+        (0, rs.first_enqueue)
     }
 
     fn preempt_for_admission(&self) -> bool {
@@ -261,6 +297,27 @@ impl<C: Classifier + Send> Policy for ClassPriorityPolicy<C> {
         // least-priority (highest-score) request.
         let class = rs.class.unwrap_or(Class::Truck);
         (class as u8, self.order_key(rs, now))
+    }
+
+    fn rank_key(&self, rs: &ReqState) -> (u8, f64) {
+        // One family per (class, SLO tier): the regulator score is
+        // `−ln((static_c + 1 − e^{−k_c·w^{p_c}}).max(1e-9)) + shift(tier)`
+        // with `w = (now − first_enqueue).max(0)` — within a fixed
+        // (class, tier) the score is monotone non-decreasing in
+        // `first_enqueue` at every `now` (older waits more, so it scores
+        // lower), and score plateaus (aging saturation, the max-clamp,
+        // aging disabled) fall through to the `ready_time` tie-break,
+        // which equals `first_enqueue` (both are set only in
+        // `mark_ready`). So `first_enqueue` ranks the family for all
+        // time. Cross-family order is what aging changes — those streams
+        // are merged per-iteration by the planner.
+        let class = rs.class.unwrap_or(Class::Truck);
+        let tier = match rs.req.slo_class {
+            Some(crate::request::SloClass::Critical) => 0u8,
+            None | Some(crate::request::SloClass::Standard) => 1,
+            Some(crate::request::SloClass::BestEffort) => 2,
+        };
+        (class as u8 * 3 + tier, rs.first_enqueue)
     }
 
     fn preempt_for_admission(&self) -> bool {

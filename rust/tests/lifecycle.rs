@@ -133,7 +133,7 @@ fn cancel_running_frees_kv() {
     assert_eq!(report.total(), 2);
     assert_eq!(s.kv().used_blocks(), 0, "all KV returned at drain");
     assert_eq!(terminal_events(&events, 0).len(), 1);
-    assert!(s.queue_manager().is_empty());
+    assert!(s.ready_set().is_empty());
 }
 
 /// Cancel after completion loses quietly: no Cancelled event, the

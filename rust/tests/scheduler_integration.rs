@@ -138,7 +138,7 @@ fn decode_growth_eviction_drops_sole_oversized_request() {
 }
 
 #[test]
-fn queue_manager_sees_classified_requests() {
+fn ready_set_sees_classified_requests() {
     let cfg = base_cfg("tcm");
     let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
     let policy = build_policy(&cfg, &profile);
@@ -147,13 +147,13 @@ fn queue_manager_sees_classified_requests() {
     let trace = tcm_serve::experiments::make_trace(&cfg, &profile);
     let n = trace.len() as u64;
     sched.run(trace);
-    let qm = sched.queue_manager();
+    let rs = sched.ready_set();
     let enq: u64 = tcm_serve::request::Class::ALL
         .iter()
-        .map(|&c| qm.stats(c).enqueued)
+        .map(|&c| rs.stats(c).enqueued)
         .sum();
     assert!(enq >= n, "every request must pass through a class queue");
-    assert!(qm.is_empty(), "queues drained at completion");
+    assert!(rs.is_empty(), "queues drained at completion");
     sched.check_invariants().unwrap();
 }
 
