@@ -1,0 +1,114 @@
+//! The client-population workload engine end-to-end: ServeGen-grade
+//! traffic (bursty MMPP chat clients, closed-loop agents, best-effort
+//! batch, multi-turn sessions with growing context) with a mid-run
+//! video-heavy → text-heavy mix flip, replayed through fcfs and tcm.
+//!
+//! Run with a smaller population via the CI knob:
+//!   TCM_EXAMPLE_REQUESTS=40 cargo run --release --example servegen
+
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{make_trace, run_serve_with_trace};
+use tcm_serve::request::Modality;
+use tcm_serve::workload::{scale_trace, Category, Mix, PopulationGen, WorkloadSpec};
+
+fn main() {
+    let mut cfg = ServeConfig::default();
+    cfg.mix = "VH".into();
+    cfg.rate = 3.0;
+    cfg.num_requests = tcm_serve::util::example_requests(200);
+    cfg.seed = 23;
+    cfg.workload.engine = "population".into();
+    cfg.workload.mix_flip_at_s = 40.0;
+    cfg.workload.mix_flip_to = "ML".into();
+
+    let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
+    let n = cfg.num_requests;
+
+    // --------------------------------------------------------------
+    // who is sending what: categories, sessions, turns
+    // --------------------------------------------------------------
+    let spec = WorkloadSpec::from_config(&cfg.workload, Mix::by_name(&cfg.mix).unwrap(), cfg.rate);
+    let (reqs, meta) = PopulationGen::new(&profile, spec, cfg.seed).generate_with_meta(n);
+    println!("population: {} requests from {} clients", reqs.len(), cfg.workload.clients);
+    for cat in Category::ALL {
+        let idx: Vec<usize> =
+            meta.iter().enumerate().filter(|(_, m)| m.category == cat).map(|(i, _)| i).collect();
+        let sessions: std::collections::BTreeSet<(u32, u32)> =
+            idx.iter().map(|&i| (meta[i].client, meta[i].session)).collect();
+        let turns = idx.iter().map(|&i| meta[i].turn + 1).max().unwrap_or(0);
+        println!(
+            "  {:<6} {:>4} requests in {:>3} sessions (deepest turn {turns}), slo={}",
+            cat.name(),
+            idx.len(),
+            sessions.len(),
+            idx.first().and_then(|&i| reqs[i].slo_class).map(|c| c.name()).unwrap_or("-")
+        );
+    }
+
+    // context growth: the deepest session, turn by turn
+    if let Some((client, session)) =
+        meta.iter().max_by_key(|m| m.turn).map(|m| (m.client, m.session))
+    {
+        let mut turns: Vec<(u32, u32)> = meta
+            .iter()
+            .zip(&reqs)
+            .filter(|(m, _)| m.client == client && m.session == session)
+            .map(|(m, r)| (m.turn, r.text_tokens))
+            .collect();
+        turns.sort_unstable();
+        let shape: Vec<String> = turns.iter().map(|(t, tok)| format!("t{t}:{tok}")).collect();
+        println!("  deepest session (client {client}): context {}", shape.join(" → "));
+    }
+
+    // the flip, visible in the modality composition
+    let frac_video = |lo: f64, hi: f64| {
+        let w: Vec<_> = reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).collect();
+        100.0 * w.iter().filter(|r| r.modality == Modality::Video).count() as f64
+            / w.len().max(1) as f64
+    };
+    let last = reqs.last().map(|r| r.arrival).unwrap_or(0.0);
+    println!(
+        "mix flip @ 40s: video share {:.0}% before → {:.0}% after",
+        frac_video(0.0, 40.0),
+        frac_video(60.0, last + 1.0)
+    );
+
+    // --------------------------------------------------------------
+    // the same trace through fcfs and tcm
+    // --------------------------------------------------------------
+    let trace = make_trace(&cfg, &profile);
+    println!("\npolicy comparison on the population trace (sand = text requests):");
+    for policy in ["fcfs", "tcm"] {
+        let mut c = cfg.clone();
+        c.policy = policy.into();
+        let r = run_serve_with_trace(&c, trace.clone());
+        let s = r.by_modality(Modality::Text);
+        println!(
+            "  {:<5} sand mean-ttft={:>7.3}s p99={:>8.3}s slo={:>5.1}%",
+            policy,
+            s.avg_ttft,
+            s.p99_ttft,
+            r.slo_attainment() * 100.0
+        );
+    }
+
+    // --------------------------------------------------------------
+    // k×-scaled replay of the same trace
+    // --------------------------------------------------------------
+    let scaled = scale_trace(&trace, 3);
+    println!(
+        "\nscale-x3 replay: {} → {} requests, same shape compressed 3x \
+         (ids stable per copy)",
+        trace.len(),
+        scaled.len()
+    );
+    let mut c = cfg.clone();
+    c.cluster.replicas = 2;
+    c.cluster.router = "least-work".into();
+    let r = run_serve_with_trace(&c, scaled);
+    println!(
+        "  2 replicas, tcm: {} finished, slo={:.1}%",
+        r.outcomes.len(),
+        r.slo_attainment() * 100.0
+    );
+}

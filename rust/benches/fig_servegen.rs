@@ -1,0 +1,223 @@
+//! fig_servegen — the headline policy/router/pool comparisons re-run
+//! under ServeGen-grade traffic: a bursty client population whose mix
+//! flips video-heavy → text-heavy mid-run (VH until t=70s, ML after).
+//!
+//! The point of the population engine is that the rocks/pebbles/sand
+//! ordering must survive *regime shift*: during the VH phase the fleet
+//! drowns in rocks, and FCFS head-of-line blocks every sand request
+//! behind them; after the flip the backlog drains. Modality-aware
+//! scheduling (tcm) must keep sand TTFT low through both regimes.
+//!
+//! Scenarios (all on the same generated trace, bit-deterministic per
+//! seed — every gate metric is virtual-time):
+//!   1. single scheduler, fcfs vs tcm — sand mean TTFT (the headline);
+//!   2. 4 replicas, round-robin vs modality-partition — sand p99 TTFT;
+//!   3. 2 replicas, encoder pool off vs on — sand mean TTFT;
+//!   4. the same trace scaled 4× via `scale_trace` — makespan stress.
+//!
+//! With `BENCH_JSON=path` set each scenario lands in the JSONL sink;
+//! `servegen/flip/tcm/sand-mean-ttft` is the hot-gated headline.
+
+use tcm_serve::bench_harness::record_named;
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::{make_trace, run_serve_with_trace};
+use tcm_serve::model::by_name;
+use tcm_serve::request::Modality;
+use tcm_serve::workload::{scale_trace, Category, PopulationGen, WorkloadSpec};
+
+const FLIP_AT_S: f64 = 70.0;
+
+fn cfg() -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.model = "llava-7b".into();
+    c.policy = "tcm".into();
+    c.mix = "VH".into();
+    c.rate = 3.0;
+    c.num_requests = 400;
+    c.seed = 17;
+    c.workload.engine = "population".into();
+    c.workload.mix_flip_at_s = FLIP_AT_S;
+    c.workload.mix_flip_to = "ML".into();
+    c
+}
+
+fn main() {
+    let base = cfg();
+    let profile = by_name(&base.model).unwrap();
+    let trace = make_trace(&base, &profile);
+    let n = trace.len();
+
+    println!("=== fig_servegen — client population, VH→ML flip @ {FLIP_AT_S}s, 3 req/s ===");
+
+    // ------------------------------------------------------------------
+    // population shape: categories, sessions, the flip itself
+    // ------------------------------------------------------------------
+    let spec = WorkloadSpec::from_config(
+        &base.workload,
+        tcm_serve::workload::Mix::by_name(&base.mix).unwrap(),
+        base.rate,
+    );
+    let (preqs, meta) = PopulationGen::new(&profile, spec, base.seed).generate_with_meta(n);
+    println!("\n--- population shape ({n} requests) ---");
+    for cat in Category::ALL {
+        let reqs: Vec<usize> =
+            meta.iter().enumerate().filter(|(_, m)| m.category == cat).map(|(i, _)| i).collect();
+        let sessions: std::collections::BTreeSet<(u32, u32)> =
+            reqs.iter().map(|&i| (meta[i].client, meta[i].session)).collect();
+        let max_turn = reqs.iter().map(|&i| meta[i].turn).max().unwrap_or(0);
+        println!(
+            "{:<6} requests={:<4} sessions={:<4} deepest-turn={}",
+            cat.name(),
+            reqs.len(),
+            sessions.len(),
+            max_turn + 1
+        );
+    }
+    let vfrac = |lo: f64, hi: f64| {
+        let window: Vec<_> = preqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).collect();
+        let v = window.iter().filter(|r| r.modality == Modality::Video).count();
+        (v as f64 / window.len().max(1) as f64, window.len())
+    };
+    let (v_before, n_before) = vfrac(0.0, FLIP_AT_S);
+    let last = preqs.last().map(|r| r.arrival).unwrap_or(0.0);
+    let (v_after, n_after) = vfrac(FLIP_AT_S + 20.0, last + 1.0);
+    println!(
+        "video fraction: {:.1}% of {n_before} before the flip → {:.1}% of {n_after} after",
+        v_before * 100.0,
+        v_after * 100.0
+    );
+    assert!(n_before > 0 && n_after > 0, "flip must split the run");
+    assert!(
+        v_after < v_before,
+        "the flip must reduce video share ({v_before:.3} → {v_after:.3})"
+    );
+
+    // ------------------------------------------------------------------
+    // 1. headline: fcfs vs tcm on sand (text) mean TTFT
+    // ------------------------------------------------------------------
+    println!("\n--- single scheduler: fcfs vs tcm ---");
+    let mut sand = Vec::new();
+    for policy in ["fcfs", "tcm"] {
+        let mut c = base.clone();
+        c.policy = policy.into();
+        let r = run_serve_with_trace(&c, trace.clone());
+        assert_eq!(r.total(), n, "{policy}: conservation");
+        let s = r.by_modality(Modality::Text);
+        let rocks = r.by_modality(Modality::Video);
+        println!(
+            "{:<6} sand mean-ttft={:>7.3}s p99={:>8.3}s | rocks mean-ttft={:>8.3}s slo={:>5.1}%",
+            policy,
+            s.avg_ttft,
+            s.p99_ttft,
+            rocks.avg_ttft,
+            r.slo_attainment() * 100.0
+        );
+        record_named(
+            &format!("servegen/flip/{policy}/sand-mean-ttft"),
+            s.avg_ttft * 1e9,
+            None,
+            policy == "tcm",
+        );
+        sand.push(s.avg_ttft);
+    }
+    println!(
+        "modality-aware beats FCFS on sand TTFT through the flip: {}",
+        if sand[1] < sand[0] { "yes" } else { "NO — regression" }
+    );
+    assert!(
+        sand[1] < sand[0],
+        "headline ordering lost: tcm sand ttft {} !< fcfs {}",
+        sand[1],
+        sand[0]
+    );
+
+    // bit-identity: the whole pipeline (population → backend) reruns
+    // identically per seed
+    {
+        let t2 = make_trace(&base, &profile);
+        assert_eq!(trace.len(), t2.len());
+        for (a, b) in trace.iter().zip(&t2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "trace not bit-identical");
+        }
+        let mut r1 = run_serve_with_trace(&base, trace.clone());
+        let mut r2 = run_serve_with_trace(&base, t2);
+        r1.sort_by_id();
+        r2.sort_by_id();
+        assert_eq!(r1.outcomes.len(), r2.outcomes.len());
+        for (x, y) in r1.outcomes.iter().zip(&r2.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits(), "rerun diverged");
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        println!("rerun bit-identity: ok ({} outcomes)", r1.outcomes.len());
+    }
+
+    // ------------------------------------------------------------------
+    // 2. routers at 4 replicas: round-robin vs modality-partition
+    // ------------------------------------------------------------------
+    println!("\n--- 4 replicas: round-robin vs modality-partition (tcm) ---");
+    let mut p99s = Vec::new();
+    for router in ["round-robin", "modality-partition"] {
+        let mut c = base.clone();
+        c.cluster.replicas = 4;
+        c.cluster.router = router.into();
+        let r = run_serve_with_trace(&c, trace.clone());
+        assert_eq!(r.total(), n, "{router}: conservation");
+        let s = r.by_modality(Modality::Text);
+        println!("{:<18} sand p99-ttft={:>8.3}s mean={:>7.3}s", router, s.p99_ttft, s.avg_ttft);
+        p99s.push(s.p99_ttft);
+    }
+    record_named("servegen/flip/partition/sand-p99-ttft", p99s[1] * 1e9, None, false);
+    println!(
+        "partitioning shields sand tails under the flip: {}",
+        if p99s[1] < p99s[0] { "yes" } else { "NO — regression" }
+    );
+
+    // ------------------------------------------------------------------
+    // 3. encoder pool on/off at 2 replicas
+    // ------------------------------------------------------------------
+    println!("\n--- 2 replicas: encoder pool off vs on (tcm, least-work) ---");
+    let mut means = Vec::new();
+    for pool in [false, true] {
+        let mut c = base.clone();
+        c.cluster.replicas = 2;
+        c.cluster.router = "least-work".into();
+        c.pool.enabled = pool;
+        c.pool.slots = 2;
+        let r = run_serve_with_trace(&c, trace.clone());
+        assert_eq!(r.total(), n, "pool={pool}: conservation");
+        let s = r.by_modality(Modality::Text);
+        println!("pool={:<5} sand mean-ttft={:>7.3}s p99={:>8.3}s", pool, s.avg_ttft, s.p99_ttft);
+        means.push(s.avg_ttft);
+    }
+    record_named("servegen/flip/pool-on/sand-mean-ttft", means[1] * 1e9, None, false);
+    println!(
+        "disaggregated encodes help sand under the VH phase: {}",
+        if means[1] < means[0] { "yes" } else { "NO — regression" }
+    );
+
+    // ------------------------------------------------------------------
+    // 4. k×-scaled replay: the same traffic shape at 4× intensity
+    // ------------------------------------------------------------------
+    println!("\n--- scale-x4 stress (tcm, 4 replicas, least-work) ---");
+    let scaled = scale_trace(&trace, 4);
+    assert_eq!(scaled.len(), 4 * n);
+    let mut c = base.clone();
+    c.cluster.replicas = 4;
+    c.cluster.router = "least-work".into();
+    let r = run_serve_with_trace(&c, scaled);
+    assert_eq!(r.total(), 4 * n, "scaled: conservation");
+    let makespan = r.outcomes.iter().map(|o| o.finish).fold(0.0_f64, f64::max);
+    println!(
+        "{} requests, makespan={:.1}s, slo={:.1}%",
+        4 * n,
+        makespan,
+        r.slo_attainment() * 100.0
+    );
+    record_named("servegen/scale-x4/makespan", makespan * 1e9, None, false);
+
+    println!("\nExpected shape: the VH phase floods the fleet with rocks; tcm keeps sand");
+    println!("TTFT flat through the flip while FCFS queues it behind video encodes, and");
+    println!("the ordering holds at 4x intensity on the scaled replay.");
+}

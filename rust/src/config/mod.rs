@@ -197,6 +197,75 @@ pub struct ServerConfig {
     pub admission_limit: usize,
 }
 
+/// Client-population workload knobs (the `[workload]` TOML section; see
+/// [`crate::workload::population`]). The default engine ("poisson")
+/// keeps trace generation bit-identical to the original `WorkloadGen`;
+/// "population" selects the ServeGen-grade client-population engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Arrival engine: "poisson" (open-loop i.i.d., the original
+    /// generator) | "population" (per-client MMPP / closed-loop /
+    /// Poisson processes with multi-turn sessions).
+    pub engine: String,
+    /// Number of clients in the population (`--clients`).
+    pub clients: usize,
+    /// Unnormalized category weights [chat, agent, batch]; each client
+    /// is deterministically assigned one category by position.
+    pub category_weights: [f64; 3],
+    /// MMPP duty cycle: fraction of time a chat client spends in its
+    /// burst (on) phase (`--burst-duty`). Must be in (0, 1).
+    pub burst_duty: f64,
+    /// Burst intensity: on-phase session rate as a multiple of the
+    /// client's mean rate (`--burst-boost`).
+    pub burst_boost: f64,
+    /// Mean burst (on-phase) length in seconds.
+    pub burst_len_s: f64,
+    /// Mean think time between session turns, seconds (`--think-time`).
+    pub think_mean_s: f64,
+    /// Mean turns per chat session, geometric (`--turns`).
+    pub turns_mean: f64,
+    /// Fraction of (prompt + output) carried into the next turn's
+    /// context; 1.0 re-sends the full conversation.
+    pub context_carry: f64,
+    /// Piecewise-constant diurnal curve as flat (start_s, multiplier)
+    /// pairs (`--diurnal "0:1,300:2.5"`); empty = flat 1.0.
+    pub diurnal: Vec<f64>,
+    /// Diurnal wrap period in seconds; 0 = no wrap (last segment holds).
+    pub diurnal_period_s: f64,
+    /// Mid-run traffic flip: sessions starting at/after this virtual
+    /// time draw from `mix_flip_to` instead of the base mix
+    /// (`--mix-flip-at`). Active only when `mix_flip_to` is set.
+    pub mix_flip_at_s: f64,
+    /// Mix name to flip to (T0|ML|MH|VH); empty = no flip.
+    pub mix_flip_to: String,
+    /// Trace scaling: tile + compress the generated trace to k× rate and
+    /// k× request count with stable id remapping (`--scale-k`; 1 = off).
+    pub scale_k: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            engine: "poisson".into(),
+            clients: 32,
+            category_weights: [0.6, 0.25, 0.15],
+            burst_duty: 0.25,
+            burst_boost: 3.0,
+            burst_len_s: 20.0,
+            think_mean_s: 4.0,
+            turns_mean: 3.0,
+            context_carry: 1.0,
+            diurnal: Vec::new(),
+            diurnal_period_s: 0.0,
+            mix_flip_at_s: 0.0,
+            mix_flip_to: String::new(),
+            scale_k: 1,
+        }
+    }
+}
+
+pub const WORKLOAD_ENGINES: [&str; 2] = ["poisson", "population"];
+
 /// Top-level experiment/server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -216,6 +285,7 @@ pub struct ServeConfig {
     pub slo_scale: f64,
     /// Fraction of the profile's KV capacity available (memory pressure).
     pub memory_frac: f64,
+    pub workload: WorkloadConfig,
     pub scheduler: SchedulerConfig,
     pub regulator: RegulatorConfig,
     pub cluster: ClusterConfig,
@@ -235,6 +305,7 @@ impl Default for ServeConfig {
             policy: "tcm".into(),
             slo_scale: 5.0,
             memory_frac: 1.0,
+            workload: WorkloadConfig::default(),
             scheduler: SchedulerConfig::default(),
             regulator: RegulatorConfig::default(),
             cluster: ClusterConfig::default(),
@@ -277,7 +348,8 @@ impl ServeConfig {
     pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), ConfigError> {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
-            "memory_frac", "scheduler.", "regulator.", "cluster.", "pool.", "server.", "obs.",
+            "memory_frac", "workload.", "scheduler.", "regulator.", "cluster.", "pool.",
+            "server.", "obs.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -314,6 +386,74 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_f64("memory_frac") {
             self.memory_frac = v;
+        }
+        if let Some(v) = doc.get_str("workload.engine") {
+            self.workload.engine = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("workload.clients") {
+            self.workload.clients = v as usize;
+        }
+        if let Some(val) = doc.get("workload.category_weights") {
+            let arr = val
+                .as_array()
+                .ok_or_else(|| ConfigError("workload.category_weights must be an array".into()))?;
+            if arr.len() != 3 {
+                return Err(ConfigError(
+                    "workload.category_weights must have 3 entries (chat, agent, batch)".into(),
+                ));
+            }
+            let mut out = [0.0; 3];
+            for (i, v) in arr.iter().enumerate() {
+                out[i] = v.as_f64().ok_or_else(|| {
+                    ConfigError(format!("workload.category_weights[{i}] must be numeric"))
+                })?;
+            }
+            self.workload.category_weights = out;
+        }
+        if let Some(v) = doc.get_f64("workload.burst_duty") {
+            self.workload.burst_duty = v;
+        }
+        if let Some(v) = doc.get_f64("workload.burst_boost") {
+            self.workload.burst_boost = v;
+        }
+        if let Some(v) = doc.get_f64("workload.burst_len_s") {
+            self.workload.burst_len_s = v;
+        }
+        if let Some(v) = doc.get_f64("workload.think_mean_s") {
+            self.workload.think_mean_s = v;
+        }
+        if let Some(v) = doc.get_f64("workload.turns_mean") {
+            self.workload.turns_mean = v;
+        }
+        if let Some(v) = doc.get_f64("workload.context_carry") {
+            self.workload.context_carry = v;
+        }
+        if let Some(val) = doc.get("workload.diurnal") {
+            let arr = val
+                .as_array()
+                .ok_or_else(|| ConfigError("workload.diurnal must be an array".into()))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                out.push(v.as_f64().ok_or_else(|| {
+                    ConfigError(format!("workload.diurnal[{i}] must be numeric"))
+                })?);
+            }
+            self.workload.diurnal = out;
+        }
+        if let Some(v) = doc.get_f64("workload.diurnal_period_s") {
+            self.workload.diurnal_period_s = v;
+        }
+        if let Some(v) = doc.get_f64("workload.mix_flip_at_s") {
+            self.workload.mix_flip_at_s = v;
+        }
+        if let Some(v) = doc.get_str("workload.mix_flip_to") {
+            self.workload.mix_flip_to = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("workload.scale_k") {
+            if v < 1 {
+                return Err(ConfigError("workload.scale_k must be >= 1".into()));
+            }
+            self.workload.scale_k = v as usize;
         }
         if let Some(v) = doc.get_i64("scheduler.token_budget") {
             self.scheduler.token_budget = v as u32;
@@ -434,6 +574,40 @@ impl ServeConfig {
                 }
             };
         }
+        if let Some(v) = args.get("workload") {
+            self.workload.engine = v.to_string();
+        }
+        self.workload.clients = args.get_usize("clients", self.workload.clients).map_err(e)?;
+        self.workload.burst_duty =
+            args.get_f64("burst-duty", self.workload.burst_duty).map_err(e)?;
+        self.workload.burst_boost =
+            args.get_f64("burst-boost", self.workload.burst_boost).map_err(e)?;
+        self.workload.think_mean_s =
+            args.get_f64("think-time", self.workload.think_mean_s).map_err(e)?;
+        self.workload.turns_mean = args.get_f64("turns", self.workload.turns_mean).map_err(e)?;
+        self.workload.mix_flip_at_s =
+            args.get_f64("mix-flip-at", self.workload.mix_flip_at_s).map_err(e)?;
+        if let Some(v) = args.get("mix-flip-to") {
+            self.workload.mix_flip_to = v.to_string();
+        }
+        if let Some(v) = args.get("diurnal") {
+            let mut out = Vec::new();
+            for part in v.split(',') {
+                let (t, m) = part.split_once(':').ok_or_else(|| {
+                    ConfigError(format!("--diurnal expects start:mult pairs, got '{part}'"))
+                })?;
+                let t: f64 = t.trim().parse().map_err(|_| {
+                    ConfigError(format!("--diurnal: bad start time '{}'", t.trim()))
+                })?;
+                let m: f64 = m.trim().parse().map_err(|_| {
+                    ConfigError(format!("--diurnal: bad multiplier '{}'", m.trim()))
+                })?;
+                out.push(t);
+                out.push(m);
+            }
+            self.workload.diurnal = out;
+        }
+        self.workload.scale_k = args.get_usize("scale-k", self.workload.scale_k).map_err(e)?;
         self.cluster.replicas = args.get_usize("replicas", self.cluster.replicas).map_err(e)?;
         if let Some(v) = args.get("router") {
             self.cluster.router = v.to_string();
@@ -489,6 +663,7 @@ impl ServeConfig {
         if self.rate <= 0.0 {
             return Err(ConfigError("rate must be > 0".into()));
         }
+        self.validate_workload()?;
         if !(0.0 < self.memory_frac && self.memory_frac <= 1.0) {
             return Err(ConfigError("memory_frac must be in (0, 1]".into()));
         }
@@ -518,6 +693,97 @@ impl ServeConfig {
         }
         if !self.pool.late_bind_epsilon_s.is_finite() || self.pool.late_bind_epsilon_s < 0.0 {
             return Err(ConfigError("pool.late_bind_epsilon_s must be finite and >= 0".into()));
+        }
+        Ok(())
+    }
+
+    fn validate_workload(&self) -> Result<(), ConfigError> {
+        let w = &self.workload;
+        if !WORKLOAD_ENGINES.contains(&w.engine.as_str()) {
+            return Err(ConfigError(format!(
+                "unknown workload.engine '{}' (expected one of {WORKLOAD_ENGINES:?})",
+                w.engine
+            )));
+        }
+        if w.clients == 0 || w.clients > 100_000 {
+            return Err(ConfigError("workload.clients must be in 1..=100000".into()));
+        }
+        let weights_ok = w.category_weights.iter().all(|x| x.is_finite() && *x >= 0.0)
+            && w.category_weights.iter().sum::<f64>() > 0.0;
+        if !weights_ok {
+            return Err(ConfigError(
+                "workload.category_weights must be finite, >= 0, with a positive sum".into(),
+            ));
+        }
+        if !(w.burst_duty > 0.0 && w.burst_duty < 1.0) {
+            return Err(ConfigError("workload.burst_duty must be in (0, 1)".into()));
+        }
+        if !w.burst_boost.is_finite() || w.burst_boost < 1.0 {
+            return Err(ConfigError("workload.burst_boost must be finite and >= 1".into()));
+        }
+        if !w.burst_len_s.is_finite() || w.burst_len_s <= 0.0 {
+            return Err(ConfigError("workload.burst_len_s must be finite and > 0".into()));
+        }
+        if !w.think_mean_s.is_finite() || w.think_mean_s <= 0.0 {
+            return Err(ConfigError("workload.think_mean_s must be finite and > 0".into()));
+        }
+        if !w.turns_mean.is_finite() || w.turns_mean < 1.0 {
+            return Err(ConfigError("workload.turns_mean must be finite and >= 1".into()));
+        }
+        if !w.context_carry.is_finite() || !(0.0..=1.0).contains(&w.context_carry) {
+            return Err(ConfigError("workload.context_carry must be in [0, 1]".into()));
+        }
+        if w.diurnal.len() % 2 != 0 {
+            return Err(ConfigError(
+                "workload.diurnal must be flat (start_s, multiplier) pairs".into(),
+            ));
+        }
+        if !w.diurnal.is_empty() {
+            let mut last_t = f64::NEG_INFINITY;
+            let mut any_positive = false;
+            for pair in w.diurnal.chunks(2) {
+                let (t, m) = (pair[0], pair[1]);
+                if !t.is_finite() || !m.is_finite() || m < 0.0 {
+                    return Err(ConfigError(
+                        "workload.diurnal entries must be finite with multipliers >= 0".into(),
+                    ));
+                }
+                if t <= last_t {
+                    return Err(ConfigError(
+                        "workload.diurnal start times must be strictly increasing".into(),
+                    ));
+                }
+                last_t = t;
+                any_positive |= m > 0.0;
+            }
+            if w.diurnal[0] != 0.0 {
+                return Err(ConfigError("workload.diurnal must start at t = 0".into()));
+            }
+            if !any_positive {
+                return Err(ConfigError(
+                    "workload.diurnal needs at least one positive multiplier".into(),
+                ));
+            }
+            if w.diurnal_period_s != 0.0
+                && (!w.diurnal_period_s.is_finite() || w.diurnal_period_s <= last_t)
+            {
+                return Err(ConfigError(
+                    "workload.diurnal_period_s must be 0 (no wrap) or beyond the last segment"
+                        .into(),
+                ));
+            }
+        }
+        if !w.mix_flip_at_s.is_finite() || w.mix_flip_at_s < 0.0 {
+            return Err(ConfigError("workload.mix_flip_at_s must be finite and >= 0".into()));
+        }
+        if !w.mix_flip_to.is_empty() && crate::workload::Mix::by_name(&w.mix_flip_to).is_none() {
+            return Err(ConfigError(format!(
+                "unknown workload.mix_flip_to '{}' (T0|ML|MH|VH)",
+                w.mix_flip_to
+            )));
+        }
+        if w.scale_k == 0 || w.scale_k > 1024 {
+            return Err(ConfigError("workload.scale_k must be in 1..=1024".into()));
         }
         Ok(())
     }
@@ -693,6 +959,63 @@ metrics_out = "metrics.prom"
             ..ServeConfig::default()
         };
         assert!(c.obs.active());
+    }
+
+    #[test]
+    fn workload_section_parses_and_validates() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.workload, WorkloadConfig::default());
+        assert_eq!(c.workload.engine, "poisson", "default engine must stay bit-compatible");
+        let doc = Doc::parse(
+            r#"
+[workload]
+engine = "population"
+clients = 64
+category_weights = [0.5, 0.3, 0.2]
+burst_duty = 0.2
+burst_boost = 4.0
+burst_len_s = 15.0
+think_mean_s = 2.0
+turns_mean = 4.0
+context_carry = 0.8
+diurnal = [0.0, 1.0, 300.0, 2.5]
+diurnal_period_s = 600.0
+mix_flip_at_s = 120.0
+mix_flip_to = "T0"
+scale_k = 4
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.workload.engine, "population");
+        assert_eq!(c.workload.clients, 64);
+        assert_eq!(c.workload.category_weights, [0.5, 0.3, 0.2]);
+        assert_eq!(c.workload.burst_duty, 0.2);
+        assert_eq!(c.workload.diurnal, vec![0.0, 1.0, 300.0, 2.5]);
+        assert_eq!(c.workload.diurnal_period_s, 600.0);
+        assert_eq!(c.workload.mix_flip_to, "T0");
+        assert_eq!(c.workload.scale_k, 4);
+    }
+
+    #[test]
+    fn workload_section_rejects_bad_values() {
+        for bad in [
+            "[workload]\nengine = \"quantum\"",
+            "[workload]\nclients = 0",
+            "[workload]\nburst_duty = 1.5",
+            "[workload]\nburst_boost = 0.5",
+            "[workload]\nturns_mean = 0.0",
+            "[workload]\ncontext_carry = 2.0",
+            "[workload]\ncategory_weights = [0.0, 0.0, 0.0]",
+            "[workload]\ndiurnal = [0.0, 1.0, 300.0]",
+            "[workload]\ndiurnal = [10.0, 1.0, 300.0, 2.0]",
+            "[workload]\ndiurnal = [0.0, 1.0, 300.0, 2.0]\ndiurnal_period_s = 100.0",
+            "[workload]\nmix_flip_to = \"XX\"",
+            "[workload]\nscale_k = 0",
+        ] {
+            let mut c = ServeConfig::default();
+            assert!(c.apply_doc(&Doc::parse(bad).unwrap()).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

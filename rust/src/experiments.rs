@@ -11,7 +11,7 @@ use crate::metrics::Report;
 use crate::model::ModelProfile;
 use crate::policies::build_policy;
 use crate::request::Request;
-use crate::workload::{Mix, WorkloadGen};
+use crate::workload::{scale_trace, Mix, PopulationGen, WorkloadGen, WorkloadSpec};
 
 /// Outcome of one simulated serving run.
 pub struct RunResult {
@@ -22,10 +22,25 @@ pub struct RunResult {
 }
 
 /// Generate the trace a config describes (same seed ⇒ same trace, so
-/// policies compete on identical arrival sequences).
+/// policies compete on identical arrival sequences). Dispatches on
+/// `cfg.workload.engine`: "poisson" keeps the original open-loop
+/// generator bit-identical; "population" runs the client-population
+/// engine ([`crate::workload::population`]). With `workload.scale_k`
+/// > 1 the generated trace is additionally tiled + compressed to k×
+/// rate and k×`num_requests` requests via [`scale_trace`].
 pub fn make_trace(cfg: &ServeConfig, profile: &ModelProfile) -> Vec<Request> {
     let mix = Mix::by_name(&cfg.mix).expect("validated mix");
-    WorkloadGen::new(profile, mix, cfg.rate, cfg.seed).generate(cfg.num_requests)
+    let trace = if cfg.workload.engine == "population" {
+        let spec = WorkloadSpec::from_config(&cfg.workload, mix, cfg.rate);
+        PopulationGen::new(profile, spec, cfg.seed).generate(cfg.num_requests)
+    } else {
+        WorkloadGen::new(profile, mix, cfg.rate, cfg.seed).generate(cfg.num_requests)
+    };
+    if cfg.workload.scale_k > 1 {
+        scale_trace(&trace, cfg.workload.scale_k)
+    } else {
+        trace
+    }
 }
 
 /// Run one simulated serving experiment under `cfg`.
@@ -196,6 +211,27 @@ mod tests {
             assert_eq!(x.id, y.id);
             assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
             assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn population_engine_and_scale_k_run_end_to_end() {
+        let mut c = cfg("tcm");
+        c.workload.engine = "population".into();
+        c.workload.mix_flip_to = "T0".into();
+        c.workload.mix_flip_at_s = 30.0;
+        c.num_requests = 120;
+        let r = run_sim(&c);
+        assert_eq!(r.report.total(), 120);
+        // scale_k multiplies the trace deterministically
+        c.workload.scale_k = 2;
+        let profile = crate::model::by_name(&c.model).unwrap();
+        let t = make_trace(&c, &profile);
+        assert_eq!(t.len(), 240);
+        let t2 = make_trace(&c, &profile);
+        for (a, b) in t.iter().zip(&t2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
         }
     }
 

@@ -33,6 +33,16 @@ fn parser() -> Parser {
         .option("requests", "number of requests")
         .option("seed", "workload seed")
         .option("slo-scale", "SLO = scale x isolated e2e latency")
+        .option("workload", "arrival engine: poisson (default) | population")
+        .option("clients", "client-population size (population engine)")
+        .option("burst-duty", "MMPP burst duty cycle in (0,1) for chat clients")
+        .option("burst-boost", "burst intensity as a multiple of the mean rate (>= 1)")
+        .option("think-time", "mean think time between session turns, seconds")
+        .option("turns", "mean turns per chat session (geometric)")
+        .option("mix-flip-at", "flip the traffic mix at this virtual time, seconds")
+        .option("mix-flip-to", "mix to flip to: T0 | ML | MH | VH")
+        .option("diurnal", "piecewise rate curve, start:mult pairs e.g. \"0:1,300:2.5\"")
+        .option("scale-k", "replay the generated trace at k x rate with k x requests")
         .option("memory-frac", "fraction of KV capacity available")
         .option("token-budget", "chunked-prefill token budget per iteration")
         .option("sched-indexed", "indexed ready-set planner: true (default) | false (full-rescore)")
@@ -114,6 +124,17 @@ fn cmd_simulate(cfg: &ServeConfig) {
         cfg.slo_scale,
         cfg.memory_frac * 100.0
     );
+    if cfg.workload.engine != "poisson" || cfg.workload.scale_k > 1 {
+        let flip = if cfg.workload.mix_flip_to.is_empty() {
+            "off".to_string()
+        } else {
+            format!("{}@{}s", cfg.workload.mix_flip_to, cfg.workload.mix_flip_at_s)
+        };
+        println!(
+            "workload: engine={} clients={} mix_flip={} scale_k={}",
+            cfg.workload.engine, cfg.workload.clients, flip, cfg.workload.scale_k
+        );
+    }
     let mut backend = tcm_serve::backend::build(cfg);
     println!(
         "backend: {} (replicas={} router={} encode_overlap={} encoder_pool={})",

@@ -67,11 +67,18 @@ impl Rng {
     }
 
     /// Exponential with rate `lambda` (mean 1/lambda). Poisson-process
-    /// inter-arrival gaps.
+    /// inter-arrival gaps. Always strictly positive: `1 - f64()` is in
+    /// (0, 1], and at exactly 1.0 (`f64() == 0.0`, a 2^-53 draw) `ln()`
+    /// would be 0.0 and the gap would collapse to zero — breaking the
+    /// strictly-increasing arrival contract of `WorkloadGen::generate` —
+    /// so the draw is clamped off the endpoint, matching `normal()`'s
+    /// `max(f64::MIN_POSITIVE)` guard. Bit-identical for every other
+    /// draw.
     pub fn exponential(&mut self, lambda: f64) -> f64 {
         debug_assert!(lambda > 0.0);
-        // 1 - f64() is in (0, 1], so ln() is finite.
-        -(1.0 - self.f64()).ln() / lambda
+        // 1.0 - EPSILON/2 is the largest f64 below 1.0.
+        let u = (1.0 - self.f64()).min(1.0 - f64::EPSILON / 2.0);
+        -u.ln() / lambda
     }
 
     /// Standard normal via Box–Muller (no cached spare: simplicity over
@@ -171,6 +178,21 @@ mod tests {
         let n = 200_000;
         let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    /// Seed chosen so the very first `next_u64()` is exactly 0, hence
+    /// `f64() == 0.0`: SplitMix64's finalizer is a bijection mapping
+    /// 0 → 0, so the state after the gamma add must be 0 — i.e. the seed
+    /// is `-GAMMA`. Regression for the duplicate-arrival bug: an
+    /// unguarded `exponential()` returns exactly 0.0 on this draw.
+    #[test]
+    fn exponential_is_strictly_positive_on_zero_draw() {
+        let crafted = 0u64.wrapping_sub(0x9E37_79B9_7F4A_7C15);
+        let mut probe = Rng::new(crafted);
+        assert_eq!(probe.f64(), 0.0, "seed no longer produces the zero draw");
+        let mut r = Rng::new(crafted);
+        let gap = r.exponential(2.0);
+        assert!(gap > 0.0, "zero uniform draw must not collapse the gap, got {gap}");
     }
 
     #[test]

@@ -133,9 +133,17 @@ impl WorkloadGen {
 
     /// Generate the next request with a Poisson inter-arrival gap.
     pub fn next_request(&mut self) -> Request {
-        self.clock += self.rng.exponential(self.rate);
-        let arrival = self.clock;
-        self.sample_at(arrival)
+        let next = self.clock + self.rng.exponential(self.rate);
+        // `exponential` is strictly positive, but against a large enough
+        // clock a tiny gap can still round away (clock + gap == clock);
+        // bump one ulp so the strictly-increasing contract of `generate`
+        // holds unconditionally.
+        self.clock = if next > self.clock {
+            next
+        } else {
+            f64::from_bits(self.clock.to_bits() + 1)
+        };
+        self.sample_at(self.clock)
     }
 
     /// Generate `n` requests (arrivals strictly increasing).
@@ -164,65 +172,72 @@ impl WorkloadGen {
     fn sample_modality(&mut self, modality: Modality, arrival: f64) -> Request {
         let id = self.next_id;
         self.next_id += 1;
-        let p = &self.params;
-        let output_tokens = self
-            .rng
-            .lognormal(p.out_mu, p.out_sigma)
-            .clamp(p.out_min, p.out_max) as u32;
-        match modality {
-            Modality::Text => Request {
-                id,
-                arrival,
-                modality,
-                text_tokens: self.rng.log_uniform(p.text_tokens_min, p.text_tokens_max) as u32,
-                mm_tokens: 0,
-                video_duration_s: 0.0,
-                output_tokens,
-                ..Request::default()
-            },
-            Modality::Image => {
-                let tok = &self.profile.tokenizer;
-                let mm = if tok.image_jitter > 0.0 {
-                    (tok.image_tokens
-                        * self.rng.lognormal(0.0, tok.image_jitter))
+        let output_tokens = draw_output_tokens(&mut self.rng, &self.params);
+        let (mm_tokens, video_duration_s) =
+            draw_attachment(&mut self.rng, &self.profile, &self.params, modality);
+        let text_tokens = match modality {
+            Modality::Text => draw_text_tokens(&mut self.rng, &self.params),
+            _ => draw_question_tokens(&mut self.rng, &self.params),
+        };
+        Request {
+            id,
+            arrival,
+            modality,
+            text_tokens,
+            mm_tokens,
+            video_duration_s,
+            output_tokens,
+            ..Request::default()
+        }
+    }
+}
+
+// Marginal draws shared by `WorkloadGen` and the client-population
+// engine (`workload::session` / `workload::population`), factored out so
+// both sample from identical distributions. The order callers invoke
+// these in is load-bearing for bit-compatibility with pre-refactor
+// traces: output tokens first, then the attachment, then the question.
+
+/// Output-length marginal: clipped lognormal.
+pub(crate) fn draw_output_tokens(rng: &mut Rng, p: &DatasetParams) -> u32 {
+    rng.lognormal(p.out_mu, p.out_sigma).clamp(p.out_min, p.out_max) as u32
+}
+
+/// Text-prompt marginal: log-uniform over the full Fig-2a band.
+pub(crate) fn draw_text_tokens(rng: &mut Rng, p: &DatasetParams) -> u32 {
+    rng.log_uniform(p.text_tokens_min, p.text_tokens_max) as u32
+}
+
+/// Accompanying-question marginal for image/video requests (and
+/// follow-up turns in multi-turn sessions): short log-uniform band.
+pub(crate) fn draw_question_tokens(rng: &mut Rng, p: &DatasetParams) -> u32 {
+    rng.log_uniform(p.mm_question_tokens_min, p.mm_question_tokens_max) as u32
+}
+
+/// Attachment marginal: `(mm_tokens, video_duration_s)` for one attached
+/// image or video; `(0, 0.0)` for text, with no rng draw.
+pub(crate) fn draw_attachment(
+    rng: &mut Rng,
+    profile: &ModelProfile,
+    p: &DatasetParams,
+    modality: Modality,
+) -> (u32, f64) {
+    match modality {
+        Modality::Text => (0, 0.0),
+        Modality::Image => {
+            let tok = &profile.tokenizer;
+            let mm = if tok.image_jitter > 0.0 {
+                (tok.image_tokens * rng.lognormal(0.0, tok.image_jitter))
                     .clamp(tok.image_tokens * 0.3, tok.image_tokens * 3.5)
-                        as u32
-                } else {
-                    tok.image_tokens as u32
-                };
-                Request {
-                    id,
-                    arrival,
-                    modality,
-                    text_tokens: self
-                        .rng
-                        .log_uniform(p.mm_question_tokens_min, p.mm_question_tokens_max)
-                        as u32,
-                    mm_tokens: mm,
-                    video_duration_s: 0.0,
-                    output_tokens,
-                    ..Request::default()
-                }
-            }
-            Modality::Video => {
-                let dur = self
-                    .rng
-                    .lognormal(p.video_mu, p.video_sigma)
-                    .clamp(p.video_min_s, p.video_max_s);
-                Request {
-                    id,
-                    arrival,
-                    modality,
-                    text_tokens: self
-                        .rng
-                        .log_uniform(p.mm_question_tokens_min, p.mm_question_tokens_max)
-                        as u32,
-                    mm_tokens: self.profile.tokenizer.video_tokens(dur),
-                    video_duration_s: dur,
-                    output_tokens,
-                    ..Request::default()
-                }
-            }
+                    as u32
+            } else {
+                tok.image_tokens as u32
+            };
+            (mm, 0.0)
+        }
+        Modality::Video => {
+            let dur = rng.lognormal(p.video_mu, p.video_sigma).clamp(p.video_min_s, p.video_max_s);
+            (profile.tokenizer.video_tokens(dur), dur)
         }
     }
 }
@@ -246,6 +261,25 @@ mod tests {
         let span = reqs.last().unwrap().arrival;
         let rate = reqs.len() as f64 / span;
         assert!((rate - 2.0).abs() < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn degenerate_gaps_cannot_stall_arrivals() {
+        // Crafted seed: the first uniform draw is exactly 0.0 (see
+        // util::rng) — the old unguarded `exponential` returned a 0.0 gap
+        // here, duplicating arrival times.
+        let crafted = 0u64.wrapping_sub(0x9E37_79B9_7F4A_7C15);
+        let mut g = gen(MIX_T0, crafted);
+        assert!(g.next_request().arrival > 0.0);
+        // And even when a clamped-tiny gap rounds away against a large
+        // clock (ulp(1e18) ≈ 128 s ≫ any exponential(2.0) draw), the ulp
+        // bump keeps arrivals strictly increasing.
+        let mut g = gen(MIX_MH, 1);
+        g.clock = 1e18;
+        let a = g.next_request().arrival;
+        let b = g.next_request().arrival;
+        assert!(a > 1e18, "a={a}");
+        assert!(b > a, "a={a} b={b}");
     }
 
     #[test]

@@ -7,9 +7,28 @@
 //! * Poisson arrivals at a configurable rate;
 //! * mixes T0 (text-only), ML (light multimodal), MH (heavy multimodal),
 //!   VH (video-heavy — the encoder-pool stress case).
+//!
+//! Two arrival engines share those marginals:
+//!
+//! * [`WorkloadGen`] — the original open-loop i.i.d. Poisson generator;
+//! * [`PopulationGen`] — the ServeGen-grade client population
+//!   ([`population`]): per-client MMPP / closed-loop / Poisson
+//!   processes, diurnal curves, multi-turn [`session`]s with growing
+//!   context and re-attached media, and chat/agent/batch categories
+//!   mapped onto SLO tiers.
+//!
+//! [`trace`] persists either engine's output (format v2 carries the
+//! lifecycle fields) and [`scale_trace`] replays a trace at k× rate.
 
 pub mod generator;
+pub mod population;
+pub mod session;
 pub mod trace;
 
 pub use generator::{Mix, WorkloadGen, MIX_MH, MIX_ML, MIX_T0, MIX_VH};
-pub use trace::{load_trace, save_trace};
+pub use population::{
+    ArrivalProcess, Category, CategoryParams, DiurnalCurve, MmppPhases, PopulationGen, ReqMeta,
+    WorkloadSpec,
+};
+pub use session::{sample_session, SessionParams, TurnReq};
+pub use trace::{load_trace, save_trace, scale_trace};

@@ -1,0 +1,201 @@
+//! Multi-turn session model for the client-population engine.
+//!
+//! ServeGen's characterization (PAPERS.md) shows production MLLM traffic
+//! is dominated by *sessions*, not independent requests: a client asks a
+//! question about an image or video, reads the answer, and asks a
+//! follow-up — against the same attachment, with the conversation so far
+//! prepended to the prompt. Two properties matter for scheduling:
+//!
+//! * **Context grows turn-over-turn** — each follow-up carries the prior
+//!   prompt + response as context, so `text_tokens` ratchets upward and
+//!   late turns of a chat session are much heavier than its first.
+//! * **The attachment is re-sent** — the same image/video (drawn once
+//!   per session) re-attaches on every turn, so a video session is a
+//!   *stream* of rocks, not one.
+//!
+//! Virtual time only; every draw comes from the caller's seeded [`Rng`].
+
+use crate::model::ModelProfile;
+use crate::request::{Modality, Request};
+use crate::util::rng::Rng;
+use crate::workload::generator::{self, DatasetParams};
+
+/// Parameters of the multi-turn session model (one instance per client
+/// category — chat, agent, batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionParams {
+    /// Probability the session continues after each turn (geometric
+    /// session length; mean turns = 1/(1-p), truncated by `max_turns`).
+    pub continue_p: f64,
+    /// Hard cap on turns per session (keeps the carried context well
+    /// below `context_cap`, preserving strict growth).
+    pub max_turns: u32,
+    /// Mean think time between a turn's completion and the follow-up, s.
+    pub think_mean_s: f64,
+    /// Lognormal sigma of the think-time distribution.
+    pub think_sigma: f64,
+    /// Fraction of (prompt + output) tokens carried into the next turn's
+    /// context (1.0 = the full conversation is re-sent).
+    pub context_carry: f64,
+    /// Upper bound on carried context tokens.
+    pub context_cap: u32,
+}
+
+impl Default for SessionParams {
+    fn default() -> Self {
+        SessionParams {
+            continue_p: 2.0 / 3.0, // mean 3 turns
+            max_turns: 12,
+            think_mean_s: 4.0,
+            think_sigma: 0.6,
+            context_carry: 1.0,
+            context_cap: 65_536,
+        }
+    }
+}
+
+/// One turn of a sampled session. `req.id` and `req.slo_class` are left
+/// at their defaults — the population engine assigns both after the
+/// global arrival sort.
+#[derive(Debug, Clone)]
+pub struct TurnReq {
+    pub req: Request,
+    pub turn: u32,
+}
+
+/// Lognormal draw parameterized by its *mean* (not the underlying
+/// normal's mu): mu = ln(mean) - sigma^2/2.
+pub(crate) fn lognormal_with_mean(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
+    rng.lognormal(mean.max(1e-3).ln() - 0.5 * sigma * sigma, sigma)
+}
+
+/// Sample one complete session: the attachment is drawn once and
+/// re-attached on every turn; each follow-up arrives after the previous
+/// turn's isolated service time plus a think-time draw; carried context
+/// makes `text_tokens` strictly grow across turns (for `context_carry`
+/// = 1.0, since every turn adds a question and an answer).
+///
+/// Arrivals within the session are strictly increasing (service and
+/// think draws are strictly positive).
+pub fn sample_session(
+    rng: &mut Rng,
+    profile: &ModelProfile,
+    params: &DatasetParams,
+    sp: &SessionParams,
+    modality: Modality,
+    start: f64,
+) -> Vec<TurnReq> {
+    let (mm_tokens, video_duration_s) =
+        generator::draw_attachment(rng, profile, params, modality);
+    let mut out = Vec::new();
+    let mut arrival = start;
+    let mut carried: u32 = 0;
+    let max_turns = sp.max_turns.max(1);
+    for turn in 0..max_turns {
+        let output_tokens = generator::draw_output_tokens(rng, params);
+        // Turn 0 of a text session draws from the full Fig-2a prompt
+        // band; every follow-up (any modality) is a short question on
+        // top of the carried context.
+        let question = if turn == 0 && modality == Modality::Text {
+            generator::draw_text_tokens(rng, params)
+        } else {
+            generator::draw_question_tokens(rng, params)
+        };
+        let text_tokens = question.saturating_add(carried);
+        let req = Request {
+            arrival,
+            modality,
+            text_tokens,
+            mm_tokens,
+            video_duration_s,
+            output_tokens,
+            ..Request::default()
+        };
+        let service = profile.isolated_e2e(&req);
+        out.push(TurnReq { req, turn });
+        if turn + 1 >= max_turns || !rng.bool(sp.continue_p) {
+            break;
+        }
+        carried = (((text_tokens.saturating_add(output_tokens)) as f64) * sp.context_carry)
+            .min(sp.context_cap as f64) as u32;
+        arrival += service + lognormal_with_mean(rng, sp.think_mean_s, sp.think_sigma);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    fn sample(modality: Modality, seed: u64) -> Vec<TurnReq> {
+        let profile = by_name("llava-7b").unwrap();
+        let mut rng = Rng::new(seed);
+        sample_session(
+            &mut rng,
+            &profile,
+            &DatasetParams::default(),
+            &SessionParams::default(),
+            modality,
+            10.0,
+        )
+    }
+
+    #[test]
+    fn single_turn_possible_and_bounded() {
+        for seed in 0..50 {
+            let s = sample(Modality::Text, seed);
+            assert!(!s.is_empty());
+            assert!(s.len() <= SessionParams::default().max_turns as usize);
+            for (i, t) in s.iter().enumerate() {
+                assert_eq!(t.turn as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_and_context_strictly_increase() {
+        for seed in 0..50 {
+            for m in [Modality::Text, Modality::Image, Modality::Video] {
+                let s = sample(m, seed);
+                for w in s.windows(2) {
+                    assert!(w[1].req.arrival > w[0].req.arrival);
+                    assert!(
+                        w[1].req.text_tokens > w[0].req.text_tokens,
+                        "context must grow: {} then {}",
+                        w[0].req.text_tokens,
+                        w[1].req.text_tokens
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attachment_is_reattached_every_turn() {
+        let mut seen_multi = false;
+        for seed in 0..80 {
+            let s = sample(Modality::Video, seed);
+            let first = &s[0].req;
+            assert!(first.mm_tokens > 0);
+            for t in &s {
+                assert_eq!(t.req.mm_tokens, first.mm_tokens);
+                assert_eq!(t.req.video_duration_s.to_bits(), first.video_duration_s.to_bits());
+            }
+            seen_multi |= s.len() >= 3;
+        }
+        assert!(seen_multi, "no session reached 3 turns — test is vacuous");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = sample(Modality::Image, 7);
+        let b = sample(Modality::Image, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.req.arrival.to_bits(), y.req.arrival.to_bits());
+            assert_eq!(x.req.text_tokens, y.req.text_tokens);
+            assert_eq!(x.req.output_tokens, y.req.output_tokens);
+        }
+    }
+}

@@ -4,22 +4,58 @@
 //! arrival sequence, and (b) replaying externally produced traces (e.g.
 //! ServeGen-style production characterizations) through the coordinator.
 //!
-//! Format (one request per line, `#` comments):
+//! Format v2 (one request per line, `#` comments):
 //!   id arrival modality text_tokens mm_tokens video_dur_s output_tokens
+//!   deadline_s slo_class
+//! where `deadline_s` is a float or `-` (none) and `slo_class` is
+//! `critical` | `standard` | `best-effort` | `-` (none). Floats are
+//! written with Rust's shortest-roundtrip `Display`, so save → load is
+//! exact (`==` on every field) — the old `{:.6}`/`{:.3}` fixed-point
+//! formatting truncated arrivals and durations, which broke bit-identity
+//! between a generated trace and its replay.
+//!
+//! v1 lines (the same first 7 fields, no lifecycle columns) still load,
+//! with `deadline_s`/`slo_class` defaulting to `None`. v1 *saved* traces
+//! silently dropped both fields, which erased every SLO from a
+//! deadline-mix trace on replay — the v2 columns fix that.
+//!
+//! Loaded requests pass through [`Request::sanitize`]: a trace file is an
+//! untrusted input, and a hand-edited NaN arrival must degrade to a
+//! servable request rather than poison virtual time.
 
-use crate::request::{Modality, Request};
+use crate::request::{Modality, Request, SloClass};
 use std::io::{BufRead, Write};
 use std::path::Path;
 
 pub fn save_trace(path: &Path, reqs: &[Request]) -> std::io::Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "# id arrival modality text_tokens mm_tokens video_dur_s output_tokens")?;
+    writeln!(f, "# tcm-trace v2")?;
+    writeln!(
+        f,
+        "# id arrival modality text_tokens mm_tokens video_dur_s output_tokens \
+         deadline_s slo_class"
+    )?;
     for r in reqs {
+        let deadline = match r.deadline_s {
+            Some(d) => d.to_string(),
+            None => "-".into(),
+        };
+        let slo = match r.slo_class {
+            Some(c) => c.name(),
+            None => "-",
+        };
         writeln!(
             f,
-            "{} {:.6} {} {} {} {:.3} {}",
-            r.id, r.arrival, r.modality, r.text_tokens, r.mm_tokens, r.video_duration_s,
-            r.output_tokens
+            "{} {} {} {} {} {} {} {} {}",
+            r.id,
+            r.arrival,
+            r.modality,
+            r.text_tokens,
+            r.mm_tokens,
+            r.video_duration_s,
+            r.output_tokens,
+            deadline,
+            slo
         )?;
     }
     Ok(())
@@ -41,8 +77,8 @@ pub fn load_trace(path: &Path) -> std::io::Result<Vec<Request>> {
                 format!("trace line {}: {msg}: '{line}'", lineno + 1),
             )
         };
-        if fields.len() != 7 {
-            return Err(err("expected 7 fields"));
+        if fields.len() != 7 && fields.len() != 9 {
+            return Err(err("expected 7 (v1) or 9 (v2) fields"));
         }
         let modality = match fields[2] {
             "text" => Modality::Text,
@@ -50,7 +86,15 @@ pub fn load_trace(path: &Path) -> std::io::Result<Vec<Request>> {
             "video" => Modality::Video,
             _ => return Err(err("bad modality")),
         };
-        out.push(Request {
+        let deadline_s = match fields.get(7) {
+            None | Some(&"-") => None,
+            Some(s) => Some(s.parse().map_err(|_| err("bad deadline_s"))?),
+        };
+        let slo_class = match fields.get(8) {
+            None | Some(&"-") => None,
+            Some(s) => Some(SloClass::by_name(s).ok_or_else(|| err("bad slo_class"))?),
+        };
+        let req = Request {
             id: fields[0].parse().map_err(|_| err("bad id"))?,
             arrival: fields[1].parse().map_err(|_| err("bad arrival"))?,
             modality,
@@ -58,10 +102,45 @@ pub fn load_trace(path: &Path) -> std::io::Result<Vec<Request>> {
             mm_tokens: fields[4].parse().map_err(|_| err("bad mm_tokens"))?,
             video_duration_s: fields[5].parse().map_err(|_| err("bad video_dur"))?,
             output_tokens: fields[6].parse().map_err(|_| err("bad output_tokens"))?,
-            ..Request::default()
-        });
+            deadline_s,
+            slo_class,
+        };
+        out.push(req.sanitize());
     }
     Ok(out)
+}
+
+/// Replay a recorded trace at `k`× rate: tile `k` time-shifted copies of
+/// the trace end-to-end, then compress time by `k`. The result offers
+/// `k`× the request count at `k`× the arrival rate with the *same*
+/// per-copy request shapes, so modality mix and relative order within
+/// each copy are preserved exactly (time compression is monotone).
+///
+/// Id remapping is stable: copy `c` of original id `i` becomes
+/// `c * (max_id + 1) + i` — rerunning with the same inputs yields the
+/// same ids, and copy 0 keeps the original ids. Copies are separated by
+/// one mean inter-arrival gap so the seam does not stack arrivals.
+/// `k = 1` returns the trace unchanged (modulo the global arrival sort).
+pub fn scale_trace(trace: &[Request], k: usize) -> Vec<Request> {
+    if trace.is_empty() {
+        return Vec::new();
+    }
+    let max_arrival = trace.iter().map(|r| r.arrival).fold(0.0_f64, f64::max);
+    let max_id = trace.iter().map(|r| r.id).max().unwrap_or(0);
+    let stride = max_id + 1;
+    let period = max_arrival + max_arrival / trace.len() as f64;
+    let kf = k as f64;
+    let mut out = Vec::with_capacity(trace.len() * k);
+    for c in 0..k as u64 {
+        for r in trace {
+            let mut r2 = r.clone();
+            r2.arrival = (r.arrival + c as f64 * period) / kf;
+            r2.id = c * stride + r.id;
+            out.push(r2);
+        }
+    }
+    out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    out
 }
 
 #[cfg(test)]
@@ -70,24 +149,65 @@ mod tests {
     use crate::model::by_name;
     use crate::workload::{WorkloadGen, MIX_MH};
 
+    fn assert_exact(a: &Request, b: &Request) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.modality, b.modality);
+        assert_eq!(a.text_tokens, b.text_tokens);
+        assert_eq!(a.mm_tokens, b.mm_tokens);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        // bitwise — shortest-roundtrip formatting guarantees exactness
+        assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "id={}", a.id);
+        assert_eq!(a.video_duration_s.to_bits(), b.video_duration_s.to_bits());
+        assert_eq!(a.deadline_s, b.deadline_s);
+        assert_eq!(a.slo_class, b.slo_class);
+    }
+
     #[test]
-    fn roundtrip() {
+    fn roundtrip_is_exact_including_lifecycle_fields() {
         let dir = std::env::temp_dir().join("tcm_trace_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.trace");
-        let reqs =
+        let mut reqs =
             WorkloadGen::new(&by_name("llava-7b").unwrap(), MIX_MH, 2.0, 1).generate(200);
+        // decorate with the fig_lifecycle deadline/SLO mix so the
+        // lifecycle columns are non-vacuous
+        for r in reqs.iter_mut() {
+            if r.id % 3 == 0 {
+                r.slo_class = Some(SloClass::Critical);
+                r.deadline_s = Some(2.5 + r.id as f64 * 0.125);
+            } else if r.id % 5 == 0 {
+                r.slo_class = Some(SloClass::BestEffort);
+            }
+        }
         save_trace(&path, &reqs).unwrap();
         let loaded = load_trace(&path).unwrap();
         assert_eq!(loaded.len(), reqs.len());
         for (a, b) in reqs.iter().zip(&loaded) {
-            assert_eq!(a.id, b.id);
-            assert_eq!(a.modality, b.modality);
-            assert_eq!(a.text_tokens, b.text_tokens);
-            assert_eq!(a.mm_tokens, b.mm_tokens);
-            assert_eq!(a.output_tokens, b.output_tokens);
-            assert!((a.arrival - b.arrival).abs() < 1e-5);
+            assert_exact(a, b);
         }
+        assert!(loaded.iter().any(|r| r.slo_class == Some(SloClass::Critical)));
+        assert!(loaded.iter().any(|r| r.deadline_s.is_some()));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn v1_seven_field_lines_still_load() {
+        let dir = std::env::temp_dir().join("tcm_trace_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.trace");
+        std::fs::write(
+            &path,
+            "# id arrival modality text_tokens mm_tokens video_dur_s output_tokens\n\
+             0 0.125 text 40 0 0.000 99\n\
+             1 1.500 video 20 5000 60.000 17\n",
+        )
+        .unwrap();
+        let t = load_trace(&path).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].deadline_s, None);
+        assert_eq!(t[0].slo_class, None);
+        assert_eq!(t[1].modality, Modality::Video);
+        assert_eq!(t[1].video_duration_s, 60.0);
         std::fs::remove_file(path).unwrap();
     }
 
@@ -100,7 +220,68 @@ mod tests {
         assert!(load_trace(&path).is_err());
         std::fs::write(&path, "1 0.0 hologram 10 0 0 5\n").unwrap();
         assert!(load_trace(&path).is_err());
+        std::fs::write(&path, "1 0.0 text 10 0 0 5 - platinum\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        std::fs::write(&path, "1 0.0 text 10 0 0 5 soon -\n").unwrap();
+        assert!(load_trace(&path).is_err());
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn hostile_floats_pass_through_sanitize() {
+        // A trace file is untrusted input: NaN/inf floats must degrade
+        // per `Request::sanitize`, not leak into virtual time.
+        let dir = std::env::temp_dir().join("tcm_trace_hostile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("h.trace");
+        std::fs::write(
+            &path,
+            "0 NaN text 10 0 0 5 - -\n\
+             1 2.5 video 10 5000 inf 5 - -\n\
+             2 3.0 text 10 0 0 5 -inf critical\n",
+        )
+        .unwrap();
+        let t = load_trace(&path).unwrap();
+        assert_eq!(t[0].arrival, 0.0);
+        assert_eq!(t[1].video_duration_s, 0.0);
+        assert_eq!(t[2].deadline_s, None);
+        assert_eq!(t[2].slo_class, Some(SloClass::Critical));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn scale_trace_preserves_order_mix_and_copy0_bits() {
+        let reqs =
+            WorkloadGen::new(&by_name("llava-7b").unwrap(), MIX_MH, 2.0, 3).generate(150);
+        let scaled = scale_trace(&reqs, 4);
+        assert_eq!(scaled.len(), reqs.len() * 4);
+        // arrivals sorted, ids stable per copy
+        for w in scaled.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // copy 0 keeps original ids with arrivals exactly divided by k
+        for r in &reqs {
+            let copy0 = scaled.iter().find(|s| s.id == r.id).unwrap();
+            assert_eq!(copy0.arrival.to_bits(), (r.arrival / 4.0).to_bits());
+            assert_eq!(copy0.text_tokens, r.text_tokens);
+        }
+        // modality mix is exactly k× the original
+        for m in crate::request::Modality::ALL {
+            let orig = reqs.iter().filter(|r| r.modality == m).count();
+            let got = scaled.iter().filter(|r| r.modality == m).count();
+            assert_eq!(got, orig * 4, "{m}");
+        }
+        // ~4× the arrival rate over the same shape of time
+        let span = scaled.last().unwrap().arrival;
+        let orig_span = reqs.last().unwrap().arrival;
+        assert!(span < orig_span * 1.3, "span={span} orig={orig_span}");
+        // k = 1 is the identity (post-sort)
+        let same = scale_trace(&reqs, 1);
+        for (a, b) in reqs.iter().zip(&same) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+        assert!(scale_trace(&[], 3).is_empty());
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Property sweep for the client-population workload engine.
+//!
+//! The engine must be usable as a *reproducibility instrument*: every
+//! figure regenerated from a (spec, seed) pair has to be bit-identical
+//! run to run, and the structural claims the benches narrate (growing
+//! session context, re-attached media, MMPP burstiness, k×-scaled
+//! replays) have to hold for any seed, not just the one a bench
+//! happened to pick. This sweep checks those invariants across the CI
+//! 3-seed matrix (`WORKLOAD_PROPTEST_SEED=1|2|3` selects one seed;
+//! unset runs all three):
+//!
+//!   1. generation is a pure function of (spec, seed, n) — bitwise —
+//!      and different seeds actually diverge;
+//!   2. within a session: arrivals strictly increase, context
+//!      (text_tokens) grows monotonically, and the same attachment
+//!      (mm_tokens, video_duration_s) is re-sent bit-identically on
+//!      every turn;
+//!   3. the MMPP phase process spends ~duty of its time in the on
+//!      phase over a long horizon;
+//!   4. `scale_trace` at k× preserves copy-0 bits (up to the exact
+//!      /k time compression), relative order, and the modality mix;
+//!   5. a mid-run mix flip shows up in the modality composition;
+//!   6. a population trace (deadlines + SLO classes included) survives
+//!      the v2 on-disk format bit-exactly.
+
+use tcm_serve::config::WorkloadConfig;
+use tcm_serve::model::by_name;
+use tcm_serve::request::{Modality, Request};
+use tcm_serve::util::rng::Rng;
+use tcm_serve::workload::{
+    load_trace, save_trace, scale_trace, Mix, MmppPhases, PopulationGen, ReqMeta, WorkloadSpec,
+};
+
+const SEED_MATRIX: [u64; 3] = [0x9001_5EED_0001, 0x9001_5EED_0002, 0x9001_5EED_0003];
+
+fn seeds_to_run() -> Vec<u64> {
+    match std::env::var("WORKLOAD_PROPTEST_SEED") {
+        Ok(v) => {
+            let i: usize = v.parse().unwrap_or_else(|_| {
+                panic!("WORKLOAD_PROPTEST_SEED must be 1..={}, got {v:?}", SEED_MATRIX.len())
+            });
+            assert!(
+                (1..=SEED_MATRIX.len()).contains(&i),
+                "WORKLOAD_PROPTEST_SEED must be 1..={}, got {i}",
+                SEED_MATRIX.len()
+            );
+            vec![SEED_MATRIX[i - 1]]
+        }
+        Err(_) => SEED_MATRIX.to_vec(),
+    }
+}
+
+fn population(mix: Mix, rate: f64, seed: u64, n: usize) -> (Vec<Request>, Vec<ReqMeta>) {
+    let profile = by_name("llava-7b").unwrap();
+    let spec = WorkloadSpec::from_config(&WorkloadConfig::default(), mix, rate);
+    PopulationGen::new(&profile, spec, seed).generate_with_meta(n)
+}
+
+fn assert_bitwise_eq(a: &[Request], b: &[Request], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: lengths diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{label}: ids diverged");
+        assert_eq!(
+            x.arrival.to_bits(),
+            y.arrival.to_bits(),
+            "{label}: arrival bits diverged at id {}",
+            x.id
+        );
+        assert_eq!(x.modality, y.modality, "{label}: modality diverged at id {}", x.id);
+        assert_eq!(x.text_tokens, y.text_tokens, "{label}: text diverged at id {}", x.id);
+        assert_eq!(x.mm_tokens, y.mm_tokens, "{label}: mm diverged at id {}", x.id);
+        assert_eq!(
+            x.video_duration_s.to_bits(),
+            y.video_duration_s.to_bits(),
+            "{label}: video_dur bits diverged at id {}",
+            x.id
+        );
+        assert_eq!(x.output_tokens, y.output_tokens, "{label}: output diverged at id {}", x.id);
+        assert_eq!(x.deadline_s, y.deadline_s, "{label}: deadline diverged at id {}", x.id);
+        assert_eq!(x.slo_class, y.slo_class, "{label}: slo diverged at id {}", x.id);
+    }
+}
+
+/// 1. Same (spec, seed, n) → bit-identical populations; a different
+/// seed must actually change the trace (the engine is seeded, not
+/// seed-blind).
+#[test]
+fn population_is_bit_deterministic_per_seed() {
+    for seed in seeds_to_run() {
+        for mix in [tcm_serve::workload::MIX_MH, tcm_serve::workload::MIX_VH] {
+            let (a, ma) = population(mix, 3.0, seed, 250);
+            let (b, mb) = population(mix, 3.0, seed, 250);
+            assert_bitwise_eq(&a, &b, &format!("seed {seed:#x} mix {}", mix.name));
+            assert_eq!(ma, mb, "seed {seed:#x}: provenance diverged between identical runs");
+            let (c, _) = population(mix, 3.0, seed ^ 0xDEAD_BEEF, 250);
+            assert!(
+                a.iter().zip(&c).any(|(x, y)| x.arrival.to_bits() != y.arrival.to_bits()),
+                "seed {seed:#x}: a different seed produced an identical trace"
+            );
+        }
+    }
+}
+
+/// 2. Session structure: grouping requests by (client, session) and
+/// walking turns in order, arrivals and context must strictly grow and
+/// the attachment drawn at turn 0 must be re-sent bit-identically.
+#[test]
+fn sessions_grow_context_and_reattach_media() {
+    for seed in seeds_to_run() {
+        let (reqs, meta) = population(tcm_serve::workload::MIX_VH, 3.0, seed, 300);
+        let mut sessions: std::collections::BTreeMap<(u32, u32), Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, m) in meta.iter().enumerate() {
+            sessions.entry((m.client, m.session)).or_default().push(i);
+        }
+        let mut deep = 0usize;
+        let mut mm_deep = 0usize;
+        for ((client, session), mut idx) in sessions {
+            idx.sort_by_key(|&i| meta[i].turn);
+            // turns must be the contiguous prefix 0..k (whole sessions
+            // are emitted; a truncated tail drops whole turns from the
+            // end, never the middle)
+            for (k, &i) in idx.iter().enumerate() {
+                assert_eq!(
+                    meta[i].turn as usize,
+                    k,
+                    "seed {seed:#x}: client {client} session {session} has a turn gap"
+                );
+            }
+            if idx.len() >= 2 {
+                deep += 1;
+            }
+            let head = &reqs[idx[0]];
+            for w in idx.windows(2) {
+                let (a, b) = (&reqs[w[0]], &reqs[w[1]]);
+                assert!(
+                    b.arrival > a.arrival,
+                    "seed {seed:#x}: turn arrivals not strictly increasing"
+                );
+                assert!(
+                    b.text_tokens > a.text_tokens,
+                    "seed {seed:#x}: context did not grow (turn {} {} -> {})",
+                    meta[w[1]].turn,
+                    a.text_tokens,
+                    b.text_tokens
+                );
+                assert_eq!(
+                    b.mm_tokens,
+                    head.mm_tokens,
+                    "seed {seed:#x}: attachment changed mid-session"
+                );
+                assert_eq!(
+                    b.video_duration_s.to_bits(),
+                    head.video_duration_s.to_bits(),
+                    "seed {seed:#x}: video duration changed mid-session"
+                );
+                assert_eq!(b.modality, head.modality, "seed {seed:#x}: modality changed");
+            }
+            if idx.len() >= 2 && head.mm_tokens > 0 {
+                mm_deep += 1;
+            }
+        }
+        assert!(deep >= 1, "seed {seed:#x}: no multi-turn session in 300 requests (vacuous)");
+        assert!(
+            mm_deep >= 1,
+            "seed {seed:#x}: no multi-turn multimodal session under VH (vacuous re-attach check)"
+        );
+    }
+}
+
+/// 3. The MMPP phase process, driven on its own, spends ~duty of a
+/// long horizon in the on phase.
+#[test]
+fn mmpp_phase_occupancy_matches_duty() {
+    for seed in seeds_to_run() {
+        for (mean_on, mean_off) in [(20.0, 60.0), (10.0, 10.0), (30.0, 7.5)] {
+            let duty = mean_on / (mean_on + mean_off);
+            let mut rng = Rng::new(seed);
+            let mut phases = MmppPhases::init(&mut rng, mean_on, mean_off);
+            let horizon = 300_000.0;
+            let mut t = 0.0;
+            let mut on_time = 0.0;
+            while phases.phase_end_s < horizon {
+                if phases.on {
+                    on_time += phases.phase_end_s - t;
+                }
+                t = phases.phase_end_s;
+                phases.flip(&mut rng);
+            }
+            if phases.on {
+                on_time += horizon - t;
+            }
+            let occupancy = on_time / horizon;
+            assert!(
+                (occupancy - duty).abs() < 0.02,
+                "seed {seed:#x}: on-occupancy {occupancy:.4} vs duty {duty:.4}"
+            );
+        }
+    }
+}
+
+/// 4. k×-scaled replay: copy 0 keeps the original ids and its arrivals
+/// are exactly arrival/k; the result is sorted; the modality mix is
+/// exactly k copies of the original.
+#[test]
+fn scaled_trace_preserves_order_mix_and_copy0() {
+    for seed in seeds_to_run() {
+        let (trace, _) = population(tcm_serve::workload::MIX_MH, 3.0, seed, 200);
+        let k = 3;
+        let scaled = scale_trace(&trace, k);
+        assert_eq!(scaled.len(), k * trace.len());
+        for w in scaled.windows(2) {
+            assert!(
+                w[1].arrival >= w[0].arrival,
+                "seed {seed:#x}: scaled trace not sorted by arrival"
+            );
+        }
+        let max_id = trace.iter().map(|r| r.id).max().unwrap_or(0);
+        let mut copy0: Vec<&Request> = scaled.iter().filter(|r| r.id <= max_id).collect();
+        copy0.sort_by_key(|r| r.id);
+        assert_eq!(copy0.len(), trace.len(), "seed {seed:#x}: copy 0 lost requests");
+        for (orig, s) in trace.iter().zip(&copy0) {
+            assert_eq!(orig.id, s.id);
+            assert_eq!(
+                (orig.arrival / k as f64).to_bits(),
+                s.arrival.to_bits(),
+                "seed {seed:#x}: copy-0 arrival is not exactly arrival/k"
+            );
+            assert_eq!(orig.modality, s.modality);
+            assert_eq!(orig.text_tokens, s.text_tokens);
+            assert_eq!(orig.mm_tokens, s.mm_tokens);
+            assert_eq!(orig.output_tokens, s.output_tokens);
+            assert_eq!(orig.slo_class, s.slo_class);
+        }
+        for m in Modality::ALL {
+            let orig = trace.iter().filter(|r| r.modality == m).count();
+            let got = scaled.iter().filter(|r| r.modality == m).count();
+            assert_eq!(got, k * orig, "seed {seed:#x}: {m} mix not preserved under scaling");
+        }
+        // k = 1 is the exact identity
+        assert_bitwise_eq(&trace, &scale_trace(&trace, 1), &format!("seed {seed:#x} k=1"));
+    }
+}
+
+/// 5. A VH → ML flip mid-run must show up as a drop in the video
+/// fraction after the flip.
+#[test]
+fn mix_flip_shifts_modality_composition() {
+    for seed in seeds_to_run() {
+        let profile = by_name("llava-7b").unwrap();
+        let mut w = WorkloadConfig::default();
+        w.engine = "population".into();
+        w.mix_flip_at_s = 50.0;
+        w.mix_flip_to = "ML".into();
+        let spec = WorkloadSpec::from_config(&w, tcm_serve::workload::MIX_VH, 3.0);
+        let reqs = PopulationGen::new(&profile, spec, seed).generate(400);
+        let frac = |lo: f64, hi: f64| {
+            let win: Vec<_> = reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).collect();
+            assert!(!win.is_empty(), "seed {seed:#x}: empty window [{lo}, {hi})");
+            win.iter().filter(|r| r.modality == Modality::Video).count() as f64 / win.len() as f64
+        };
+        let last = reqs.last().map(|r| r.arrival).unwrap_or(0.0);
+        let before = frac(0.0, 50.0);
+        // sessions started before the flip keep their modality across
+        // later turns, so measure well after the boundary
+        let after = frac(70.0, last + 1.0);
+        assert!(
+            after < before,
+            "seed {seed:#x}: video fraction did not drop across the flip \
+             ({before:.3} -> {after:.3})"
+        );
+    }
+}
+
+/// 6. A population trace — deadlines and SLO classes included — must
+/// survive the v2 on-disk format bit-exactly.
+#[test]
+fn population_trace_roundtrips_exactly() {
+    let dir = std::env::temp_dir().join("tcm_workload_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in seeds_to_run() {
+        let (mut trace, _) = population(tcm_serve::workload::MIX_VH, 3.0, seed, 150);
+        // the population engine stamps slo_class; add deadlines the way
+        // the lifecycle path does so both v2 columns are non-vacuous
+        for r in trace.iter_mut() {
+            if r.id % 4 == 0 {
+                r.deadline_s = Some(r.arrival + 2.5);
+            }
+        }
+        assert!(
+            trace.iter().any(|r| r.slo_class.is_some()),
+            "seed {seed:#x}: population engine stopped stamping slo_class"
+        );
+        let path = dir.join(format!("pop_{seed:x}.trace"));
+        save_trace(&path, &trace).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        assert_bitwise_eq(&trace, &loaded, &format!("seed {seed:#x} roundtrip"));
+        std::fs::remove_file(path).unwrap();
+    }
+}
