@@ -1,0 +1,199 @@
+//! fig_elastic — the elastic control plane against every static
+//! configuration on the PR-9 mix-flip trace.
+//!
+//! Scenario: a client population floods the fleet with pure text
+//! (`T0`) and flips video-heavy (`VH`) at t=25s, at a rate that
+//! overloads any single replica. Every static arm is wrong in one of
+//! the two regimes:
+//!
+//!   * the static modality-partition split (1/1/2 at n=4) pins sand to
+//!     one replica, so the text flood queues unboundedly before the
+//!     flip;
+//!   * round-robin and least-work survive the flood (all four replicas
+//!     take text) but mix videos into every queue after the flip, so
+//!     late sand requests wait behind multi-second video prefills;
+//!   * the elastic controller starts at 1/1/2, reads the text queue at
+//!     the first epoch, drains an idle rock into sand (2/1/1) within
+//!     seconds, then gives the replica back to the rocks after the
+//!     flip — low sand tails in both regimes.
+//!
+//! All arms run fcfs so the comparison isolates the partition dimension
+//! (policy-level mitigation is fig_servegen's subject). Sand p99 TTFT
+//! is hard-asserted: elastic strictly beats every static arm, and the
+//! elastic run is bit-deterministic. A second section grows the encoder
+//! pool under the post-flip video backlog.
+//!
+//! With `BENCH_JSON=path` set each arm lands in the JSONL sink;
+//! `elastic/flip/elastic/sand-p99-ttft` is the hot-gated headline.
+
+use tcm_serve::bench_harness::record_named;
+use tcm_serve::cluster::Cluster;
+use tcm_serve::config::ServeConfig;
+use tcm_serve::experiments::make_trace;
+use tcm_serve::model::by_name;
+use tcm_serve::request::Modality;
+
+const FLIP_AT_S: f64 = 25.0;
+
+fn cfg() -> ServeConfig {
+    let mut c = ServeConfig::default();
+    c.model = "llava-7b".into();
+    c.policy = "fcfs".into();
+    c.mix = "T0".into();
+    c.rate = 10.0;
+    c.num_requests = 500;
+    c.seed = 17;
+    c.cluster.replicas = 4;
+    c.cluster.router = "modality-partition".into();
+    c.workload.engine = "population".into();
+    c.workload.mix_flip_at_s = FLIP_AT_S;
+    c.workload.mix_flip_to = "VH".into();
+    c
+}
+
+fn elastic_cfg() -> ServeConfig {
+    let mut c = cfg();
+    c.elastic.enabled = true;
+    c.elastic.epoch_s = 1.0;
+    c.elastic.hysteresis = 0.25;
+    c.elastic.cooldown_epochs = 0;
+    c
+}
+
+/// Run one arm and return (sand p99 TTFT, sand mean, rock mean, report).
+fn run_arm(c: &ServeConfig, trace: &[tcm_serve::request::Request]) -> (f64, f64, f64, Cluster) {
+    let mut cluster = Cluster::new(c);
+    let cr = cluster.run(trace.to_vec());
+    assert_eq!(cr.report.total(), trace.len(), "conservation");
+    let sand = cr.report.by_modality(Modality::Text);
+    let rocks = cr.report.by_modality(Modality::Video);
+    (sand.p99_ttft, sand.avg_ttft, rocks.avg_ttft, cluster)
+}
+
+fn main() {
+    let base = cfg();
+    let profile = by_name(&base.model).unwrap();
+    let trace = make_trace(&base, &profile);
+    let n = trace.len();
+
+    println!(
+        "=== fig_elastic — T0→VH flip @ {FLIP_AT_S}s, {} req/s, 4 replicas ===",
+        base.rate
+    );
+
+    // trace shape: the flip must move video share from ~zero to heavy
+    let vfrac = |lo: f64, hi: f64| {
+        let mut total = 0usize;
+        let mut videos = 0usize;
+        for r in &trace {
+            if r.arrival >= lo && r.arrival < hi {
+                total += 1;
+                if r.modality == Modality::Video {
+                    videos += 1;
+                }
+            }
+        }
+        (videos as f64 / total.max(1) as f64, total)
+    };
+    let last = trace.iter().map(|r| r.arrival).fold(0.0_f64, f64::max);
+    let (v_before, n_before) = vfrac(0.0, FLIP_AT_S);
+    let (v_after, n_after) = vfrac(FLIP_AT_S, last + 1.0);
+    println!(
+        "video fraction: {:.1}% of {n_before} before the flip → {:.1}% of {n_after} after",
+        v_before * 100.0,
+        v_after * 100.0
+    );
+    assert!(n_before > 0 && n_after > 0, "flip must split the run");
+    assert!(v_after > v_before, "the flip must raise video share");
+
+    // ------------------------------------------------------------------
+    // elastic vs every static arm on sand p99 TTFT
+    // ------------------------------------------------------------------
+    println!("\n--- sand p99 TTFT, elastic vs static (fcfs) ---");
+    let mut static_p99 = Vec::new();
+    for router in ["round-robin", "least-work", "modality-partition"] {
+        let mut c = base.clone();
+        c.cluster.router = router.into();
+        let (p99, mean, rock_mean, _) = run_arm(&c, &trace);
+        println!(
+            "static {:<18} sand p99-ttft={:>8.3}s mean={:>8.3}s | rocks mean={:>8.3}s",
+            router, p99, mean, rock_mean
+        );
+        record_named(&format!("elastic/flip/{router}/sand-p99-ttft"), p99 * 1e9, None, false);
+        static_p99.push((router, p99));
+    }
+
+    let ec = elastic_cfg();
+    let (e_p99, e_mean, e_rock_mean, cluster) = run_arm(&ec, &trace);
+    let snap = cluster.elastic_snapshot().expect("controller attached");
+    println!(
+        "elastic {:<17} sand p99-ttft={:>8.3}s mean={:>8.3}s | rocks mean={:>8.3}s",
+        "(partition)", e_p99, e_mean, e_rock_mean
+    );
+    println!(
+        "controller: epochs={} drains={} repartitions={} groups={}/{}/{} (sand/pebble/rock)",
+        snap.stats.epochs,
+        snap.stats.drains_started,
+        snap.stats.repartitions,
+        snap.sand.len(),
+        snap.pebble.len(),
+        snap.rock.len()
+    );
+    record_named("elastic/flip/elastic/sand-p99-ttft", e_p99 * 1e9, None, true);
+
+    assert!(snap.stats.repartitions >= 1, "controller never repartitioned: {:?}", snap.stats);
+    assert_eq!(snap.stats.max_active_at_flip, 0, "replica flipped groups while occupied");
+    for (router, p99) in &static_p99 {
+        assert!(
+            e_p99 < *p99,
+            "elastic sand p99 {e_p99:.3}s does not beat static {router} ({p99:.3}s)"
+        );
+    }
+    println!("elastic beats every static arm on sand p99: yes");
+
+    // bit-determinism: the controller's decisions rerun identically
+    {
+        let (p99b, _, _, cluster2) = run_arm(&ec, &trace);
+        let snap2 = cluster2.elastic_snapshot().expect("controller attached");
+        assert_eq!(e_p99.to_bits(), p99b.to_bits(), "elastic rerun diverged");
+        assert_eq!(snap.stats, snap2.stats, "controller decisions diverged");
+        assert_eq!(
+            (&snap.sand, &snap.pebble, &snap.rock),
+            (&snap2.sand, &snap2.pebble, &snap2.rock)
+        );
+        println!("rerun bit-identity: ok (stats {:?})", snap.stats);
+    }
+
+    // ------------------------------------------------------------------
+    // encoder-pool elasticity under the post-flip video backlog
+    // ------------------------------------------------------------------
+    println!("\n--- encoder pool: 1 slot, elastic up to 4 ---");
+    let mut pc = elastic_cfg();
+    pc.pool.enabled = true;
+    pc.pool.slots = 1;
+    pc.elastic.slots_min = 1;
+    pc.elastic.slots_max = 4;
+    let mut cluster = Cluster::new(&pc);
+    let cr = cluster.run(trace.clone());
+    assert_eq!(cr.report.total(), n, "pool arm: conservation");
+    let p = cr.pool.as_ref().expect("pool enabled");
+    let e = cr.elastic.as_ref().expect("controller attached");
+    println!(
+        "slots: start=1 peak={} now={} | grow_events={} shrink_events={} (controller grows={})",
+        p.max_concurrent_slots,
+        p.slots,
+        p.slot_grow_events,
+        p.slot_shrink_events,
+        e.stats.slot_grows
+    );
+    assert!(
+        p.slot_grow_events >= 1 && p.max_concurrent_slots >= 2,
+        "post-flip video backlog never grew the pool: {:?}",
+        p.stats
+    );
+
+    println!("\nExpected shape: the text flood overloads the static 1/1/2 split's single");
+    println!("sand replica while round-robin/least-work mix post-flip videos into every");
+    println!("queue; the controller re-partitions within seconds of each regime and grows");
+    println!("the encoder pool once the video backlog queues behind one slot.");
+}

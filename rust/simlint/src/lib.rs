@@ -449,6 +449,20 @@ mod tests {
     }
 
     #[test]
+    fn elastic_controller_is_inside_the_sim_core_scope() {
+        // the elastic controller is planner state: a hash-ordered
+        // occupancy map would reorder drain picks and an entropy-jittered
+        // epoch would make autoscaling decisions non-replayable, so the
+        // cluster/ prefix must keep covering the module
+        let (hash, _) = lint_source("cluster/elastic.rs", "use std::collections::HashMap;\n");
+        assert_eq!(hash.len(), 1, "hash rule must cover cluster/elastic.rs");
+        assert_eq!(hash[0].rule, RULE_HASH);
+        let (ent, _) = lint_source("cluster/elastic.rs", "let j = rand::random::<u64>();\n");
+        assert_eq!(ent.len(), 1, "entropy rule must cover cluster/elastic.rs");
+        assert_eq!(ent[0].rule, RULE_ENTROPY);
+    }
+
+    #[test]
     fn clock_rule_exempts_server_bench_main() {
         let src = "let t = std::time::Instant::now();\n";
         for exempt in ["server/mod.rs", "bench_harness.rs", "main.rs"] {

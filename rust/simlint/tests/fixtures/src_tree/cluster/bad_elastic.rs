@@ -1,0 +1,30 @@
+//! Fixture: the elastic control plane is sim-core scope — controller
+//! decisions must be pure functions of the epoch inputs, so hash-ordered
+//! occupancy maps, wall-clock epoch stamps, NaN-panicking score picks
+//! and entropy all fire under `cluster/` too.
+
+use std::collections::HashMap;
+
+pub struct BadController {
+    pub occupancy: HashMap<usize, u64>,
+}
+
+impl BadController {
+    pub fn epoch_stamp(&self) -> std::time::Instant {
+        std::time::Instant::now()
+    }
+
+    pub fn jittered_epoch(&self) -> f64 {
+        rand::random::<f64>()
+    }
+
+    pub fn best_group(&self, scores: &[f64]) -> usize {
+        let mut idx = 0;
+        for (i, s) in scores.iter().enumerate() {
+            if s.partial_cmp(&scores[idx]).unwrap() == std::cmp::Ordering::Greater {
+                idx = i;
+            }
+        }
+        idx
+    }
+}

@@ -3,8 +3,8 @@
 //! tier-1 wiring — the real `rust/src` tree must be hazard-free.
 //!
 //! Fixture trees live under `tests/fixtures/{src_tree,clean_tree}/` and
-//! mirror the scoping layout of `rust/src` (coordinator/, config/,
-//! server/, util/rng.rs).
+//! mirror the scoping layout of `rust/src` (coordinator/, cluster/,
+//! config/, server/, util/rng.rs).
 
 use simlint::{lint_dir, LintReport, RULES};
 use std::path::{Path, PathBuf};
@@ -36,10 +36,10 @@ fn every_rule_fires_at_least_once() {
 #[test]
 fn tripping_fixtures_fire_exact_counts() {
     let report = lint_fixture("src_tree");
-    assert_eq!(count(&report, "hash-container"), 9, "{:#?}", report.findings);
-    assert_eq!(count(&report, "wall-clock"), 3, "{:#?}", report.findings);
-    assert_eq!(count(&report, "partial-cmp-unwrap"), 3, "{:#?}", report.findings);
-    assert_eq!(count(&report, "entropy"), 4, "{:#?}", report.findings);
+    assert_eq!(count(&report, "hash-container"), 11, "{:#?}", report.findings);
+    assert_eq!(count(&report, "wall-clock"), 5, "{:#?}", report.findings);
+    assert_eq!(count(&report, "partial-cmp-unwrap"), 4, "{:#?}", report.findings);
+    assert_eq!(count(&report, "entropy"), 5, "{:#?}", report.findings);
     assert_eq!(count(&report, "config-panic"), 2, "{:#?}", report.findings);
 }
 

@@ -451,6 +451,26 @@ impl ServeBackend for Cluster {
                 p.stats.migrated_mm_tokens,
                 p.stats.migrated_bytes as f64 / 1e6
             ));
+            if p.slot_grow_events > 0 || p.slot_shrink_events > 0 {
+                lines.push(format!(
+                    "pool resize: grows={} shrinks={} peak_slots={}",
+                    p.slot_grow_events, p.slot_shrink_events, p.max_concurrent_slots
+                ));
+            }
+        }
+        if let Some(e) = self.elastic_snapshot() {
+            lines.push(format!(
+                "elastic: epochs={} drains={} repartitions={} slot_grows={} slot_shrinks={} \
+                 groups={}/{}/{} (sand/pebble/rock)",
+                e.stats.epochs,
+                e.stats.drains_started,
+                e.stats.repartitions,
+                e.stats.slot_grows,
+                e.stats.slot_shrinks,
+                e.sand.len(),
+                e.pebble.len(),
+                e.rock.len()
+            ));
         }
         let n = self.replica_count().max(1) as f64;
         let mean = sum_busy / n;
@@ -475,12 +495,14 @@ impl ServeBackend for Cluster {
 }
 
 /// Build the backend a config describes — a bare [`Scheduler`] over a
-/// simulated engine, or a [`Cluster`] when `cfg.cluster.replicas > 1` or
-/// the encoder pool is enabled. This is the single branch point every
-/// driver shares; a 1-replica no-pool config stays on the scheduler path
-/// (bit-identical to the pre-trait drivers).
+/// simulated engine, or a [`Cluster`] when `cfg.cluster.replicas > 1`,
+/// the encoder pool is enabled, or the elastic controller is on. This is
+/// the single branch point every driver shares; a 1-replica no-pool
+/// config stays on the scheduler path (bit-identical to the pre-trait
+/// drivers).
 pub fn build(cfg: &ServeConfig) -> Box<dyn ServeBackend> {
-    let inner: Box<dyn ServeBackend> = if cfg.cluster.replicas > 1 || cfg.pool.enabled {
+    let cluster = cfg.cluster.replicas > 1 || cfg.pool.enabled || cfg.elastic.enabled;
+    let inner: Box<dyn ServeBackend> = if cluster {
         Box::new(Cluster::new(cfg))
     } else {
         let profile = crate::model::by_name(&cfg.model).expect("validated model name");

@@ -45,12 +45,24 @@
 //! With the pool disabled, none of these paths run: the cluster is
 //! bit-identical to its pre-pool (PR 3) behavior, which
 //! `tests/encoder_pool.rs` pins for every router.
+//!
+//! # Elastic mode (`[elastic] enabled = true` / `--elastic`)
+//!
+//! With the [`elastic::ElasticController`] attached, the cluster runs a
+//! closed control loop on epoch boundaries of the virtual clock:
+//! demand-driven re-partitioning of the sand/pebble/rock groups
+//! (drain-then-reassign via [`Router::set_groups`]) and encoder-pool
+//! slot scaling ([`EncoderPool::resize`]). Every elastic code path is
+//! gated on the controller being `Some`, so elastic-off clusters are
+//! bit-identical to static ones (`tests/elastic_properties.rs`).
 
+pub mod elastic;
 pub mod pool;
 pub mod router;
 
+pub use elastic::{ElasticAction, ElasticController, ElasticSnapshot, ElasticStats};
 pub use pool::{EncoderPool, PoolSnapshot, PoolStats};
-pub use router::{build_router, partition_groups, ReplicaView, Router};
+pub use router::{build_router, partition_groups, partition_groups_with, ReplicaView, Router};
 
 use crate::config::ServeConfig;
 use crate::coordinator::{RequestEvent, Scheduler, StepOutcome};
@@ -93,6 +105,9 @@ pub struct ClusterReport {
     /// Encoder-pool counters (slots, waits, aging promotions, migration
     /// count/tokens/bytes); `None` when the pool is disabled.
     pub pool: Option<PoolSnapshot>,
+    /// Elastic-controller decisions and the final group partition;
+    /// `None` when the controller is off.
+    pub elastic: Option<ElasticSnapshot>,
 }
 
 impl ClusterReport {
@@ -160,6 +175,10 @@ pub struct Cluster {
     /// [`crate::obs::ObsEvent`]s and retain `events` across batch drains.
     obs: bool,
     obs_events: Vec<crate::obs::ObsEvent>,
+    /// Elastic control loop (`None` = static partition + fixed pool;
+    /// every elastic code path is gated on this being `Some`, mirroring
+    /// the pool field).
+    elastic: Option<ElasticController>,
 }
 
 impl Cluster {
@@ -182,6 +201,11 @@ impl Cluster {
         } else {
             None
         };
+        let elastic = if cfg.elastic.enabled {
+            Some(ElasticController::new(cfg.elastic.clone()))
+        } else {
+            None
+        };
         Cluster {
             replicas,
             router,
@@ -193,6 +217,7 @@ impl Cluster {
             migration_cost_s_per_ktok: cfg.pool.migration_cost_s_per_ktok,
             obs: false,
             obs_events: Vec::new(),
+            elastic,
         }
     }
 
@@ -238,6 +263,9 @@ impl Cluster {
             p.pool_queue_depth = pool.queue_depth() as u32;
             p.pool_aged_promotions = pool.stats.aged_promotions;
         }
+        if let Some((sand, pebble, rock)) = self.router.groups() {
+            p.group_sizes = [sand.len() as u32, pebble.len() as u32, rock.len() as u32];
+        }
         p
     }
 
@@ -265,16 +293,22 @@ impl Cluster {
     }
 
     /// Routing-time snapshot of every replica. `active` costs a scan of
-    /// the replica's request table; everything else is O(1).
+    /// the replica's request table; everything else is O(1). A replica
+    /// mid-drain (elastic group move) is flagged so the router stops
+    /// sending it new work; the flag is always `false` with the
+    /// controller off.
     pub fn views(&self) -> Vec<ReplicaView> {
+        let draining = self.elastic.as_ref().and_then(|c| c.draining_replica());
         self.replicas
             .iter()
-            .map(|r| ReplicaView {
+            .enumerate()
+            .map(|(i, r)| ReplicaView {
                 now: r.now(),
                 active: r.active_requests(),
                 waiting: r.waiting_len(),
                 running: r.running_len(),
                 kv_utilization: r.kv().utilization(),
+                draining: Some(i) == draining,
             })
             .collect()
     }
@@ -335,6 +369,9 @@ impl Cluster {
     /// Advance every replica clock to `t` (monotone, like
     /// [`Scheduler::advance_to`]). In pool mode, ingress and encoder-pool
     /// events due up to `t` are processed first, in global time order.
+    /// Elastic epochs that became due by `t` are evaluated after the
+    /// fleet reaches it, so the controller observes the state at the
+    /// boundary, not before.
     pub fn advance_to(&mut self, t: f64) {
         if self.pool.is_some() {
             self.process_due(t);
@@ -342,6 +379,7 @@ impl Cluster {
         for r in &mut self.replicas {
             r.advance_to(t);
         }
+        self.run_elastic_epochs();
     }
 
     /// Pool mode: deliver every ingress arrival and encoder-pool
@@ -443,6 +481,7 @@ impl Cluster {
     /// empty. Also reaps terminal state into the merged report and feeds
     /// terminal events to the router's ledger.
     pub fn step(&mut self) -> StepOutcome {
+        self.run_elastic_epochs();
         if self.pool.is_some() {
             self.process_due(self.now());
         }
@@ -653,6 +692,10 @@ impl Cluster {
                 self.advance_replica_to(i, t);
             }
             self.reap_finished();
+            // the batch arrival loop never calls `step()`, so elastic
+            // epochs that became due must fire here, before routing the
+            // arrival against the (possibly re-partitioned) groups
+            self.run_elastic_epochs();
             if !self.obs {
                 self.events.clear();
             }
@@ -685,6 +728,29 @@ impl Cluster {
         self.pool.as_ref().map(|p| p.snapshot())
     }
 
+    /// Elastic-controller state (`None` when the controller is off).
+    pub fn elastic_snapshot(&self) -> Option<ElasticSnapshot> {
+        self.elastic.as_ref().map(|c| c.snapshot(self.router.groups()))
+    }
+
+    /// Elastic control loop active?
+    pub fn elastic_enabled(&self) -> bool {
+        self.elastic.is_some()
+    }
+
+    /// The router's current (sand, pebble, rock) partition, if it keeps
+    /// one — test/diagnostic surface for repartition conservation.
+    pub fn router_groups(&self) -> Option<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+        let (s, p, r) = self.router.groups()?;
+        Some((s.to_vec(), p.to_vec(), r.to_vec()))
+    }
+
+    /// `(slots, busy, queued)` pool gauges for the controller's inputs.
+    fn pool_gauges(&self) -> Option<(usize, usize, usize)> {
+        let p = self.pool.as_ref()?;
+        Some((p.slot_count(), p.busy_slots(), p.queue_depth()))
+    }
+
     /// Merged report plus per-replica stats at this moment (reaps any
     /// not-yet-collected terminal state first).
     pub fn report(&mut self) -> ClusterReport {
@@ -696,6 +762,7 @@ impl Cluster {
             per_replica: self.replica_stats(),
             makespan: self.now(),
             pool: self.pool_snapshot(),
+            elastic: self.elastic_snapshot(),
         }
     }
 
@@ -754,12 +821,55 @@ impl Cluster {
     }
 
     /// Merge every replica's newly terminal outcomes into the cluster
-    /// report, reclaiming replica-side state.
+    /// report, reclaiming replica-side state. With the controller
+    /// attached, every partial report also feeds its TTFT-attainment
+    /// windows before merging.
     fn reap_finished(&mut self) {
         for r in &mut self.replicas {
             let part = r.take_finished();
             if part.total() > 0 {
+                if let Some(ctrl) = self.elastic.as_mut() {
+                    ctrl.on_finished(&part);
+                }
                 self.collected.merge(part);
+            }
+        }
+    }
+
+    /// Evaluate the elastic controller if a virtual-time epoch boundary
+    /// has been crossed, and apply whatever it decides: group
+    /// repartitions land on the router, pool resizes on the encoder
+    /// pool, drain starts only mark state (the router sees the draining
+    /// flag through [`Cluster::views`]). No-op with the controller off —
+    /// the gate every bit-identity proof leans on.
+    fn run_elastic_epochs(&mut self) {
+        let now = self.now();
+        match &self.elastic {
+            Some(ctrl) if ctrl.epoch_due(now) => {}
+            _ => return,
+        }
+        let probe = self.probe();
+        let mut occupancy = Vec::with_capacity(self.replicas.len());
+        for r in &self.replicas {
+            occupancy.push((r.active_requests(), r.kv().used_blocks()));
+        }
+        let groups = self.router_groups();
+        let pool = self.pool_gauges();
+        let inputs = elastic::EpochInputs { now, probe, occupancy: &occupancy, groups, pool };
+        let ctrl = self.elastic.as_mut().expect("elastic checked above");
+        let actions = ctrl.step_epoch(inputs);
+        for action in actions {
+            match action {
+                ElasticAction::StartDrain { .. } => {}
+                ElasticAction::Repartition { sand, pebble, rock } => {
+                    let applied = self.router.set_groups(sand, pebble, rock);
+                    debug_assert!(applied, "controller repartition refused by the router");
+                }
+                ElasticAction::ResizePool { target } => {
+                    if let Some(p) = self.pool.as_mut() {
+                        p.resize(target);
+                    }
+                }
             }
         }
     }

@@ -82,6 +82,12 @@ pub struct PoolStats {
     pub migrations: u64,
     pub migrated_mm_tokens: u64,
     pub migrated_bytes: u64,
+    /// Elastic resizes that grew the pool ([`EncoderPool::resize`]).
+    pub slot_grow_events: u64,
+    /// Elastic resizes that shrank the pool.
+    pub slot_shrink_events: u64,
+    /// Peak slot count ever held (== configured slots when static).
+    pub max_concurrent_slots: usize,
 }
 
 /// Point-in-time pool description embedded in the cluster report.
@@ -89,6 +95,11 @@ pub struct PoolStats {
 pub struct PoolSnapshot {
     pub slots: usize,
     pub rock_cap: usize,
+    /// Slot-resize accounting, mirrored from [`PoolStats`] so controller
+    /// actions are readable without digging into the stats blob.
+    pub slot_grow_events: u64,
+    pub slot_shrink_events: u64,
+    pub max_concurrent_slots: usize,
     pub stats: PoolStats,
 }
 
@@ -113,6 +124,8 @@ struct Slot {
 pub struct EncoderPool {
     profile: ModelProfile,
     slots: Vec<Slot>,
+    /// Decode replica count; new slots keep the `i % replicas` host cycle.
+    replicas: usize,
     rock_cap: usize,
     aging_deadline_s: f64,
     pebbles: VecDeque<Queued>,
@@ -138,14 +151,52 @@ impl EncoderPool {
             slots: (0..slots)
                 .map(|i| Slot { host: i % replicas, busy_until: 0.0, started: 0.0, current: None })
                 .collect(),
+            replicas,
             rock_cap: slots.div_ceil(2),
             aging_deadline_s,
             pebbles: VecDeque::new(),
             rocks: VecDeque::new(),
             rocks_in_flight: 0,
             clock: 0.0,
-            stats: PoolStats::default(),
+            stats: PoolStats { max_concurrent_slots: slots, ..PoolStats::default() },
         }
+    }
+
+    /// Resize the pool toward `target` slots (the elastic controller's
+    /// hook). Growth appends fresh slots continuing the `i % replicas`
+    /// host cycle and immediately admits queued work. Shrinking removes
+    /// trailing *idle* slots only — an in-flight encode is never killed —
+    /// and never lets the rock cap (⌈M/2⌉) fall below the rocks already
+    /// in flight; a blocked shrink stops early and the controller retries
+    /// next epoch. Returns the resulting slot count.
+    pub fn resize(&mut self, target: usize) -> usize {
+        let target = target.max(1);
+        let before = self.slots.len();
+        while self.slots.len() < target {
+            let i = self.slots.len();
+            self.slots.push(Slot {
+                host: i % self.replicas,
+                busy_until: 0.0,
+                started: 0.0,
+                current: None,
+            });
+        }
+        while self.slots.len() > target
+            && self.slots.last().is_some_and(|s| s.current.is_none())
+            && (self.slots.len() - 1).div_ceil(2) >= self.rocks_in_flight
+        {
+            self.slots.pop();
+        }
+        let after = self.slots.len();
+        self.rock_cap = after.div_ceil(2);
+        if after > before {
+            self.stats.slot_grow_events += 1;
+            self.stats.max_concurrent_slots = self.stats.max_concurrent_slots.max(after);
+            self.fill_slots();
+        } else if after < before {
+            self.stats.slot_shrink_events += 1;
+        }
+        after
     }
 
     pub fn slot_count(&self) -> usize {
@@ -293,6 +344,9 @@ impl EncoderPool {
         PoolSnapshot {
             slots: self.slots.len(),
             rock_cap: self.rock_cap,
+            slot_grow_events: self.stats.slot_grow_events,
+            slot_shrink_events: self.stats.slot_shrink_events,
+            max_concurrent_slots: self.stats.max_concurrent_slots,
             stats: self.stats.clone(),
         }
     }
@@ -557,5 +611,58 @@ mod tests {
         let p = EncoderPool::new(&by_name("llava-7b").unwrap(), 4, 3, 1.0);
         let hosts: Vec<usize> = p.slots.iter().map(|s| s.host).collect();
         assert_eq!(hosts, vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn resize_grows_admits_queued_work_and_keeps_host_cycle() {
+        let mut p = EncoderPool::new(&by_name("llava-7b").unwrap(), 1, 2, 1.0);
+        p.enqueue(image(0), 0.0); // takes the only slot
+        p.enqueue(image(1), 0.0); // queued
+        assert_eq!(p.queue_depth(), 1);
+        assert_eq!(p.resize(3), 3);
+        // growth admits the queued pebble immediately (work conservation)
+        assert_eq!(p.queue_depth(), 0);
+        assert_eq!(p.rock_cap(), 2);
+        let hosts: Vec<usize> = p.slots.iter().map(|s| s.host).collect();
+        assert_eq!(hosts, vec![0, 1, 0], "new slots continue the host cycle");
+        assert_eq!(p.stats.slot_grow_events, 1);
+        assert_eq!(p.stats.max_concurrent_slots, 3);
+        p.check_invariants().unwrap();
+        let snap = p.snapshot();
+        assert_eq!(snap.slot_grow_events, 1);
+        assert_eq!(snap.max_concurrent_slots, 3);
+    }
+
+    #[test]
+    fn resize_shrink_spares_busy_slots_and_rock_cap() {
+        let mut p = pool(4); // cap 2
+        p.enqueue(video(0), 0.0);
+        p.enqueue(video(1), 0.0);
+        assert_eq!(p.rocks_in_flight, 2);
+        // slots 0 and 1 are busy with rocks; shrinking to 1 must stop at
+        // 3 slots: cap ⌈3/2⌉ = 2 still covers both in-flight rocks, but
+        // ⌈2/2⌉ = 1 would not
+        assert_eq!(p.resize(1), 3);
+        assert_eq!(p.rock_cap(), 2);
+        assert_eq!(p.stats.slot_shrink_events, 1);
+        p.check_invariants().unwrap();
+        // drain, then the shrink completes
+        while p.pop_completion().is_some() {}
+        assert_eq!(p.resize(1), 1);
+        assert_eq!(p.rock_cap(), 1);
+        assert_eq!(p.stats.slot_shrink_events, 2);
+        assert_eq!(p.stats.max_concurrent_slots, 4, "peak is sticky");
+        p.check_invariants().unwrap();
+        // floor: a pool never shrinks to zero slots
+        assert_eq!(p.resize(0), 1);
+    }
+
+    #[test]
+    fn resize_noop_counts_nothing() {
+        let mut p = pool(2);
+        assert_eq!(p.resize(2), 2);
+        assert_eq!(p.stats.slot_grow_events, 0);
+        assert_eq!(p.stats.slot_shrink_events, 0);
+        assert_eq!(p.stats.max_concurrent_slots, 2);
     }
 }

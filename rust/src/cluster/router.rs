@@ -41,6 +41,11 @@ pub struct ReplicaView {
     pub running: usize,
     /// KV-cache block utilization in `[0, 1]`.
     pub kv_utilization: f64,
+    /// The elastic controller is draining this replica ahead of a group
+    /// flip: stop routing new work to it (it finishes what it owns).
+    /// Always `false` when the controller is off, so routing decisions
+    /// are bit-identical to the static router.
+    pub draining: bool,
 }
 
 /// Replica-selection policy. Implementations must be deterministic for a
@@ -75,6 +80,21 @@ pub trait Router: Send {
     /// Terminal notification (request finished or dropped) so stateful
     /// routers can retire ledger entries. Default: no-op.
     fn on_terminal(&mut self, _req_id: u64) {}
+
+    /// Current (sand, pebble, rock) replica groups for routers that
+    /// partition the fleet; `None` for group-free routers.
+    fn groups(&self) -> Option<(&[usize], &[usize], &[usize])> {
+        None
+    }
+
+    /// Elastic repartition hook: replace the modality groups wholesale.
+    /// Returns `false` (and changes nothing) for group-free routers or
+    /// when any group would be left empty — a modality must never become
+    /// unroutable.
+    fn set_groups(&mut self, sand: Vec<usize>, pebble: Vec<usize>, rock: Vec<usize>) -> bool {
+        let _ = (sand, pebble, rock);
+        false
+    }
 }
 
 /// Outstanding predicted work per replica, retired on terminal events.
@@ -243,20 +263,40 @@ impl Router for LeastWorkRouter {
     }
 }
 
-/// Split `n` replica ids into (sand, pebble, rock) groups. Small clusters
-/// share: 1 replica serves all three roles, 2 replicas give sand its own
-/// replica and fold pebbles into the rock replica. From 3 replicas on,
-/// groups are sized by *work* share rather than request share — videos
-/// are a minority of requests but the large majority of engine-seconds
-/// under multimodal mixes — so rocks take ~half the fleet, pebbles ~1/5,
-/// sand the rest; every group keeps at least one replica.
-pub fn partition_groups(n: usize) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+/// The static (sand, pebble, rock) work shares `partition_groups` has
+/// always used: rocks ~half the fleet, pebbles ~1/5, sand the rest.
+/// Videos are a minority of requests but the large majority of
+/// engine-seconds under multimodal mixes.
+pub const STATIC_SHARES: [f64; 3] = [0.3, 0.2, 0.5];
+
+/// Split `n` replica ids into (sand, pebble, rock) groups sized by an
+/// explicit (sand, pebble, rock) work-share vector. This is the one
+/// sizing function shared by the static partition router and the elastic
+/// controller. Small clusters share: 1 replica serves all three roles,
+/// 2 replicas give sand its own replica and fold pebbles into the rock
+/// replica. From 3 replicas on, rock and pebble sizes are
+/// `floor(n * share)` (normalized), each clamped so every group keeps at
+/// least one replica; sand takes the remainder. With [`STATIC_SHARES`]
+/// this reproduces the historical `n/2` / `n/5` splits exactly.
+pub fn partition_groups_with(
+    n: usize,
+    shares: [f64; 3],
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
     match n {
         0 | 1 => (vec![0], vec![0], vec![0]),
         2 => (vec![0], vec![1], vec![1]),
         _ => {
-            let rock_n = (n / 2).max(1);
-            let pebble_n = (n / 5).max(1);
+            let total: f64 = shares.iter().filter(|s| s.is_finite() && **s > 0.0).sum();
+            let frac = |s: f64| {
+                if total > 0.0 && s.is_finite() && s > 0.0 {
+                    s / total
+                } else {
+                    0.0
+                }
+            };
+            let rock_n = ((n as f64 * frac(shares[2])).floor() as usize).clamp(1, n - 2);
+            let pebble_n =
+                ((n as f64 * frac(shares[1])).floor() as usize).clamp(1, n - 1 - rock_n);
             let sand_n = n - rock_n - pebble_n;
             let sand = (0..sand_n).collect();
             let pebble = (sand_n..sand_n + pebble_n).collect();
@@ -264,6 +304,11 @@ pub fn partition_groups(n: usize) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
             (sand, pebble, rock)
         }
     }
+}
+
+/// [`partition_groups_with`] at the historical static shares.
+pub fn partition_groups(n: usize) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    partition_groups_with(n, STATIC_SHARES)
 }
 
 /// Rocks/pebbles/sand partitioning with elastic spillover (asymmetric by
@@ -311,20 +356,26 @@ impl ModalityPartitionRouter {
         prefer: Option<usize>,
     ) -> usize {
         // Candidate sets are tiny (≤ replicas); materializing keeps the
-        // argmin/preference logic in one place (WorkLedger).
-        let candidates: Vec<usize> = match req.modality {
+        // argmin/preference logic in one place (WorkLedger). A draining
+        // replica (elastic controller emptying it ahead of a group flip)
+        // takes no new work — in particular an idle-but-draining heavy
+        // replica must not be borrowed, or the drain never completes.
+        let open = |i: usize| !views[i].draining;
+        let idle = |i: usize| views[i].active == 0 && !views[i].draining;
+        let mut candidates: Vec<usize> = match req.modality {
             Modality::Text => {
                 // sand flows through its own group and may borrow any
                 // idle heavier replica
                 self.sand
                     .iter()
                     .copied()
+                    .filter(|&i| open(i))
                     .chain(
                         self.pebble
                             .iter()
                             .chain(self.rock.iter())
                             .copied()
-                            .filter(|&i| views[i].active == 0),
+                            .filter(|&i| idle(i)),
                     )
                     .collect()
             }
@@ -332,12 +383,24 @@ impl ModalityPartitionRouter {
                 .pebble
                 .iter()
                 .copied()
-                .chain(self.rock.iter().copied().filter(|&i| views[i].active == 0))
+                .filter(|&i| open(i))
+                .chain(self.rock.iter().copied().filter(|&i| idle(i)))
                 .collect(),
             // rocks may not displace sand: videos stay in the rock group
             // even when sand replicas are idle
-            Modality::Video => self.rock.clone(),
+            Modality::Video => self.rock.iter().copied().filter(|&i| open(i)).collect(),
         };
+        if candidates.is_empty() {
+            // every replica in the home group is draining — the
+            // controller never drains a group down to zero, but a routing
+            // decision must exist regardless, so fall back to the
+            // unfiltered home group rather than panic
+            candidates = match req.modality {
+                Modality::Text => self.sand.clone(),
+                Modality::Image => self.pebble.clone(),
+                Modality::Video => self.rock.clone(),
+            };
+        }
         let chosen = match prefer {
             Some(host) => self
                 .ledger
@@ -370,6 +433,20 @@ impl Router for ModalityPartitionRouter {
 
     fn on_terminal(&mut self, req_id: u64) {
         self.ledger.retire(req_id);
+    }
+
+    fn groups(&self) -> Option<(&[usize], &[usize], &[usize])> {
+        Some((&self.sand, &self.pebble, &self.rock))
+    }
+
+    fn set_groups(&mut self, sand: Vec<usize>, pebble: Vec<usize>, rock: Vec<usize>) -> bool {
+        if sand.is_empty() || pebble.is_empty() || rock.is_empty() {
+            return false;
+        }
+        self.sand = sand;
+        self.pebble = pebble;
+        self.rock = rock;
+        true
     }
 }
 
@@ -412,6 +489,7 @@ mod tests {
                 waiting: 0,
                 running: 0,
                 kv_utilization: 0.0,
+                draining: false,
             })
             .collect()
     }
@@ -455,6 +533,109 @@ mod tests {
         // shared small clusters
         assert_eq!(partition_groups(1), (vec![0], vec![0], vec![0]));
         assert_eq!(partition_groups(2), (vec![0], vec![1], vec![1]));
+    }
+
+    /// `partition_groups` is now a wrapper over the share-driven sizing
+    /// function; pin that the static shares reproduce the historical
+    /// `rock = (n/2).max(1)`, `pebble = (n/5).max(1)` splits exactly for
+    /// every fleet size that has ever shipped.
+    #[test]
+    fn static_shares_pin_the_historical_splits() {
+        for n in 1..=16usize {
+            let legacy = match n {
+                0 | 1 => (vec![0], vec![0], vec![0]),
+                2 => (vec![0], vec![1], vec![1]),
+                _ => {
+                    let rock_n = (n / 2).max(1);
+                    let pebble_n = (n / 5).max(1);
+                    let sand_n = n - rock_n - pebble_n;
+                    (
+                        (0..sand_n).collect::<Vec<_>>(),
+                        (sand_n..sand_n + pebble_n).collect::<Vec<_>>(),
+                        (sand_n + pebble_n..n).collect::<Vec<_>>(),
+                    )
+                }
+            };
+            assert_eq!(partition_groups(n), legacy, "n={n}");
+            assert_eq!(partition_groups_with(n, STATIC_SHARES), legacy, "n={n}");
+        }
+    }
+
+    /// The share-driven sizing stays total and well-formed for skewed and
+    /// hostile share vectors: disjoint cover, no empty group.
+    #[test]
+    fn share_driven_sizing_is_total_and_covers() {
+        let vectors = [
+            [0.8, 0.1, 0.1],
+            [0.1, 0.1, 0.8],
+            [0.0, 0.0, 1.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 0.0, 0.0],
+            [f64::NAN, 0.5, 0.5],
+        ];
+        for shares in vectors {
+            for n in 3..=16usize {
+                let (sand, pebble, rock) = partition_groups_with(n, shares);
+                assert!(
+                    !sand.is_empty() && !pebble.is_empty() && !rock.is_empty(),
+                    "n={n} shares={shares:?}"
+                );
+                let mut all: Vec<usize> =
+                    sand.iter().chain(&pebble).chain(&rock).copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n} shares={shares:?}");
+            }
+        }
+        // a sand-heavy vector actually moves replicas out of the rock group
+        let (sand, _, rock) = partition_groups_with(8, [0.8, 0.1, 0.1]);
+        let (s0, _, r0) = partition_groups(8);
+        assert!(sand.len() > s0.len() && rock.len() < r0.len());
+    }
+
+    /// `set_groups` swaps the partition wholesale; empty groups and
+    /// group-free routers refuse.
+    #[test]
+    fn set_groups_repartitions_and_refuses_empty() {
+        let mut r = ModalityPartitionRouter::new(estimator(), 4);
+        let (sand, pebble, rock) =
+            r.groups().map(|(s, p, k)| (s.to_vec(), p.to_vec(), k.to_vec())).unwrap();
+        assert_eq!((sand, pebble, rock), partition_groups(4));
+        assert!(r.set_groups(vec![0, 1], vec![2], vec![3]));
+        let v = views(4);
+        // replica 3 is now the whole rock group
+        for i in 0..4 {
+            assert_eq!(r.route(&req(i, Modality::Video), &v), 3);
+        }
+        // an empty group is refused and the partition is untouched
+        assert!(!r.set_groups(vec![0, 1, 2, 3], vec![], vec![]));
+        assert_eq!(r.groups().unwrap().2, &[3]);
+        // group-free routers refuse by default
+        let mut rr = RoundRobinRouter::new();
+        assert!(rr.groups().is_none());
+        assert!(!rr.set_groups(vec![0], vec![0], vec![0]));
+    }
+
+    /// A draining replica takes no new work: not as a home-group member,
+    /// and — the subtle one — not as an idle borrowable heavy replica.
+    #[test]
+    fn draining_replicas_are_not_routed_to() {
+        let mut r = ModalityPartitionRouter::new(estimator(), 2); // sand=[0], rock=[1]
+        let mut v = views(2);
+        v[1].draining = true;
+        // replica 1 is idle (active == 0) but draining: sand must not
+        // borrow it, no matter how loaded the sand replica gets
+        for i in 0..6 {
+            assert_eq!(r.route(&req(i, Modality::Text), &v), 0, "borrowed a draining replica");
+        }
+        // once the drain flag clears, borrowing resumes
+        v[1].draining = false;
+        assert_eq!(r.route(&req(6, Modality::Text), &v), 1);
+
+        // a fully-draining home group still routes (defensive fallback)
+        let mut v2 = views(2);
+        v2[1].draining = true;
+        let pick = r.route(&req(7, Modality::Video), &v2);
+        assert_eq!(pick, 1, "sole rock replica must still take videos while draining");
     }
 
     #[test]

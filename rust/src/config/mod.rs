@@ -161,6 +161,54 @@ impl Default for PoolConfig {
     }
 }
 
+/// Elastic control-plane knobs (the `[elastic]` TOML section; see
+/// `crate::cluster::elastic`). Disabled by default: every elastic code
+/// path is gated on `enabled`, keeping the cluster bit-identical to the
+/// static partition router when off (proven in
+/// `tests/elastic_properties.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticConfig {
+    /// Run the controller (`--elastic`). Requires the
+    /// modality-partition router, whose groups it re-partitions.
+    pub enabled: bool,
+    /// Controller evaluation period in virtual seconds
+    /// (`--elastic-epoch`).
+    pub epoch_s: f64,
+    /// Dead band in replicas: a group's demand-driven target must
+    /// deviate from its current size by more than this before a move
+    /// starts (`--elastic-hysteresis`). Group sizes are integers, so a
+    /// value >= 1 freezes re-partitioning entirely while keeping pool
+    /// elasticity; the band is halved while any SLO class misses
+    /// `attainment_floor`.
+    pub hysteresis: f64,
+    /// Controller epochs to stay quiet after a completed group flip or
+    /// a pool resize (`--elastic-cooldown`).
+    pub cooldown_epochs: u32,
+    /// Encoder-pool slot floor under elastic shrink
+    /// (`--elastic-slots-min`).
+    pub slots_min: usize,
+    /// Encoder-pool slot ceiling under elastic grow
+    /// (`--elastic-slots-max`).
+    pub slots_max: usize,
+    /// Rolling TTFT-attainment floor per SLO class; dipping below it
+    /// marks SLO pressure (faster controller reaction).
+    pub attainment_floor: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            enabled: false,
+            epoch_s: 5.0,
+            hysteresis: 0.25,
+            cooldown_epochs: 2,
+            slots_min: 1,
+            slots_max: 8,
+            attainment_floor: 0.9,
+        }
+    }
+}
+
 /// Observability knobs (the `[obs]` TOML section; see [`crate::obs`]).
 /// All off by default: with no field set, no observer is attached and
 /// backend behavior (events, reports, stats) is bit-identical to a
@@ -290,6 +338,7 @@ pub struct ServeConfig {
     pub regulator: RegulatorConfig,
     pub cluster: ClusterConfig,
     pub pool: PoolConfig,
+    pub elastic: ElasticConfig,
     pub server: ServerConfig,
     pub obs: ObsConfig,
 }
@@ -310,6 +359,7 @@ impl Default for ServeConfig {
             regulator: RegulatorConfig::default(),
             cluster: ClusterConfig::default(),
             pool: PoolConfig::default(),
+            elastic: ElasticConfig::default(),
             server: ServerConfig::default(),
             obs: ObsConfig::default(),
         }
@@ -349,7 +399,7 @@ impl ServeConfig {
         let known_prefixes = [
             "model", "mix", "rate", "num_requests", "seed", "policy", "slo_scale",
             "memory_frac", "workload.", "scheduler.", "regulator.", "cluster.", "pool.",
-            "server.", "obs.",
+            "elastic.", "server.", "obs.",
         ];
         for key in doc.values.keys() {
             let known = known_prefixes.iter().any(|p| {
@@ -500,6 +550,30 @@ impl ServeConfig {
         if let Some(v) = doc.get_f64("pool.late_bind_epsilon_s") {
             self.pool.late_bind_epsilon_s = v;
         }
+        if let Some(v) = doc.get_bool("elastic.enabled") {
+            self.elastic.enabled = v;
+        }
+        if let Some(v) = doc.get_f64("elastic.epoch_s") {
+            self.elastic.epoch_s = v;
+        }
+        if let Some(v) = doc.get_f64("elastic.hysteresis") {
+            self.elastic.hysteresis = v;
+        }
+        if let Some(v) = doc.get_i64("elastic.cooldown_epochs") {
+            if !(0..=u32::MAX as i64).contains(&v) {
+                return Err(ConfigError("elastic.cooldown_epochs must be >= 0".into()));
+            }
+            self.elastic.cooldown_epochs = v as u32;
+        }
+        if let Some(v) = doc.get_i64("elastic.slots_min") {
+            self.elastic.slots_min = v as usize;
+        }
+        if let Some(v) = doc.get_i64("elastic.slots_max") {
+            self.elastic.slots_max = v as usize;
+        }
+        if let Some(v) = doc.get_f64("elastic.attainment_floor") {
+            self.elastic.attainment_floor = v;
+        }
         if let Some(v) = doc.get_i64("server.admission_limit") {
             if v < 0 {
                 return Err(ConfigError("server.admission_limit must be >= 0 (0 = off)".into()));
@@ -627,6 +701,19 @@ impl ServeConfig {
             args.get_f64("migration-cost", self.pool.migration_cost_s_per_ktok).map_err(e)?;
         self.pool.late_bind_epsilon_s =
             args.get_f64("late-bind-epsilon", self.pool.late_bind_epsilon_s).map_err(e)?;
+        if args.has_flag("elastic") {
+            self.elastic.enabled = true;
+        }
+        self.elastic.epoch_s = args.get_f64("elastic-epoch", self.elastic.epoch_s).map_err(e)?;
+        self.elastic.hysteresis =
+            args.get_f64("elastic-hysteresis", self.elastic.hysteresis).map_err(e)?;
+        self.elastic.cooldown_epochs = args
+            .get_usize("elastic-cooldown", self.elastic.cooldown_epochs as usize)
+            .map_err(e)? as u32;
+        self.elastic.slots_min =
+            args.get_usize("elastic-slots-min", self.elastic.slots_min).map_err(e)?;
+        self.elastic.slots_max =
+            args.get_usize("elastic-slots-max", self.elastic.slots_max).map_err(e)?;
         self.server.admission_limit =
             args.get_usize("admission-limit", self.server.admission_limit).map_err(e)?;
         if args.has_flag("obs") {
@@ -693,6 +780,31 @@ impl ServeConfig {
         }
         if !self.pool.late_bind_epsilon_s.is_finite() || self.pool.late_bind_epsilon_s < 0.0 {
             return Err(ConfigError("pool.late_bind_epsilon_s must be finite and >= 0".into()));
+        }
+        if self.elastic.enabled {
+            if self.cluster.router != "modality-partition" {
+                return Err(ConfigError(format!(
+                    "elastic.enabled requires cluster.router = \"modality-partition\" \
+                     (the controller re-partitions its groups), got '{}'",
+                    self.cluster.router
+                )));
+            }
+            if !self.elastic.epoch_s.is_finite() || self.elastic.epoch_s <= 0.0 {
+                return Err(ConfigError("elastic.epoch_s must be finite and > 0".into()));
+            }
+            if !self.elastic.hysteresis.is_finite() || self.elastic.hysteresis < 0.0 {
+                return Err(ConfigError("elastic.hysteresis must be finite and >= 0".into()));
+            }
+            if self.elastic.slots_min == 0 || self.elastic.slots_max > 256 {
+                return Err(ConfigError("elastic slot bounds must be in 1..=256".into()));
+            }
+            if self.elastic.slots_max < self.elastic.slots_min {
+                return Err(ConfigError("elastic.slots_max must be >= elastic.slots_min".into()));
+            }
+            let floor = self.elastic.attainment_floor;
+            if !floor.is_finite() || !(0.0..=1.0).contains(&floor) {
+                return Err(ConfigError("elastic.attainment_floor must be in [0, 1]".into()));
+            }
         }
         Ok(())
     }
@@ -905,6 +1017,63 @@ migration_cost_s_per_ktok = 0.004
         assert!(c.apply_doc(&Doc::parse("[pool]\naging_deadline_s = -0.1").unwrap()).is_err());
         let mut c = ServeConfig::default();
         assert!(c.apply_doc(&Doc::parse("[pool]\nlate_bind_epsilon_s = -0.5").unwrap()).is_err());
+    }
+
+    #[test]
+    fn elastic_section_parses_and_validates() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.elastic, ElasticConfig::default());
+        assert!(!c.elastic.enabled, "the controller must be opt-in");
+        let doc = Doc::parse(
+            r#"
+[cluster]
+replicas = 4
+router = "modality-partition"
+[elastic]
+enabled = true
+epoch_s = 2.5
+hysteresis = 0.5
+cooldown_epochs = 3
+slots_min = 2
+slots_max = 12
+attainment_floor = 0.8
+"#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.elastic.enabled);
+        assert_eq!(c.elastic.epoch_s, 2.5);
+        assert_eq!(c.elastic.hysteresis, 0.5);
+        assert_eq!(c.elastic.cooldown_epochs, 3);
+        assert_eq!(c.elastic.slots_min, 2);
+        assert_eq!(c.elastic.slots_max, 12);
+        assert_eq!(c.elastic.attainment_floor, 0.8);
+    }
+
+    #[test]
+    fn elastic_section_rejects_bad_values() {
+        // enabling without the modality-partition router is an error —
+        // the controller has no groups to re-partition
+        let mut c = ServeConfig::default();
+        assert!(c.apply_doc(&Doc::parse("[elastic]\nenabled = true").unwrap()).is_err());
+        for bad in [
+            "[elastic]\nenabled = true\nepoch_s = 0.0",
+            "[elastic]\nenabled = true\nepoch_s = -1.0",
+            "[elastic]\nenabled = true\nhysteresis = -0.1",
+            "[elastic]\nenabled = true\ncooldown_epochs = -1",
+            "[elastic]\nenabled = true\nslots_min = 0",
+            "[elastic]\nenabled = true\nslots_min = 4\nslots_max = 2",
+            "[elastic]\nenabled = true\nattainment_floor = 1.5",
+        ] {
+            let with_router = format!("[cluster]\nrouter = \"modality-partition\"\n{bad}");
+            let mut c = ServeConfig::default();
+            let doc = Doc::parse(&with_router).unwrap();
+            assert!(c.apply_doc(&doc).is_err(), "accepted: {bad}");
+        }
+        // knobs without `enabled` never fail validation (inert)
+        let mut c = ServeConfig::default();
+        c.apply_doc(&Doc::parse("[elastic]\nepoch_s = -5.0").unwrap()).unwrap();
+        assert!(!c.elastic.enabled);
     }
 
     #[test]

@@ -58,6 +58,12 @@ fn parser() -> Parser {
             "late-bind-epsilon",
             "prefer the encode slot's host on handoff within this ledger gap, s (0 = off)",
         )
+        .flag("elastic", "elastic control plane: re-partition groups + resize pool slots per epoch")
+        .option("elastic-epoch", "controller evaluation period, virtual seconds")
+        .option("elastic-hysteresis", "dead band in replicas before a group move starts")
+        .option("elastic-cooldown", "controller epochs to stay quiet after an action")
+        .option("elastic-slots-min", "encoder-pool slot floor under elastic shrink")
+        .option("elastic-slots-max", "encoder-pool slot ceiling under elastic grow")
         .option("admission-limit", "max outstanding requests before the server rejects (0 = off)")
         .flag("obs", "record lifecycle spans and per-epoch telemetry (deterministic, virtual-time)")
         .option("trace-out", "write a Chrome/Perfetto trace_event JSON file (implies --obs)")
@@ -137,12 +143,17 @@ fn cmd_simulate(cfg: &ServeConfig) {
     }
     let mut backend = tcm_serve::backend::build(cfg);
     println!(
-        "backend: {} (replicas={} router={} encode_overlap={} encoder_pool={})",
+        "backend: {} (replicas={} router={} encode_overlap={} encoder_pool={} elastic={})",
         backend.name(),
         cfg.cluster.replicas,
         cfg.cluster.router,
         cfg.cluster.encode_overlap,
-        if cfg.pool.enabled { format!("{} slots", cfg.pool.slots) } else { "off".into() }
+        if cfg.pool.enabled { format!("{} slots", cfg.pool.slots) } else { "off".into() },
+        if cfg.elastic.enabled {
+            format!("epoch {}s", cfg.elastic.epoch_s)
+        } else {
+            "off".into()
+        }
     );
     let profile = tcm_serve::model::by_name(&cfg.model).unwrap();
     let trace = experiments::make_trace(cfg, &profile);

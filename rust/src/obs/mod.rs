@@ -66,6 +66,9 @@ pub struct Probe {
     pub pool_total_slots: u32,
     pub pool_queue_depth: u32,
     pub pool_aged_promotions: u64,
+    /// Current (sand, pebble, rock) replica-group sizes; all zero when
+    /// the backend's router keeps no modality partition.
+    pub group_sizes: [u32; 3],
 }
 
 /// Decorator that observes any [`ServeBackend`] without changing its

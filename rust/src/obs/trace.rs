@@ -162,8 +162,27 @@ pub fn trace_json(spans: &[RequestSpans], samples: &[Probe]) -> String {
             3,
             "encoder_pool",
             p.t,
-            &[("busy", p.pool_busy_slots as f64), ("queued", p.pool_queue_depth as f64)],
+            &[
+                ("busy", p.pool_busy_slots as f64),
+                ("queued", p.pool_queue_depth as f64),
+                ("total", p.pool_total_slots as f64),
+            ],
         );
+        // replica-group sizes (elastic control plane); omitted entirely
+        // for backends without a modality partition so their traces are
+        // unchanged
+        if p.group_sizes.iter().any(|&g| g > 0) {
+            w.counter(
+                3,
+                "groups",
+                p.t,
+                &[
+                    ("sand", p.group_sizes[0] as f64),
+                    ("pebble", p.group_sizes[1] as f64),
+                    ("rock", p.group_sizes[2] as f64),
+                ],
+            );
+        }
     }
 
     w.finish()

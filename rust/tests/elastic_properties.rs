@@ -1,0 +1,317 @@
+//! Property-test sweep for the elastic control plane: random seeds ×
+//! replica counts × epochs × hysteresis bands × pool modes on the
+//! modality-partition router, with the controller's safety contract
+//! asserted from the outside:
+//!
+//! * re-partition conservation — after every step the (sand, pebble,
+//!   rock) groups are a disjoint cover of the fleet with no group ever
+//!   empty, no matter how many moves the controller made;
+//! * `finished + failed + cancelled == submitted` across reassignments —
+//!   drain-then-reassign loses no request and double-owns none;
+//! * zero occupancy at the flip — a draining replica changes groups only
+//!   once it holds no active requests and no KV blocks
+//!   (`max_active_at_flip == 0`, `max_kv_at_flip == 0`);
+//! * elastic-off inertness — with `enabled = false` every other
+//!   `[elastic]` knob is dead weight: the event stream, outcomes, and
+//!   makespan are bit-identical to the static partition cluster with the
+//!   default `[elastic]` section;
+//! * reruns are bit-deterministic (controller decisions are a pure
+//!   function of virtual time).
+//!
+//! CI runs this suite in the `property-tests` job over a fixed 3-seed
+//! matrix (`ELASTIC_PROPTEST_SEED=1|2|3` selects one seed; unset runs
+//! all three).
+
+use tcm_serve::cluster::{Cluster, ClusterReport};
+use tcm_serve::config::{ElasticConfig, ServeConfig};
+use tcm_serve::coordinator::{RequestEvent, StepOutcome};
+use tcm_serve::experiments::make_trace;
+use tcm_serve::request::Request;
+use tcm_serve::util::proptest_lite as pt;
+
+/// The fixed seed matrix (one CI job per entry).
+const SEED_MATRIX: [u64; 3] = [0xE1A5_71C0_0001, 0xE1A5_71C0_0002, 0xE1A5_71C0_0003];
+
+fn random_elastic_cfg(g: &mut pt::Gen) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = (*g.pick(&["fcfs", "tcm"])).into();
+    cfg.mix = (*g.pick(&["T0", "ML", "MH", "VH"])).into();
+    cfg.rate = g.f64_in(1.0, 4.0).max(0.5);
+    cfg.seed = g.rng.next_u64();
+    cfg.num_requests = g.usize_in(10, 40).max(5);
+    cfg.memory_frac = *g.pick(&[1.0, 0.25]);
+    // >= 3 replicas so the static split is a *disjoint* partition (the
+    // 2-replica split shares the non-sand replica by design) and the
+    // controller has room to move one
+    cfg.cluster.replicas = g.usize_in(3, 6).max(3);
+    cfg.cluster.router = "modality-partition".into();
+    cfg.pool.enabled = g.rng.bool(0.5);
+    cfg.pool.slots = g.usize_in(1, 4).max(1);
+    cfg.elastic.enabled = true;
+    cfg.elastic.epoch_s = *g.pick(&[0.5, 1.0, 3.0]);
+    cfg.elastic.hysteresis = *g.pick(&[0.0, 0.25, 0.75]);
+    cfg.elastic.cooldown_epochs = g.usize_in(0, 2) as u32;
+    cfg.elastic.slots_min = 1;
+    cfg.elastic.slots_max = *g.pick(&[2, 6]);
+    cfg.elastic.attainment_floor = *g.pick(&[0.5, 0.9]);
+    cfg
+}
+
+/// The groups must be a disjoint cover of `0..n` with no group empty —
+/// the repartition-conservation invariant, checked after every step.
+fn check_partition(cluster: &Cluster, n: usize) -> Result<(), String> {
+    let (sand, pebble, rock) = cluster
+        .router_groups()
+        .ok_or_else(|| "modality-partition router lost its groups".to_string())?;
+    let mut all: Vec<usize> = Vec::with_capacity(n);
+    all.extend(&sand);
+    all.extend(&pebble);
+    all.extend(&rock);
+    all.sort_unstable();
+    if all != (0..n).collect::<Vec<_>>() {
+        return Err(format!(
+            "groups are not a disjoint cover of 0..{n}: \
+             sand {sand:?} pebble {pebble:?} rock {rock:?}"
+        ));
+    }
+    if sand.is_empty() || pebble.is_empty() || rock.is_empty() {
+        return Err(format!("empty group: sand {sand:?} pebble {pebble:?} rock {rock:?}"));
+    }
+    Ok(())
+}
+
+/// Drive a cluster step by step, checking the partition invariant on
+/// every step and structural invariants periodically; returns the final
+/// report alongside the full event stream (for bit-identity checks).
+fn run_stepped(
+    cfg: &ServeConfig,
+    trace: Vec<Request>,
+) -> Result<(ClusterReport, Vec<RequestEvent>), String> {
+    let mut cluster = Cluster::new(cfg);
+    let n = cluster.replica_count();
+    for req in trace {
+        cluster.inject(req);
+    }
+    let mut events = Vec::new();
+    let mut steps = 0u64;
+    loop {
+        let out = cluster.step();
+        events.extend(cluster.take_events());
+        match out {
+            StepOutcome::Executed { .. } => {}
+            StepOutcome::Idle { next_event } => cluster.advance_to(next_event),
+            StepOutcome::Blocked { next_event: Some(t) } => cluster.advance_to(t),
+            StepOutcome::Blocked { next_event: None } => cluster.drop_blocked(),
+            StepOutcome::Drained => break,
+        }
+        check_partition(&cluster, n).map_err(|e| format!("step {steps}: {e}"))?;
+        if steps % 32 == 0 {
+            cluster.check_invariants().map_err(|e| format!("step {steps}: {e}"))?;
+        }
+        steps += 1;
+        if steps >= 5_000_000 {
+            return Err("stepping did not drain".into());
+        }
+    }
+    events.extend(cluster.take_events());
+    cluster.check_invariants().map_err(|e| format!("at drain: {e}"))?;
+    check_partition(&cluster, n).map_err(|e| format!("at drain: {e}"))?;
+    Ok((cluster.report(), events))
+}
+
+fn check_case(g: &mut pt::Gen) -> Result<(), String> {
+    let cfg = random_elastic_cfg(g);
+    let profile = tcm_serve::model::by_name(&cfg.model).expect("default model");
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+    let label = format!(
+        "{}/{}/r{}/epoch{}/pool={}",
+        cfg.policy, cfg.mix, cfg.cluster.replicas, cfg.elastic.epoch_s, cfg.pool.enabled
+    );
+
+    let (cr, _) = run_stepped(&cfg, trace.clone())?;
+
+    // conservation across reassignments: every submitted request reaches
+    // exactly one terminal outcome
+    if cr.report.total() != n {
+        return Err(format!("{label}: {} outcomes for {n} submitted", cr.report.total()));
+    }
+    let e = cr.elastic.as_ref().ok_or_else(|| format!("{label}: elastic snapshot missing"))?;
+    // drain-then-reassign: a replica changes groups only once empty
+    if e.stats.max_active_at_flip != 0 || e.stats.max_kv_at_flip != 0 {
+        return Err(format!(
+            "{label}: replica flipped groups with {} active requests / {} KV blocks",
+            e.stats.max_active_at_flip, e.stats.max_kv_at_flip
+        ));
+    }
+    if e.stats.repartitions > e.stats.drains_started {
+        return Err(format!(
+            "{label}: {} repartitions from {} started drains",
+            e.stats.repartitions, e.stats.drains_started
+        ));
+    }
+    if cfg.pool.enabled {
+        let p = cr.pool.as_ref().ok_or_else(|| format!("{label}: pool snapshot missing"))?;
+        if p.slots == 0 {
+            return Err(format!("{label}: pool shrank to zero slots"));
+        }
+        if p.max_concurrent_slots < p.slots.max(cfg.pool.slots) {
+            return Err(format!(
+                "{label}: peak {} slots below current {} / configured {}",
+                p.max_concurrent_slots, p.slots, cfg.pool.slots
+            ));
+        }
+        if p.slot_grow_events == 0 && p.max_concurrent_slots != cfg.pool.slots {
+            return Err(format!(
+                "{label}: peak {} slots without a grow event",
+                p.max_concurrent_slots
+            ));
+        }
+    }
+
+    // determinism: the identical config and trace reproduce bit-for-bit,
+    // controller decisions included
+    let (cr2, _) = run_stepped(&cfg, trace)?;
+    if cr2.makespan.to_bits() != cr.makespan.to_bits() {
+        return Err(format!("{label}: makespan diverged between identical runs"));
+    }
+    if cr2.report.outcomes.len() != cr.report.outcomes.len() {
+        return Err(format!("{label}: outcome counts diverged"));
+    }
+    for (x, y) in cr.report.outcomes.iter().zip(&cr2.report.outcomes) {
+        if x.id != y.id
+            || x.first_token.to_bits() != y.first_token.to_bits()
+            || x.finish.to_bits() != y.finish.to_bits()
+        {
+            return Err(format!("{label}: req {} diverged between identical runs", x.id));
+        }
+    }
+    let e2 = cr2.elastic.as_ref().ok_or_else(|| format!("{label}: rerun snapshot missing"))?;
+    if e2.stats != e.stats {
+        return Err(format!("{label}: controller stats diverged: {:?} vs {:?}", e.stats, e2.stats));
+    }
+    if e2.sand != e.sand || e2.pebble != e.pebble || e2.rock != e.rock {
+        return Err(format!("{label}: final groups diverged between identical runs"));
+    }
+    Ok(())
+}
+
+/// With `enabled = false`, every other `[elastic]` knob must be inert:
+/// the run is bit-identical — event stream, outcomes, makespan — to the
+/// static modality-partition cluster carrying the default `[elastic]`
+/// section, and no elastic snapshot is reported.
+fn check_elastic_off_inert(g: &mut pt::Gen) -> Result<(), String> {
+    let mut cfg = random_elastic_cfg(g);
+    cfg.elastic.enabled = false;
+    let mut baseline = cfg.clone();
+    baseline.elastic = ElasticConfig::default();
+    let profile = tcm_serve::model::by_name(&cfg.model).expect("default model");
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+    let label = format!("off/{}/{}/r{}", cfg.policy, cfg.mix, cfg.cluster.replicas);
+
+    let (cr, events) = run_stepped(&cfg, trace.clone())?;
+    let (crb, events_b) = run_stepped(&baseline, trace)?;
+
+    if cr.elastic.is_some() || crb.elastic.is_some() {
+        return Err(format!("{label}: elastic snapshot present with the controller off"));
+    }
+    if cr.report.total() != n {
+        return Err(format!("{label}: {} outcomes for {n} submitted", cr.report.total()));
+    }
+    if events != events_b {
+        return Err(format!(
+            "{label}: event streams diverged ({} vs {} events)",
+            events.len(),
+            events_b.len()
+        ));
+    }
+    if cr.makespan.to_bits() != crb.makespan.to_bits() {
+        return Err(format!("{label}: makespan diverged from the static cluster"));
+    }
+    if cr.report.outcomes.len() != crb.report.outcomes.len() {
+        return Err(format!("{label}: outcome counts diverged from the static cluster"));
+    }
+    for (x, y) in cr.report.outcomes.iter().zip(&crb.report.outcomes) {
+        if x.id != y.id
+            || x.first_token.to_bits() != y.first_token.to_bits()
+            || x.finish.to_bits() != y.finish.to_bits()
+        {
+            return Err(format!("{label}: req {} diverged from the static cluster", x.id));
+        }
+    }
+    Ok(())
+}
+
+fn seeds_to_run() -> Vec<u64> {
+    match std::env::var("ELASTIC_PROPTEST_SEED") {
+        Ok(v) => {
+            let i: usize = v.parse().unwrap_or_else(|_| {
+                panic!("ELASTIC_PROPTEST_SEED must be 1..={}, got {v:?}", SEED_MATRIX.len())
+            });
+            assert!(
+                (1..=SEED_MATRIX.len()).contains(&i),
+                "ELASTIC_PROPTEST_SEED must be 1..={}, got {i}",
+                SEED_MATRIX.len()
+            );
+            vec![SEED_MATRIX[i - 1]]
+        }
+        Err(_) => SEED_MATRIX.to_vec(),
+    }
+}
+
+#[test]
+fn elastic_conservation_and_determinism_sweep() {
+    for seed in seeds_to_run() {
+        pt::run_seeded(seed, 10, check_case);
+    }
+}
+
+#[test]
+fn elastic_off_is_bit_identical_to_static() {
+    for seed in seeds_to_run() {
+        pt::run_seeded(seed ^ 0x0FF, 6, check_elastic_off_inert);
+    }
+}
+
+/// A pure-text flood against the default 1/1/2 split of four replicas:
+/// all-text demand targets a 2/1/1 split, so the controller must drain a
+/// rock and hand it to sand — with the drained replica empty at the
+/// flip. Drives the batch runner, whose arrival loop is a distinct
+/// epoch-hook path from the stepping sweep above.
+#[test]
+fn text_flood_repartitions_toward_sand() {
+    let mut cfg = ServeConfig::default();
+    cfg.mix = "T0".into();
+    cfg.rate = 6.0;
+    cfg.seed = 11;
+    cfg.num_requests = 120;
+    cfg.cluster.replicas = 4;
+    cfg.cluster.router = "modality-partition".into();
+    cfg.elastic.enabled = true;
+    cfg.elastic.epoch_s = 1.0;
+    cfg.elastic.hysteresis = 0.0;
+    cfg.elastic.cooldown_epochs = 0;
+    let profile = tcm_serve::model::by_name(&cfg.model).expect("default model");
+    let trace = make_trace(&cfg, &profile);
+    let n = trace.len();
+
+    let mut cluster = Cluster::new(&cfg);
+    let cr = cluster.run(trace.clone());
+    assert_eq!(cr.report.total(), n, "requests lost across reassignment");
+    check_partition(&cluster, 4).unwrap();
+    let e = cr.elastic.as_ref().expect("controller attached");
+    assert!(e.stats.epochs >= 1, "no epochs evaluated over a {}s run", cr.makespan);
+    assert!(e.stats.repartitions >= 1, "text flood never repartitioned: {:?}", e.stats);
+    assert!(e.stats.drains_started >= e.stats.repartitions);
+    assert_eq!(e.stats.max_active_at_flip, 0, "replica flipped groups while occupied");
+    assert_eq!(e.stats.max_kv_at_flip, 0, "replica flipped groups holding KV blocks");
+    assert!(e.sand.len() >= 2, "sand never grew: {:?}/{:?}/{:?}", e.sand, e.pebble, e.rock);
+
+    // the batch driver's elastic decisions are bit-deterministic too
+    let cr2 = Cluster::new(&cfg).run(trace);
+    assert_eq!(cr.makespan.to_bits(), cr2.makespan.to_bits());
+    let e2 = cr2.elastic.as_ref().expect("controller attached");
+    assert_eq!(e.stats, e2.stats);
+    assert_eq!((&e.sand, &e.pebble, &e.rock), (&e2.sand, &e2.pebble, &e2.rock));
+}
